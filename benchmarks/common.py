@@ -1,0 +1,68 @@
+"""Shared benchmark utilities: analytic attention-cost model + result IO.
+
+The FLOP model follows the paper's accounting (Table 1 / Sec. 1):
+  full attention      C_full  = 4 N^2 d            per head
+  sparse branch       C_s     = (1 - s) * 4 N^2 d
+  linear branch       C_l     = 4 N d^2  (+ 2 N d^2 for the q side)
+  router              C_r     = 2 (N/b_q)(N/b_k) d + 2 N d^2 / (b pooling)
+so 97% block sparsity => ~96.7% of the compute removed once the linear
+branch is charged (paper: "97% sparsity corresponds to about 96.7%
+computation savings").
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/benchmarks")
+
+
+def attention_flops(n: int, d: int, *, sparsity: float = 0.0,
+                    method: str = "full", block_q: int = 128,
+                    block_k: int = 64, quant_speed: float = 1.0) -> float:
+    """Per-head forward cost in FLOPs (MXU-equivalent; quant_speed > 1
+    divides the sparse-branch cost to model the INT8 MXU path)."""
+    c_full = 4.0 * n * n * d
+    if method == "full":
+        return c_full
+    c_sparse = (1.0 - sparsity) * c_full / quant_speed
+    c_router = 2.0 * (n / block_q) * (n / block_k) * d
+    if method in ("vsa", "vmoba", "sparse_only"):
+        return c_sparse + c_router
+    # sla / sla2: + linear branch (k^T v states, q side, normaliser)
+    c_linear = 6.0 * n * d * d
+    return c_sparse + c_linear + c_router
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """Median wall time of a jitted call (CPU proxy numbers)."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def save_result(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def markdown_table(rows: list[dict], cols: list[str]) -> str:
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "---|" * len(cols)]
+    for r in rows:
+        lines.append("| " + " | ".join(str(r.get(c, "")) for c in cols)
+                     + " |")
+    return "\n".join(lines)

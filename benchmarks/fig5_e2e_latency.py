@@ -1,0 +1,66 @@
+"""Figure 5 reproduction: end-to-end generation latency vs sparsity.
+
+Latency model on one TPU v5e chip (same roofline pieces as fig4):
+    T_e2e = steps x (T_attention(s) + T_rest)
+T_rest (FFN/projections/norms) comes from the DiT geometry and does NOT
+shrink with attention sparsity — exactly the paper's Amdahl story: a 13.9x
+attention speedup becomes ~2.3x end-to-end on Wan-1.3B (Fig. 5a) and more
+on Wan-14B where attention dominates (4.35x, Fig. 5b).
+"""
+from __future__ import annotations
+
+from benchmarks.common import markdown_table, save_result
+from benchmarks.fig4_kernel_speed import modeled_time
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+MODELS = {
+    # name: (N tokens, d_model, heads, head_dim, d_ff, layers, steps)
+    "wan_1.3b_480p": (32768, 1536, 12, 128, 8960, 30, 50),
+    "wan_14b_720p": (75600, 5120, 40, 128, 13824, 40, 50),
+}
+
+
+def rest_time(n, d_model, d_ff, layers) -> float:
+    """Non-attention per-step time: qkvo projections + FFN (gelu, ungated
+    uses 2 mats; Wan uses ~3x d_ff) + norms, roofline max per op."""
+    flops = layers * n * (2 * 4 * d_model * d_model      # qkvo
+                          + 2 * 2 * d_model * d_ff       # ffn
+                          + 2 * 4 * d_model * d_model)   # cross-attn proj
+    bytes_ = layers * n * d_model * 2 * 12
+    return max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW)
+
+
+def run() -> dict:
+    rows = []
+    summary = {}
+    for name, (n, dm, h, dh, dff, layers, steps) in MODELS.items():
+        t_rest = rest_time(n, dm, dff, layers)
+        t_attn_full = layers * h * modeled_time(n, dh, sparsity=None,
+                                                quant=False, linear=False)
+        t_full = steps * (t_attn_full + t_rest)
+        rows.append({"model": name, "method": "FullAttention",
+                     "attn_s/step": round(t_attn_full, 3),
+                     "e2e_s": round(t_full, 1), "speedup_x": 1.0})
+        for s in (0.90, 0.95, 0.97):
+            t_attn = layers * h * modeled_time(n, dh, sparsity=s,
+                                               quant=True, linear=True)
+            t = steps * (t_attn + t_rest)
+            rows.append({"model": name, "method": f"SLA2 {100 * s:.0f}%",
+                         "attn_s/step": round(t_attn, 3),
+                         "e2e_s": round(t, 1),
+                         "speedup_x": round(t_full / t, 2)})
+        summary[name] = {
+            "attn_speedup_97": round(t_attn_full / t_attn, 1),
+            "e2e_speedup_97": rows[-1]["speedup_x"]}
+    payload = {"rows": rows, "summary": summary,
+               "paper": {"wan_1.3b_480p": {"e2e": 2.30},
+                         "wan_14b_720p": {"e2e": 4.35}}}
+    save_result("fig5_e2e_latency", payload)
+    print(markdown_table(rows, ["model", "method", "attn_s/step", "e2e_s",
+                                "speedup_x"]))
+    print(f"\nsummary: {summary} (paper e2e: 2.30x / 4.35x)")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Run every benchmark (one per paper table/figure).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig4_kernel_speed, fig5_e2e_latency,
+                            table1_efficiency, table2_ablations)
+    suites = {
+        "table1": table1_efficiency.run,
+        "table2": table2_ablations.run,
+        "fig4": fig4_kernel_speed.run,
+        "fig5": fig5_e2e_latency.run,
+    }
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"== {name} done in {time.time() - t0:.1f}s")
+        except Exception:   # noqa: BLE001 — report all suites
+            failures += 1
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Table 1 reproduction: quality + efficiency of SLA2 vs baselines.
+
+Offline stand-ins for the paper's video metrics (documented in DESIGN §8.3):
+quality = attention-output fidelity vs full attention (relative L2 error,
+lower is better) after stage-1 fitting on structured synthetic Q/K/V;
+efficiency = the paper's FLOP accounting on the Wan-1.3B geometry
+(N=32k, d=128, 12 heads, 30 layers).
+
+Validates the paper's headline arithmetic: 97% sparsity => ~96.7% compute
+saving after the linear branch is charged; SLA2's FLOPs are slightly above
+sparse-only baselines at equal sparsity (the linear branch) but quality is
+better at HIGHER sparsity than baselines at lower sparsity.
+"""
+from __future__ import annotations
+
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import attention_flops, markdown_table, save_result
+from repro.core import attention as attnlib
+from repro.core import sla as slalib
+from repro.core import sla2 as sla2lib
+from repro.core.router import RouterConfig
+from repro.core.sla2 import SLA2Config
+from repro.optim import AdamWConfig
+from repro.train.stage1 import Stage1Config, capture_qkv_stream, run_stage1
+
+# paper geometry (Wan2.1-1.3B-480P): N ~= 32k tokens, d=128, 12 heads, 30 L
+N_FULL, D_HEAD, HEADS, LAYERS = 32768, 128, 12, 30
+# reduced geometry for the measured-quality column (CPU)
+N_EVAL, H_EVAL = 1024, 2
+
+SPARSITIES = [0.90, 0.95, 0.97]
+
+
+def fit_and_eval(method: str, sparsity: float, key) -> float:
+    """Relative L2 error of the method's attention output vs full attn."""
+    k_frac = 1.0 - sparsity
+    rcfg = RouterConfig(block_q=64, block_k=32, k_frac=k_frac, causal=False)
+    stream = capture_qkv_stream(key, batch=2, heads=H_EVAL, seq=N_EVAL,
+                                dim=D_HEAD)
+    q, k, v = next(stream)
+    target = attnlib.full_attention(q, k, v, causal=False)
+    tnorm = jnp.linalg.norm(target)
+
+    if method == "sla2":
+        cfg = SLA2Config(router=rcfg, quant_bits="int8", impl="gather")
+        params, _ = run_stage1(
+            key, stream, cfg,
+            Stage1Config(k_fracs=(k_frac,), steps_per_k=40,
+                         optimizer=AdamWConfig(lr=3e-3, weight_decay=0.0),
+                         tau_start=0.5, tau_end=0.02),
+            head_dim=D_HEAD, num_heads=H_EVAL, n_q_blocks=N_EVAL // 64,
+            log_fn=lambda s: None)
+        out = sla2lib.sla2_attention(params, q, k, v, cfg)
+    elif method == "sla":
+        scfg = slalib.SLAConfig(router=dc.replace(rcfg, learnable=False))
+        params = slalib.init_sla_params(key, head_dim=D_HEAD)
+        # one-shot ridge fit of SLA's proj_l on the residual (its stage-1)
+        o_s = attnlib.sparse_attention(
+            q, k, v, _heuristic_mask(q, k, rcfg), block_q=64, block_k=32)
+        o_l = attnlib.linear_attention(
+            q, k, v, _heuristic_mask(q, k, rcfg), block_q=64, block_k=32)
+        X = o_l.reshape(-1, D_HEAD).astype(jnp.float32)
+        Y = (target - o_s).reshape(-1, D_HEAD).astype(jnp.float32)
+        w = jnp.linalg.solve(X.T @ X + 1e-3 * jnp.eye(D_HEAD), X.T @ Y)
+        out = o_s + (o_l.astype(jnp.float32) @ w).reshape(o_s.shape)
+    elif method in ("vsa", "vmoba"):
+        scfg = slalib.SLAConfig(router=dc.replace(rcfg, learnable=False),
+                                quant_bits="none")
+        out = slalib.sparse_only_attention(q, k, v, scfg)
+    else:
+        out = target
+    return float(jnp.linalg.norm(out.astype(jnp.float32)
+                                 - target.astype(jnp.float32)) / tnorm)
+
+
+def _heuristic_mask(q, k, rcfg):
+    from repro.core import router as routerlib
+    return routerlib.route({}, q, k, dc.replace(rcfg, learnable=False),
+                           soft=False)
+
+
+def run() -> dict:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    full_flops = HEADS * LAYERS * attention_flops(N_FULL, D_HEAD)
+    rows.append({"method": "FullAttention", "sparsity": "0%",
+                 "attn_TFLOPs": round(full_flops / 1e12, 2),
+                 "saving": "0%", "rel_err": 0.0})
+    for s in SPARSITIES:
+        for method in ("vmoba", "vsa", "sla", "sla2"):
+            fl = HEADS * LAYERS * attention_flops(
+                N_FULL, D_HEAD, sparsity=s, method=method)
+            err = fit_and_eval(method, s, jax.random.fold_in(key, hash(
+                (method, int(100 * s))) % (2 ** 31)))
+            rows.append({
+                "method": method.upper(), "sparsity": f"{100 * s:.0f}%",
+                "attn_TFLOPs": round(fl / 1e12, 2),
+                "saving": f"{100 * (1 - fl / full_flops):.1f}%",
+                "rel_err": round(err, 4)})
+    # headline check: 97% sparsity ~= 96.7% saving for SLA2
+    sla2_97 = next(r for r in rows
+                   if r["method"] == "SLA2" and r["sparsity"] == "97%")
+    payload = {"rows": rows,
+               "claim_97_sparsity_saving": sla2_97["saving"],
+               "claim_holds": abs(float(sla2_97["saving"][:-1]) - 96.7) < 0.5}
+    save_result("table1_efficiency", payload)
+    print(markdown_table(rows, ["method", "sparsity", "attn_TFLOPs",
+                                "saving", "rel_err"]))
+    print(f"\npaper claim '97% sparsity ~ 96.7% savings': "
+          f"{sla2_97['saving']} -> {payload['claim_holds']}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,97 @@
+"""Table 2 reproduction: SLA2 ablations.
+
+  (a) QAT vs w/o-QAT (train fp16, infer int8 = PTQ)     [paper: QAT wins]
+  (b) learnable router vs SLA's heuristic Top-k router   [learnable wins]
+  (c) sparsity sweep 85/90/95/97                          [lower s better]
+
+Quality metric: relative L2 error of the attention output vs full
+attention on held-out structured Q/K/V after stage-1 fitting (offline
+stand-in for VBench; DESIGN §8.3).
+"""
+from __future__ import annotations
+
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import markdown_table, save_result
+from repro.core import attention as attnlib
+from repro.core import sla2 as sla2lib
+from repro.core.router import RouterConfig
+from repro.core.sla2 import SLA2Config
+from repro.optim import AdamWConfig
+from repro.train.stage1 import Stage1Config, capture_qkv_stream, run_stage1
+
+N, D, H = 1024, 64, 2
+
+
+def _fit(key, cfg: SLA2Config, *, train_quant: str):
+    stream = capture_qkv_stream(key, batch=2, heads=H, seq=N, dim=D)
+    params, _ = run_stage1(
+        key, stream, dc.replace(cfg, quant_bits=train_quant), Stage1Config(
+            k_fracs=(cfg.router.k_frac,), steps_per_k=40,
+            optimizer=AdamWConfig(lr=3e-3, weight_decay=0.0),
+            tau_start=0.5, tau_end=0.02),
+        head_dim=D, num_heads=H, n_q_blocks=N // cfg.router.block_q,
+        log_fn=lambda s: None)
+    return params
+
+
+def _eval(key, params, cfg: SLA2Config) -> float:
+    q, k, v = next(capture_qkv_stream(jax.random.fold_in(key, 999),
+                                      batch=2, heads=H, seq=N, dim=D))
+    target = attnlib.full_attention(q, k, v, causal=False)
+    out = sla2lib.sla2_attention(params, q, k, v, cfg)
+    return float(jnp.linalg.norm(out.astype(jnp.float32) - target)
+                 / jnp.linalg.norm(target))
+
+
+def run() -> dict:
+    key = jax.random.PRNGKey(7)
+    rows = []
+
+    base_r = RouterConfig(block_q=64, block_k=32, k_frac=0.03, causal=False)
+    base = SLA2Config(router=base_r, quant_bits="int8", impl="gather")
+
+    # (a) QAT: train with int8 in the forward; PTQ: train fp, infer int8
+    p_qat = _fit(key, base, train_quant="int8")
+    p_ptq = _fit(key, base, train_quant="none")
+    rows.append({"ablation": "SLA2 (QAT int8)", "rel_err":
+                 round(_eval(key, p_qat, base), 4)})
+    rows.append({"ablation": "w/o QAT (PTQ int8)", "rel_err":
+                 round(_eval(key, p_ptq, base), 4)})
+
+    # (b) learnable router vs heuristic Top-k router
+    heur = dc.replace(base, router=dc.replace(base_r, learnable=False))
+    p_heur = _fit(key, heur, train_quant="int8")
+    rows.append({"ablation": "Topk-router (SLA-style)", "rel_err":
+                 round(_eval(key, p_heur, heur), 4)})
+    rows.append({"ablation": "learnable router (SLA2)", "rel_err":
+                 rows[0]["rel_err"]})
+
+    # (c) sparsity sweep
+    for s in (0.85, 0.90, 0.95, 0.97):
+        c = dc.replace(base, router=dc.replace(base_r, k_frac=1.0 - s))
+        p = _fit(jax.random.fold_in(key, int(s * 100)), c,
+                 train_quant="int8")
+        rows.append({"ablation": f"SLA2 ({100 * s:.0f}% sparsity)",
+                     "rel_err": round(_eval(key, p, c), 4)})
+
+    qat_wins = rows[0]["rel_err"] <= rows[1]["rel_err"]
+    router_wins = rows[0]["rel_err"] <= rows[2]["rel_err"]
+    sweep = [r["rel_err"] for r in rows[-4:]]
+    monotone = all(sweep[i] <= sweep[i + 1] + 0.02
+                   for i in range(len(sweep) - 1))
+    payload = {"rows": rows, "qat_beats_ptq": bool(qat_wins),
+               "learnable_beats_heuristic": bool(router_wins),
+               "lower_sparsity_better(+tol)": bool(monotone)}
+    save_result("table2_ablations", payload)
+    print(markdown_table(rows, ["ablation", "rel_err"]))
+    print(f"\nQAT beats PTQ: {qat_wins} | learnable beats heuristic: "
+          f"{router_wins} | sparsity monotone(+tol): {monotone}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

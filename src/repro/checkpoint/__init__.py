@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointer import (Checkpointer, latest_step,
+                                           restore, save)

@@ -1,0 +1,163 @@
+"""Atomic, manifest-based numpy checkpointer with elastic resharding.
+
+Layout (one directory per step):
+
+    <dir>/step_000420.tmp/...      (written first)
+    <dir>/step_000420/
+        manifest.json              {leaf path -> file, shape, dtype, meta}
+        arr_00000.npy ...
+
+Atomicity: everything is written into ``step_N.tmp`` and ``os.rename``d to
+``step_N`` as the last action — a crash mid-save leaves only a .tmp that
+restore() ignores and the next save overwrites.  ``keep`` old checkpoints
+are garbage-collected after a successful rename.
+
+Elastic resharding: arrays are saved as full (addressable-host-gathered)
+numpy values; ``restore(..., shardings=...)`` re-places them under ANY mesh
+via ``jax.device_put`` — restoring a 512-chip checkpoint onto 256 chips (or
+a differently-shaped mesh) is the same code path.
+
+Async: ``Checkpointer.save_async`` snapshots to host memory synchronously
+(cheap) and writes files on a background thread so the train loop never
+blocks on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in leaves]
+    vals = [v for _, v in leaves]
+    return paths, vals, jax.tree_util.tree_structure(tree)
+
+
+def save(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    paths, vals, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": []}
+    for i, (p, v) in enumerate(zip(paths, vals)):
+        arr = np.asarray(jax.device_get(v))
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"path": p, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic commit
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(all_steps(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def all_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name,
+                                             "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, like: Any, *,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings`` (matching pytree of NamedSharding)
+    re-places each leaf — elastic across mesh shapes."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {l["path"]: l for l in manifest["leaves"]}
+
+    paths, likes, treedef = _flatten(like)
+    shard_leaves = (treedef.flatten_up_to(shardings)
+                    if shardings is not None else [None] * len(likes))
+    out = []
+    for p, lk, sh in zip(paths, likes, shard_leaves):
+        entry = by_path.get(p)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {p}")
+        arr = np.load(os.path.join(path, entry["file"]))
+        want_dtype = getattr(lk, "dtype", arr.dtype)
+        arr = arr.astype(want_dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class Checkpointer:
+    """Keep-k async checkpoint manager bound to one directory."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: Any):
+        self.wait()  # one in-flight save at a time
+        host_tree = jax.tree.map(lambda v: np.asarray(jax.device_get(v)),
+                                 tree)
+
+        def _do():
+            try:
+                save(self.directory, step, host_tree, keep=self.keep)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_do, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def restore_latest(self, like, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, restore(self.directory, step, like,
+                             shardings=shardings)

@@ -1,0 +1,51 @@
+"""Architecture registry: the 10 assigned configs + the paper's own DiT.
+
+Each module exposes
+    config(**overrides)       -> full-size config (exact published numbers)
+    smoke_config(**overrides) -> reduced same-family config for CPU tests
+
+``get_config(name)`` / ``get_smoke_config(name)`` look them up;
+``ARCH_NAMES`` lists everything for --arch CLIs and the dry-run sweep.
+
+Input-shape cells (assigned per architecture; LM shapes):
+    train_4k     seq 4,096   x global_batch 256   (training)
+    prefill_32k  seq 32,768  x global_batch 32    (inference prefill)
+    decode_32k   seq 32,768  x global_batch 128   (decode, 1 new token)
+    long_500k    seq 524,288 x global_batch 1     (long-context decode)
+"""
+from __future__ import annotations
+
+import importlib
+
+SHAPES = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "mode": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32, "mode": "prefill"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128, "mode": "decode"},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "mode": "decode"},
+}
+
+ARCH_NAMES = [
+    "hymba_1_5b",
+    "xlstm_350m",
+    "paligemma_3b",
+    "llama4_maverick_400b",
+    "deepseek_v2_lite",
+    "qwen3_14b",
+    "llama3_405b",
+    "internlm2_20b",
+    "h2o_danube_1_8b",
+    "whisper_tiny",
+    "wan_dit_1_3b",     # the paper's own model
+]
+
+
+def _module(name: str):
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str, **overrides):
+    return _module(name).config(**overrides)
+
+
+def get_smoke_config(name: str, **overrides):
+    return _module(name).smoke_config(**overrides)

@@ -1,0 +1,32 @@
+"""h2o-danube-1.8b [dense]: 24L d_model=2560 32H (GQA kv=8) d_ff=6912
+vocab=32000 — llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818; hf]
+
+SLA2 x SWA: the router's allowed set intersects the sliding window (blocks
+outside the window are never routed sparse; the linear branch covers only
+in-window unselected blocks)."""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides):
+    kw = dict(
+        name="h2o_danube_1_8b", family="dense",
+        n_layers=24, d_model=2560, num_heads=32, num_kv_heads=8,
+        head_dim=80, d_ff=6912, vocab_size=32000,
+        sliding_window=4096, rope_theta=10_000.0, tie_embeddings=False,
+        mechanism="sla2", max_target_len=524288,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides):
+    kw = dict(
+        name="h2o_danube_1_8b_smoke", family="dense",
+        n_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, sliding_window=96, tie_embeddings=False,
+        mechanism="sla2", block_q=32, block_k=16, k_frac=0.25,
+        max_target_len=512, loss_chunk=64, dtype="float32", q_chunk=4,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)

@@ -1,0 +1,37 @@
+"""hymba-1.5b [hybrid]: 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16 — parallel attention+Mamba heads per block.
+[arXiv:2411.13676; hf]
+
+Hymba's meta tokens and partial KV sharing are omitted (DESIGN.md
+§Arch-applicability); the fusion of normalised attn/SSM paths is kept.
+The SSM path makes every block sub-quadratic, so long_500k runs."""
+from repro.models.ssm import SSMConfig
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides):
+    kw = dict(
+        name="hymba_1_5b", family="hybrid",
+        n_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+        head_dim=64, d_ff=5504, vocab_size=32001,
+        layer_kinds=("hybrid",),
+        ssm=SSMConfig(num_heads=25, head_dim=64, d_state=16, chunk=128),
+        rope_theta=10_000.0, tie_embeddings=True,
+        mechanism="sla2", max_target_len=524288,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides):
+    kw = dict(
+        name="hymba_1_5b_smoke", family="hybrid",
+        n_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, layer_kinds=("hybrid",),
+        ssm=SSMConfig(num_heads=4, head_dim=16, d_state=4, chunk=32),
+        tie_embeddings=True, mechanism="sla2", block_q=32, block_k=16,
+        k_frac=0.25, max_target_len=512, loss_chunk=64, dtype="float32",
+        q_chunk=4,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)

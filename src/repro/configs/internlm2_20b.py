@@ -1,0 +1,27 @@
+"""internlm2-20b [dense]: 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92544 — GQA. [arXiv:2403.17297; hf]"""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides):
+    kw = dict(
+        name="internlm2_20b", family="dense",
+        n_layers=48, d_model=6144, num_heads=48, num_kv_heads=8,
+        head_dim=128, d_ff=16384, vocab_size=92544,
+        rope_theta=1_000_000.0, tie_embeddings=False,
+        mechanism="sla2", max_target_len=524288,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides):
+    kw = dict(
+        name="internlm2_20b_smoke", family="dense",
+        n_layers=2, d_model=96, num_heads=6, num_kv_heads=2, head_dim=16,
+        d_ff=192, vocab_size=256, tie_embeddings=False,
+        mechanism="sla2", block_q=32, block_k=16, k_frac=0.25,
+        max_target_len=512, loss_chunk=64, dtype="float32", q_chunk=4,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)

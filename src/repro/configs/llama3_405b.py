@@ -1,0 +1,27 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256 — GQA, 128k vocab. [arXiv:2407.21783]"""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides):
+    kw = dict(
+        name="llama3_405b", family="dense",
+        n_layers=126, d_model=16384, num_heads=128, num_kv_heads=8,
+        head_dim=128, d_ff=53248, vocab_size=128256,
+        rope_theta=500_000.0, tie_embeddings=False,
+        mechanism="sla2", max_target_len=524288,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides):
+    kw = dict(
+        name="llama3_405b_smoke", family="dense",
+        n_layers=3, d_model=64, num_heads=8, num_kv_heads=2, head_dim=8,
+        d_ff=192, vocab_size=256, tie_embeddings=False,
+        mechanism="sla2", block_q=32, block_k=16, k_frac=0.25,
+        max_target_len=512, loss_chunk=64, dtype="float32", q_chunk=4,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)

@@ -1,0 +1,32 @@
+"""paligemma-3b [vlm]: 18L d_model=2048 8H (MQA kv=1) d_ff=16384
+vocab=257216 — SigLIP frontend (stubbed patch embeddings) + Gemma decoder
+with prefix-LM attention over the image tokens. [arXiv:2407.07726; hf]"""
+from repro.models.transformer import ModelConfig
+
+N_IMAGE_TOKENS = 256
+
+
+def config(**overrides):
+    kw = dict(
+        name="paligemma_3b", family="vlm",
+        n_layers=18, d_model=2048, num_heads=8, num_kv_heads=1,
+        head_dim=256, d_ff=16384, vocab_size=257216,
+        prefix_len=N_IMAGE_TOKENS, embed_scale=True,
+        mlp_activation="gelu", rope_theta=10_000.0, tie_embeddings=True,
+        mechanism="sla2", max_target_len=524288,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides):
+    kw = dict(
+        name="paligemma_3b_smoke", family="vlm",
+        n_layers=2, d_model=64, num_heads=4, num_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=256, prefix_len=32, embed_scale=True,
+        mlp_activation="gelu", tie_embeddings=True,
+        mechanism="sla2", block_q=32, block_k=16, k_frac=0.25,
+        max_target_len=512, loss_chunk=64, dtype="float32", q_chunk=4,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)

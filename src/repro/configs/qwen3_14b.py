@@ -1,0 +1,28 @@
+"""qwen3-14b [dense]: 40L d_model=5120 40H (GQA kv=8) d_ff=17408
+vocab=151936 — qk_norm, GQA. [hf:Qwen/Qwen3-8B family; hf]"""
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides):
+    kw = dict(
+        name="qwen3_14b", family="dense",
+        n_layers=40, d_model=5120, num_heads=40, num_kv_heads=8,
+        head_dim=128, d_ff=17408, vocab_size=151936,
+        qk_norm=True, rope_theta=1_000_000.0,
+        tie_embeddings=False,
+        mechanism="sla2", max_target_len=524288,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides):
+    kw = dict(
+        name="qwen3_14b_smoke", family="dense",
+        n_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, qk_norm=True, tie_embeddings=False,
+        mechanism="sla2", block_q=32, block_k=16, k_frac=0.25,
+        max_target_len=512, loss_chunk=64, dtype="float32", q_chunk=4,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)

@@ -1,0 +1,31 @@
+"""whisper-tiny [audio]: 4L d_model=384 6H d_ff=1536 vocab=51865 —
+encoder-decoder, conv frontend STUB (input_specs provides precomputed
+frame embeddings). [arXiv:2212.04356]
+
+Encoder self-attention stays dense (N=1500 — sparsity saves nothing);
+the decoder's causal self-attention runs SLA2 (that is where the decode
+shapes' long KV caches live)."""
+from repro.models.encdec import EncDecConfig
+
+
+def config(**overrides):
+    kw = dict(
+        name="whisper_tiny",
+        n_enc_layers=4, n_dec_layers=4, d_model=384, num_heads=6,
+        num_kv_heads=6, head_dim=64, d_ff=1536, vocab_size=51865,
+        n_frames=1500, mechanism="sla2", max_target_len=524288,
+    )
+    kw.update(overrides)
+    return EncDecConfig(**kw)
+
+
+def smoke_config(**overrides):
+    kw = dict(
+        name="whisper_tiny_smoke",
+        n_enc_layers=2, n_dec_layers=2, d_model=64, num_heads=2,
+        num_kv_heads=2, head_dim=32, d_ff=128, vocab_size=256, n_frames=64,
+        mechanism="sla2", block_q=32, block_k=16, k_frac=0.25,
+        max_target_len=512, loss_chunk=64, dtype="float32", q_chunk=4,
+    )
+    kw.update(overrides)
+    return EncDecConfig(**kw)

@@ -1,0 +1,41 @@
+"""xlstm-350m [ssm]: 24L d_model=1024 4H vocab=50304 — sLSTM + mLSTM
+blocks at the paper's 7:1 ratio; no FFN (d_ff=0), projection factor 2.
+[arXiv:2405.04517]
+
+No softmax attention exists in this architecture, so SLA2 is inapplicable
+(DESIGN.md §Arch-applicability) — the arch runs without it, and long_500k
+runs natively (recurrent state, O(1) per token)."""
+from repro.models.ssm import SSMConfig
+from repro.models.transformer import ModelConfig
+
+
+def config(**overrides):
+    kw = dict(
+        name="xlstm_350m", family="ssm",
+        n_layers=24, d_model=1024, num_heads=4, num_kv_heads=4,
+        head_dim=512,                 # v head dim (pf=2): 4 x 512 = 2 x d
+        d_ff=0, vocab_size=50304,
+        layer_kinds=("mlstm",) * 7 + ("slstm",),   # 7:1, 3 groups
+        ssm=SSMConfig(num_heads=4, head_dim=512, qk_dim=256, d_state=0,
+                      chunk=128),
+        use_rope=False, tie_embeddings=True,
+        mechanism="full",             # unused: no attention layers
+        max_target_len=524288,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides):
+    kw = dict(
+        name="xlstm_350m_smoke", family="ssm",
+        n_layers=8, d_model=32, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=0, vocab_size=256,
+        layer_kinds=("mlstm",) * 7 + ("slstm",),
+        ssm=SSMConfig(num_heads=2, head_dim=32, qk_dim=16, d_state=0,
+                      chunk=32),
+        use_rope=False, tie_embeddings=True, mechanism="full",
+        max_target_len=512, loss_chunk=64, dtype="float32",
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)

@@ -1,0 +1,3 @@
+"""Core SLA2 library: router, SoftTop-k, quantization, attention branches."""
+from repro.core.router import RouterConfig  # noqa: F401
+from repro.core.sla2 import SLA2Config, init_sla2_params, sla2_attention  # noqa: F401

@@ -1,0 +1,128 @@
+"""Reference attention math for SLA2 (pure jnp; oracles for kernels + small
+models).  Shapes follow the (B, H, N, D) convention; block masks are
+(B, H, T_m, T_n) and expanded internally where needed.
+
+The sparse branch follows paper Eq. 2 with the standard -inf interpretation of
+"S (.) M": unselected entries do not participate in the row softmax (this is
+exactly what Algorithm 2 computes by skipping blocks).  In *soft* mode
+(stage-1 training) the mask enters as an additive ``log(M)`` term — equal to
+the hard behaviour at M in {0,1} and differentiable in between — and the
+linear branch weighs block states by (1 - M).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as masklib
+from repro.core.quant import fake_quant, smooth_k
+
+_EPS = 1e-12
+
+
+def phi(x: jax.Array) -> jax.Array:
+    """Linear-attention feature map; the paper uses softmax (over head dim)."""
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1)
+
+
+def _blockwise_fake_quant(x: jax.Array, block: int, bits: str) -> jax.Array:
+    """Per-(token-block, d) fake-quant — the paper's per-tile scale
+    granularity (Algorithm 2 quantizes each Q_i / K_j tile separately)."""
+    *lead, n, d = x.shape
+    if n % block:
+        return fake_quant(x, bits)  # fallback: per-tensor
+    xb = x.reshape(*lead, n // block, block, d)
+    return fake_quant(xb, bits, (-2, -1)).reshape(*lead, n, d)
+
+
+def full_attention(q, k, v, *, causal: bool = False, q_offset: int = 0,
+                   prefix_len: int = 0):
+    """O = softmax(QK^T / sqrt(d)) V  — the FlashAttn2 baseline semantics."""
+    d = q.shape[-1]
+    s = jnp.einsum("...nd,...md->...nm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(d)
+    if causal:
+        cm = masklib.token_causal_mask(q.shape[-2], k.shape[-2], q_offset,
+                                       prefix_len)
+        s = jnp.where(cm, s, masklib.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...nm,...md->...nd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def sparse_attention(q, k, v, mask_c, *, block_q: int, block_k: int,
+                     causal: bool = False, soft: bool = False,
+                     quant_bits: str = "none", prefix_len: int = 0):
+    """Block-masked softmax attention (paper Eq. 2 / the O_s branch).
+
+    mask_c: (..., T_m, T_n) block mask; hard {0,1} or soft (0,1).
+    quant_bits: 'none' | 'int8' | 'fp8' — QAT fake-quant of the forward
+    (Q/K quantized before QK^T; P and V quantized before PV)."""
+    d = q.shape[-1]
+    n_q, n_k = q.shape[-2], k.shape[-2]
+    qq, kk = q, k
+    if quant_bits != "none":
+        kk = smooth_k(kk)
+        qq = _blockwise_fake_quant(qq, block_q, quant_bits)
+        kk = _blockwise_fake_quant(kk, block_k, quant_bits)
+    s = jnp.einsum("...nd,...md->...nm", qq.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / jnp.sqrt(d)
+    m = masklib.expand_mask(mask_c.astype(jnp.float32), block_q, block_k)
+    if soft:
+        s = s + jnp.log(m + _EPS)
+    else:
+        s = jnp.where(m > 0.5, s, masklib.NEG_INF)
+    if causal:
+        cm = masklib.token_causal_mask(n_q, n_k, 0, prefix_len)
+        s = jnp.where(cm, s, masklib.NEG_INF)
+    # numerically-safe masked softmax (rows with no selected entries -> 0)
+    s_max = jnp.max(s, axis=-1, keepdims=True)
+    s_max = jnp.maximum(s_max, -1e20)
+    p = jnp.exp(s - s_max)
+    denom = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, _EPS)
+    if quant_bits != "none":
+        p = fake_quant(p, quant_bits, (-1,))  # per-row scale (P in (0,1])
+        vv = fake_quant(v, quant_bits)
+    else:
+        vv = v
+    return jnp.einsum("...nm,...md->...nd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def linear_attention(q, k, v, mask_c, *, block_q: int, block_k: int,
+                     causal: bool = False, soft: bool = False,
+                     prefix_len: int = 0):
+    """The O_l branch (paper Eq. 3 / Eq. 14): row-normalised linear attention
+    over the *complement* of the block mask.
+
+    Reference semantics (token level):
+        P_l = phi(Q) phi(K)^T  (.)  (1 - M_expanded)  [(.) causal]
+        O_l = norm(P_l) V
+    """
+    qf, kf = phi(q), phi(k)
+    p = jnp.einsum("...nd,...md->...nm", qf, kf)
+    m = masklib.expand_mask(mask_c.astype(jnp.float32), block_q, block_k)
+    comp = jnp.clip(1.0 - m, 0.0, 1.0) if soft else (m <= 0.5).astype(jnp.float32)
+    p = p * comp
+    if causal:
+        cm = masklib.token_causal_mask(q.shape[-2], k.shape[-2], 0, prefix_len)
+        p = p * cm.astype(p.dtype)
+    denom = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, _EPS)
+    return jnp.einsum("...nm,...md->...nd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def block_kv_states(k, v, *, block_k: int):
+    """Per-block linear-attention states used by Algorithm 2 lines 6-7:
+        h_j = phi(K_j)^T V_j   (d x d)
+        z_j = rowsum(phi(K_j)^T) = sum of phi(K) rows in block j  (d,)
+    k, v: (..., N, d) -> h: (..., T_n, d, d), z: (..., T_n, d)."""
+    kf = phi(k)
+    *lead, n, d = k.shape
+    t_n = n // block_k
+    kb = kf.reshape(*lead, t_n, block_k, d)
+    vb = v.astype(jnp.float32).reshape(*lead, t_n, block_k, d)
+    h = jnp.einsum("...jbd,...jbe->...jde", kb, vb)
+    z = kb.sum(axis=-2)
+    return h, z

@@ -1,0 +1,63 @@
+"""Loop helpers with a global unroll switch for exact HLO cost accounting.
+
+XLA's cost_analysis visits a while-loop body ONCE regardless of trip count,
+so every lax.scan / lax.map in the model would make the dry-run's FLOP and
+collective-byte numbers meaningless.  All loop sites in the codebase route
+through these helpers; ``accounting_mode()`` fully unrolls them so the
+compiled HLO contains every iteration and cost_analysis counts everything.
+launch/dryrun.py uses this on reduced-depth probe builds (1 and 2 layer
+groups) and extrapolates: total = f(1) + (G-1) * (f(2) - f(1)).
+
+Normal execution (UNROLL=False) keeps compact while-loops — identical
+numerics, small HLO.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_UNROLL = False
+
+
+@contextlib.contextmanager
+def accounting_mode():
+    """Fully unroll all scans/maps built while active (cost probes only)."""
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def unrolling() -> bool:
+    return _UNROLL
+
+
+def scan(body, init, xs, *, never_unroll: bool = False, length=None):
+    """lax.scan that fully unrolls under accounting_mode().
+
+    never_unroll: for loops whose trip count is too large to unroll (e.g.
+    the sLSTM time recurrence); their cost stays undercounted and is
+    corrected analytically (see launch/roofline.py notes)."""
+    unroll = 1 if (never_unroll or not _UNROLL) else True
+    return jax.lax.scan(body, init, xs, unroll=unroll, length=length)
+
+
+def chunk_map(f, xs):
+    """lax.map that fully unrolls under accounting_mode().
+
+    f maps a pytree slice -> pytree; xs leaves share leading dim."""
+    if not _UNROLL:
+        return jax.lax.map(f, xs)
+    return _unrolled_map(f, xs)
+
+
+def _unrolled_map(f, xs):
+    import jax.numpy as jnp
+    leaves = jax.tree.leaves(xs)
+    n = leaves[0].shape[0]
+    outs = [f(jax.tree.map(lambda a: a[i], xs)) for i in range(n)]
+    return jax.tree.map(lambda *ys: jnp.stack(ys), *outs)

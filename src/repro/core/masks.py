@@ -1,0 +1,124 @@
+"""Block-mask utilities for sparse-linear attention.
+
+All masks here are *block-level*: a compressed mask ``M_c`` of shape
+``(..., T_m, T_n)`` with ``T_m = N_q / b_q`` query blocks and
+``T_n = N_kv / b_k`` key/value blocks.  ``expand_mask`` turns a block mask
+into a token-level ``(..., N_q, N_kv)`` mask for reference computations; the
+kernels never materialise the expanded mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def expand_mask(mask_c: jax.Array, b_q: int, b_k: int) -> jax.Array:
+    """Expand a block mask (..., T_m, T_n) to token level (..., N_q, N_kv)."""
+    m = jnp.repeat(mask_c, b_q, axis=-2)
+    m = jnp.repeat(m, b_k, axis=-1)
+    return m
+
+
+def block_causal_mask(t_m: int, t_n: int, b_q: int, b_k: int,
+                      prefix_len: int = 0) -> jax.Array:
+    """Block-level causal visibility: block (i, j) is visible iff some token in
+    query block i may attend to some token in kv block j, i.e.
+    ``j * b_k <= (i + 1) * b_q - 1``  (last query of block i sees first key of
+    block j).  With ``prefix_len > 0`` (prefix-LM, e.g. PaliGemma) the first
+    ``prefix_len`` tokens are visible to everyone.  Returns bool (t_m, t_n)."""
+    qi = (jnp.arange(t_m) + 1) * b_q - 1  # last query index per q block
+    kj = jnp.arange(t_n) * b_k            # first key index per kv block
+    vis = qi[:, None] >= kj[None, :]
+    if prefix_len:
+        vis = vis | (kj[None, :] < prefix_len)
+    return vis
+
+
+def block_diagonal_mask(t_m: int, t_n: int, b_q: int, b_k: int,
+                        prefix_len: int = 0) -> jax.Array:
+    """Blocks that straddle the causal boundary (need intra-block masking).
+
+    Block (i, j) is 'diagonal' when it is causally visible but not *fully*
+    visible (its last key index exceeds the first query index and it is not
+    fully inside the always-visible prefix)."""
+    vis = block_causal_mask(t_m, t_n, b_q, b_k, prefix_len)
+    qi0 = jnp.arange(t_m) * b_q                 # first query index
+    kj1 = (jnp.arange(t_n) + 1) * b_k - 1       # last key index
+    # fully visible: even the FIRST query of block i sees the LAST key of j
+    full = kj1[None, :] <= qi0[:, None]
+    if prefix_len:
+        full = full | (kj1[None, :] < prefix_len)
+    return vis & ~full
+
+
+def token_causal_mask(n_q: int, n_kv: int, q_offset: int = 0,
+                      prefix_len: int = 0) -> jax.Array:
+    """Token-level causal mask; ``q_offset`` is the absolute position of query
+    0 (used for decode where n_q << n_kv).  ``prefix_len`` tokens at the start
+    are visible to everyone (prefix-LM)."""
+    qi = jnp.arange(n_q) + q_offset
+    kj = jnp.arange(n_kv)
+    vis = qi[:, None] >= kj[None, :]
+    if prefix_len:
+        vis = vis | (kj[None, :] < prefix_len)
+    return vis
+
+
+def sliding_window_block_mask(
+    t_m: int, t_n: int, b_q: int, b_k: int, window: int
+) -> jax.Array:
+    """Blocks possibly inside a sliding attention window of size ``window``."""
+    qi_last = (jnp.arange(t_m) + 1) * b_q - 1
+    qi_first = jnp.arange(t_m) * b_q
+    kj_first = jnp.arange(t_n) * b_k
+    kj_last = (jnp.arange(t_n) + 1) * b_k - 1
+    causal = qi_last[:, None] >= kj_first[None, :]
+    inside = kj_last[None, :] >= (qi_first[:, None] - window + 1)
+    return causal & inside
+
+
+def topk_block_mask(
+    scores: jax.Array,
+    k_sel: int,
+    *,
+    allowed: jax.Array | None = None,
+    force: jax.Array | None = None,
+) -> jax.Array:
+    """Hard row-wise Top-k over block scores.
+
+    scores : (..., T_m, T_n) block routing scores.
+    k_sel  : number of blocks selected per query-block row.
+    allowed: optional bool (..., T_m, T_n); disallowed entries never selected.
+    force  : optional bool; entries always selected (counted inside k_sel by
+             boosting their score, e.g. the causal diagonal block).
+
+    Returns a float mask in {0., 1.} with exactly ``min(k_sel, n_allowed)``
+    ones per row (rows with fewer allowed entries select all of them).
+    """
+    s = scores
+    if force is not None:
+        s = jnp.where(force, jnp.asarray(jnp.inf, s.dtype), s)
+    if allowed is not None:
+        s = jnp.where(allowed, s, NEG_INF)
+    t_n = s.shape[-1]
+    k_sel = max(1, min(int(k_sel), t_n))
+    _, idx = jax.lax.top_k(s, k_sel)
+    one_hot = jax.nn.one_hot(idx, t_n, dtype=jnp.float32).sum(axis=-2)
+    m = (one_hot > 0).astype(jnp.float32)
+    if allowed is not None:
+        m = m * allowed.astype(m.dtype)
+    if force is not None:
+        m = jnp.maximum(m, force.astype(m.dtype))
+    return m
+
+
+def mask_sparsity(mask_c: jax.Array, allowed: jax.Array | None = None) -> jax.Array:
+    """Fraction of (allowed) blocks NOT routed to the sparse branch."""
+    if allowed is None:
+        total = mask_c.shape[-1] * mask_c.shape[-2]
+        sel = mask_c.sum(axis=(-1, -2))
+        return 1.0 - sel / total
+    a = allowed.astype(mask_c.dtype)
+    return 1.0 - (mask_c * a).sum(axis=(-1, -2)) / jnp.maximum(a.sum(axis=(-1, -2)), 1.0)

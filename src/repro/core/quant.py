@@ -1,0 +1,129 @@
+"""Low-bit quantization for the SLA2 sparse branch (Sec. 5 of the paper).
+
+Follows the SageAttention2++ recipe adapted to TPU:
+
+  * K-smoothing:  K <- K - colmean(K)   (rank-1 shift; softmax-invariant)
+  * symmetric per-block INT8:  x_q = round(x / s),  s = max|x| / 127
+  * FP8 (e4m3) variant with per-block scales
+  * P (post-exp probabilities, values in (0, 1]) quantized with a per-row
+    scale so the MXU runs INT8 x INT8 -> INT32 for the PV matmul too.
+
+``quant``/``dequant`` operate on the *last two* axes blocks by default —
+callers pass attention tiles, so a "block" is one attention tile and the
+scale granularity matches the paper's per-block scheme.
+
+QAT (forward low-bit / backward FP16) lives in ``fake_quant``: a
+``custom_vjp`` whose forward applies real quantize->dequantize and whose
+backward is the identity (straight-through), exactly the paper's
+"low-bit attention only in the forward pass, backward fully in FP16".
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+FP8_MAX = 448.0  # e4m3 max normal
+
+
+class Quantized(NamedTuple):
+    values: jax.Array  # int8 or float8 codes
+    scale: jax.Array   # broadcastable scale, fp32
+
+
+def smooth_k(k: jax.Array, axis: int = -2) -> jax.Array:
+    """SageAttention K-smoothing: subtract the per-channel mean over tokens.
+
+    Adds a per-row constant to every attention score, which row-softmax
+    removes, but centres K so INT8 quantization error drops sharply."""
+    return k - jnp.mean(k, axis=axis, keepdims=True)
+
+
+def _absmax(x: jax.Array, axes) -> jax.Array:
+    return jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+
+
+def quant_int8(x: jax.Array, axes=(-2, -1)) -> Quantized:
+    """Symmetric INT8 with per-block scale over ``axes``."""
+    s = _absmax(x.astype(jnp.float32), axes) / INT8_MAX
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -INT8_MAX, INT8_MAX)
+    return Quantized(q.astype(jnp.int8), s)
+
+
+def quant_fp8(x: jax.Array, axes=(-2, -1)) -> Quantized:
+    """FP8 e4m3 with per-block scale over ``axes``."""
+    s = _absmax(x.astype(jnp.float32), axes) / FP8_MAX
+    s = jnp.maximum(s, 1e-12)
+    q = (x.astype(jnp.float32) / s).astype(jnp.float8_e4m3fn)
+    return Quantized(q, s)
+
+
+def dequant(q: Quantized) -> jax.Array:
+    return q.values.astype(jnp.float32) * q.scale
+
+
+def qmatmul(a: Quantized, b: Quantized, *, transpose_b: bool = False) -> jax.Array:
+    """Low-bit matmul with FP32 dequantized output.
+
+    INT8 inputs run INT8xINT8->INT32 (MXU native on TPU); FP8 runs in FP32
+    after upcast (XLA fuses the convert)."""
+    av, bv = a.values, b.values
+    if transpose_b:
+        bv = jnp.swapaxes(bv, -1, -2)
+        b_scale = jnp.swapaxes(b.scale, -1, -2)
+    else:
+        b_scale = b.scale
+    if av.dtype == jnp.int8 and bv.dtype == jnp.int8:
+        out = jax.lax.dot_general(
+            av, bv,
+            (((av.ndim - 1,), (bv.ndim - 2,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32)
+    else:
+        out = jnp.matmul(av.astype(jnp.float32), bv.astype(jnp.float32))
+    return out * a.scale * b_scale
+
+
+# ---------------------------------------------------------------------------
+# QAT straight-through fake-quant
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant(x: jax.Array, bits: str = "int8", axes=(-2, -1)) -> jax.Array:
+    """Quantize->dequantize in the forward pass, identity in the backward.
+
+    This is the QAT primitive: the forward sees real quantization error so the
+    fine-tuned model adapts to it; the backward is full-precision (paper
+    Sec. 5: "backward pass remains fully in FP16")."""
+    return _fake_quant_fwd(x, bits, axes)[0]
+
+
+def _fake_quant_fwd(x, bits, axes):
+    if bits == "int8":
+        q = quant_int8(x, axes)
+    elif bits == "fp8":
+        q = quant_fp8(x, axes)
+    elif bits == "none":
+        return x, None
+    else:
+        raise ValueError(f"unknown bits: {bits}")
+    return dequant(q).astype(x.dtype), None
+
+
+def _fake_quant_bwd(bits, axes, _, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def quant_error(x: jax.Array, bits: str = "int8", axes=(-2, -1)) -> jax.Array:
+    """RMS relative quantization error (diagnostics / tests)."""
+    y = fake_quant(x, bits, axes)
+    num = jnp.sqrt(jnp.mean((x - y) ** 2))
+    den = jnp.sqrt(jnp.mean(x ** 2)) + 1e-12
+    return num / den

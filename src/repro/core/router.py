@@ -1,0 +1,152 @@
+"""The SLA2 learnable router R (paper Sec. 4).
+
+    Qbar = pool(Q);  Kbar = pool(K)                       (Eq. 15)
+    P_c  = softmax( proj_q(Qbar) proj_k(Kbar)^T / sqrt(d) )
+    M_c  = Top-k(k%, P_c)                                 (Eq. 16)
+
+Hard Top-k at inference / stage-2; SoftTop-k (soft_topk.py) during stage-1
+training.  ``proj_q = proj_k = I`` recovers SLA's heuristic router (paper
+Insight 1.c), which we expose as the ``learnable=False`` baseline.
+
+Causal LMs restrict routing to visible blocks and always force the diagonal
+block into the sparse branch (it needs intra-block causal masking, which the
+linear branch cannot express).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks
+from repro.core.soft_topk import soft_topk
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    block_q: int = 128
+    block_k: int = 64
+    k_frac: float = 0.05          # k% of blocks to the sparse branch
+    tau: float = 0.1              # SoftTop-k temperature
+    learnable: bool = True        # False -> SLA heuristic (identity proj)
+    causal: bool = False
+    prefix_len: int = 0           # prefix-LM: first tokens visible to all
+    force_diagonal: bool = True   # causal: diagonal block always sparse
+    sliding_window: Optional[int] = None  # intersect with SWA reachability
+
+
+def init_router_params(key: jax.Array, head_dim: int,
+                       cfg: RouterConfig, dtype=jnp.float32) -> dict:
+    """proj_q / proj_k initialised near identity so training starts at the
+    SLA heuristic and learns a task-adaptive refinement."""
+    if not cfg.learnable:
+        return {}
+    k1, k2 = jax.random.split(key)
+    eye = jnp.eye(head_dim, dtype=dtype)
+    noise = 0.02 / jnp.sqrt(head_dim)
+    return {
+        "proj_q": eye + noise * jax.random.normal(k1, (head_dim, head_dim), dtype),
+        "proj_k": eye + noise * jax.random.normal(k2, (head_dim, head_dim), dtype),
+    }
+
+
+def pool_blocks(x: jax.Array, block: int) -> jax.Array:
+    """Mean-pool over non-overlapping token windows: (..., N, d) -> (..., N/b, d)."""
+    *lead, n, d = x.shape
+    assert n % block == 0, f"seq {n} not divisible by block {block}"
+    return x.reshape(*lead, n // block, block, d).mean(axis=-2)
+
+
+def router_scores(params: dict, q: jax.Array, k: jax.Array,
+                  cfg: RouterConfig, *, normalize: bool = True) -> jax.Array:
+    """Compressed routing scores P_c: (..., T_m, T_n).
+
+    q, k: (..., N, d) per-head tensors (leading dims batch/heads).
+    normalize=True applies the row softmax (Algorithm 2 line 8); the raw
+    scores (normalize=False) give the SAME Top-k ordering but keep the
+    O(1)-spread logits SoftTop-k's sigmoid needs to sharpen (post-softmax
+    values are O(1/T_n), far below any usable temperature)."""
+    d = q.shape[-1]
+    qb = pool_blocks(q.astype(jnp.float32), cfg.block_q)
+    kb = pool_blocks(k.astype(jnp.float32), cfg.block_k)
+    if cfg.learnable and params:
+        qb = qb @ params["proj_q"].astype(jnp.float32)
+        kb = kb @ params["proj_k"].astype(jnp.float32)
+    s = jnp.einsum("...md,...nd->...mn", qb, kb) / jnp.sqrt(d)
+    if cfg.causal:
+        allowed = masks.block_causal_mask(s.shape[-2], s.shape[-1],
+                                          cfg.block_q, cfg.block_k,
+                                          cfg.prefix_len)
+        s = jnp.where(allowed, s, masks.NEG_INF)
+    return jax.nn.softmax(s, axis=-1) if normalize else s
+
+
+def _allowed_and_forced(t_m: int, t_n: int, cfg: RouterConfig):
+    allowed = None
+    force = None
+    if cfg.causal:
+        allowed = masks.block_causal_mask(t_m, t_n, cfg.block_q, cfg.block_k,
+                                          cfg.prefix_len)
+        if cfg.force_diagonal:
+            force = masks.block_diagonal_mask(t_m, t_n, cfg.block_q,
+                                              cfg.block_k, cfg.prefix_len)
+    if cfg.sliding_window is not None:
+        swa = masks.sliding_window_block_mask(
+            t_m, t_n, cfg.block_q, cfg.block_k, cfg.sliding_window)
+        allowed = swa if allowed is None else (allowed & swa)
+    return allowed, force
+
+
+def route(params: dict, q: jax.Array, k: jax.Array, cfg: RouterConfig,
+          *, soft: bool = False) -> jax.Array:
+    """Produce the block mask M_c (..., T_m, T_n).
+
+    soft=True -> SoftTop-k relaxation in (0,1) (stage-1 training);
+    soft=False -> hard {0,1} Top-k (stage-2 / inference)."""
+    p_c = router_scores(params, q, k, cfg, normalize=not soft)
+    t_m, t_n = p_c.shape[-2], p_c.shape[-1]
+    allowed, force = _allowed_and_forced(t_m, t_n, cfg)
+    if soft:
+        m = soft_topk(p_c, cfg.k_frac, cfg.tau, allowed)
+        if force is not None:
+            m = jnp.maximum(m, force.astype(m.dtype))
+        return m
+    k_sel = max(1, round(cfg.k_frac * t_n))
+    return masks.topk_block_mask(p_c, k_sel, allowed=allowed, force=force)
+
+
+def route_indices(params: dict, q: jax.Array, k: jax.Array, cfg: RouterConfig,
+                  k_sel: Optional[int] = None):
+    """Hard routing as *indices* for the Pallas kernels.
+
+    Returns (idx, valid):
+      idx   : int32 (..., T_m, K_sel) kv-block ids, sorted ascending per row
+              (ascending order is required for causal linear-state prefix math
+              and gives monotone HBM access in the kernel).
+      valid : bool  (..., T_m, K_sel) — False entries are padding (causal rows
+              near the start may have fewer than K_sel visible blocks; padded
+              entries repeat the row's first valid block and must be skipped
+              via the mask, not recomputed).
+    """
+    p_c = router_scores(params, q, k, cfg)
+    t_m, t_n = p_c.shape[-2], p_c.shape[-1]
+    if k_sel is None:
+        k_sel = max(1, round(cfg.k_frac * t_n))
+    k_sel = min(k_sel, t_n)
+    allowed, force = _allowed_and_forced(t_m, t_n, cfg)
+    s = p_c
+    if force is not None:
+        s = jnp.where(force, jnp.inf, s)
+    if allowed is not None:
+        s = jnp.where(allowed, s, 2.0 * masks.NEG_INF)
+    top_vals, idx = jax.lax.top_k(s, k_sel)
+    valid = top_vals > 1.5 * masks.NEG_INF  # entry was an allowed block
+    # padded entries repeat the row's best (always-valid) index so kernel
+    # reads stay in-bounds; they are skipped via `valid`.
+    idx = jnp.where(valid, idx, idx[..., :1])
+    order = jnp.argsort(idx, axis=-1)
+    idx = jnp.take_along_axis(idx, order, axis=-1)
+    valid = jnp.take_along_axis(valid, order, axis=-1)
+    return idx.astype(jnp.int32), valid

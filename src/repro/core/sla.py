@@ -1,0 +1,68 @@
+"""Baselines the paper compares against, expressed in the same substrate.
+
+* ``sla_attention``      — SLA (Zhang et al., 2025c): heuristic pooled-QK
+  Top-k router (identity projections), output ``O = O_s + proj(O_l)``
+  (paper Eq. 4).  This is the method SLA2 improves upon.
+* ``sparse_only_attention`` — VSA-like trainable block-sparse attention:
+  sparse branch only, no linear compensation.
+* ``moba_attention``     — VMoBA-like mixture-of-block attention: hard top-k
+  block gating, renormalised over selected blocks (equivalent here to
+  sparse-only with the heuristic router; kept separate for benchmark
+  labelling).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as attn
+from repro.core import router as routerlib
+from repro.core.router import RouterConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SLAConfig:
+    router: RouterConfig = RouterConfig(learnable=False)
+    quant_bits: str = "none"
+
+
+def init_sla_params(key: jax.Array, *, head_dim: int, dtype=jnp.float32) -> dict:
+    """SLA's learnable linear-branch projection (d x d), near-zero init so
+    training starts at the pure sparse branch."""
+    w = 0.02 / jnp.sqrt(head_dim) * jax.random.normal(
+        key, (head_dim, head_dim), dtype)
+    return {"proj_l": w}
+
+
+def sla_attention(params: dict, q, k, v, cfg: SLAConfig, *,
+                  soft: bool = False, return_aux: bool = False):
+    rcfg = cfg.router
+    mask_c = routerlib.route({}, q, k, rcfg, soft=soft)
+    o_s = attn.sparse_attention(
+        q, k, v, mask_c, block_q=rcfg.block_q, block_k=rcfg.block_k,
+        causal=rcfg.causal, soft=soft, quant_bits=cfg.quant_bits)
+    o_l = attn.linear_attention(
+        q, k, v, mask_c, block_q=rcfg.block_q, block_k=rcfg.block_k,
+        causal=rcfg.causal, soft=soft)
+    o = o_s.astype(jnp.float32) + o_l.astype(jnp.float32) @ params["proj_l"].astype(jnp.float32)
+    o = o.astype(q.dtype)
+    if return_aux:
+        return o, {"mask_c": mask_c}
+    return o
+
+
+def sparse_only_attention(q, k, v, cfg: SLAConfig, *, return_aux: bool = False):
+    rcfg = cfg.router
+    mask_c = routerlib.route({}, q, k, rcfg, soft=False)
+    o = attn.sparse_attention(
+        q, k, v, mask_c, block_q=rcfg.block_q, block_k=rcfg.block_k,
+        causal=rcfg.causal, quant_bits=cfg.quant_bits)
+    if return_aux:
+        return o, {"mask_c": mask_c}
+    return o
+
+
+def moba_attention(q, k, v, cfg: SLAConfig, **kw):
+    return sparse_only_attention(q, k, v, cfg, **kw)

@@ -1,0 +1,113 @@
+"""Differentiable SoftTop-k (Ding et al., 2024 style) used by the SLA2 router.
+
+    SoftTopk(k%, P)_ij = sigmoid(P_ij / tau + lambda_i)
+
+with the per-row bias ``lambda_i`` solved by bisection so each row sums to the
+block budget ``c = k% * T_n``.  Gradients flow through both the explicit
+``P_ij / tau`` term and the *implicit* dependence of ``lambda_i`` on the row
+(the reparameterization trick): from the constraint
+``g(P_i, lam_i) = sum_j sigmoid(P_ij/tau + lam_i) - c = 0`` the implicit
+function theorem gives
+
+    d lam_i / d P_ik = -(sig'_ik / tau) / sum_j sig'_ij
+
+so the VJP of the mask w.r.t. scores has the closed form
+
+    dL/dP_ik = (sig'_ik / tau) * ( gbar_ik - sum_j gbar_ij sig'_ij / sum_j sig'_ij )
+
+which we implement directly in a ``jax.custom_vjp``.
+
+Rows may carry an ``allowed`` mask (causal routing): disallowed entries are
+excluded from the constraint and forced to 0 in the output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BISECT_ITERS = 60
+
+
+def _row_budget(allowed: jax.Array | None, t_n: int, k_frac: float, dtype) -> jax.Array:
+    if allowed is None:
+        return jnp.asarray(k_frac * t_n, dtype)
+    n_allowed = allowed.sum(axis=-1).astype(dtype)
+    budget = k_frac * n_allowed
+    # at least one block, at most all allowed blocks
+    return jnp.clip(budget, 1.0, jnp.maximum(n_allowed, 1.0))
+
+
+def _solve_lambda(scores: jax.Array, tau: float, budget: jax.Array,
+                  allowed: jax.Array | None) -> jax.Array:
+    """Bisection for lambda_i with sum_j sigmoid(s_ij/tau + lam_i) = budget_i."""
+    x = scores / tau
+    if allowed is not None:
+        # push disallowed entries to -inf so their sigmoid contributes ~0
+        x = jnp.where(allowed, x, -1e9)
+    hi0 = -jnp.min(jnp.where(jnp.isfinite(x) & (x > -1e8), x, jnp.inf),
+                   axis=-1) + 30.0
+    lo0 = -jnp.max(x, axis=-1) - 30.0
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        rowsum = jax.nn.sigmoid(x + mid[..., None]).sum(axis=-1)
+        too_big = rowsum > budget
+        hi = jnp.where(too_big, mid, hi)
+        lo = jnp.where(too_big, lo, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo0, hi0))
+    return 0.5 * (lo + hi)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def soft_topk(scores: jax.Array, k_frac: float, tau: float,
+              allowed: jax.Array | None = None) -> jax.Array:
+    """Soft row-wise top-k mask in (0, 1); rows sum to ``k_frac * n_allowed``.
+
+    scores : (..., T_m, T_n) router scores.
+    k_frac : fraction of blocks to keep (e.g. 0.05).
+    tau    : temperature (paper uses 0.1).
+    allowed: optional bool mask of selectable entries (causal routing).
+    """
+    m, _ = _soft_topk_fwd(scores, k_frac, tau, allowed)
+    return m
+
+
+def _soft_topk_fwd(scores, k_frac, tau, allowed):
+    dtype = jnp.promote_types(scores.dtype, jnp.float32)
+    s = scores.astype(dtype)
+    t_n = s.shape[-1]
+    budget = _row_budget(allowed, t_n, k_frac, dtype)
+    lam = _solve_lambda(s, tau, budget, allowed)
+    logits = s / tau + lam[..., None]
+    if allowed is not None:
+        logits = jnp.where(allowed, logits, -1e9)
+    m = jax.nn.sigmoid(logits)
+    if allowed is not None:
+        m = m * allowed.astype(m.dtype)
+    return m.astype(scores.dtype), (m.astype(dtype), allowed)
+
+
+def _soft_topk_bwd(k_frac, tau, res, g):
+    m, allowed = res
+    in_dtype = g.dtype
+    g = g.astype(m.dtype)
+    sig_p = m * (1.0 - m)  # sigmoid'
+    if allowed is not None:
+        sig_p = sig_p * allowed.astype(sig_p.dtype)
+    denom = jnp.maximum(sig_p.sum(axis=-1, keepdims=True), 1e-20)
+    weighted = (g * sig_p).sum(axis=-1, keepdims=True) / denom
+    grad = (sig_p / tau) * (g - weighted)
+    if allowed is None:
+        allowed_ct = None
+    else:  # bool input -> float0 cotangent
+        allowed_ct = np.zeros(allowed.shape, dtype=jax.dtypes.float0)
+    return (grad.astype(in_dtype), allowed_ct)
+
+
+soft_topk.defvjp(_soft_topk_fwd, _soft_topk_bwd)

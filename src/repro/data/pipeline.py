@@ -1,0 +1,172 @@
+"""Deterministic synthetic data pipeline (offline container; DESIGN §8.3).
+
+Every batch is a pure function of (seed, step) — so the pipeline is
+*restartable by construction*: restoring a checkpoint restores the data
+cursor (one int64), skip-ahead is O(1), and every host in a multi-host job
+generates exactly its own shard of the global batch from the same formula
+(host-sharded without any exchange).
+
+Token streams are Zipf-distributed over the vocab with a deterministic
+per-sequence Markov flavour (so the LM loss has learnable structure: next
+token depends on the previous token's residue class).  Video-latent /
+frame / patch batches for the DiT / audio / VLM families are unit-Gaussian
+with a per-(step, field) fold-in.
+
+The ``Prefetcher`` wraps an iterator with a background thread double-buffer
+(host->device overlap on real hardware; harmless on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 128
+    vocab_size: int = 1024
+    # host sharding
+    host_index: int = 0
+    host_count: int = 1
+    # modality extras
+    kind: str = "lm"                # lm | vlm | audio | dit
+    n_image_tokens: int = 0
+    d_model: int = 0
+    n_frames: int = 0
+    c_latent: int = 0
+    n_text: int = 0
+
+
+def _tokens_for(step: int, cfg: DataConfig, rng: np.random.Generator,
+                batch: int, seq: int) -> np.ndarray:
+    """Zipf marginals + first-order structure (learnable)."""
+    v = cfg.vocab_size
+    base = rng.zipf(1.3, size=(batch, seq)).astype(np.int64)
+    toks = (base - 1) % v
+    # Markov flavour: with p=0.5 the next token is prev*7+3 mod v
+    coin = rng.random((batch, seq)) < 0.5
+    for_shift = (toks * 7 + 3) % v
+    toks[:, 1:] = np.where(coin[:, 1:], for_shift[:, :-1], toks[:, 1:])
+    return toks.astype(np.int32)
+
+
+class SyntheticDataset:
+    """Map-style deterministic dataset: __getitem__(step) -> host batch."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        assert cfg.global_batch % cfg.host_count == 0, \
+            "global batch must divide across hosts"
+        self.host_batch = cfg.global_batch // cfg.host_count
+
+    def __getitem__(self, step: int) -> dict:
+        cfg = self.cfg
+        # fold host index into the stream so each host draws its own shard
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, cfg.host_index]))
+        b, n = self.host_batch, cfg.seq_len
+        if cfg.kind == "lm":
+            toks = _tokens_for(step, cfg, rng, b, n + 1)
+            return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.kind == "vlm":
+            n_txt = n - cfg.n_image_tokens
+            toks = _tokens_for(step, cfg, rng, b, n_txt + 1)
+            img = rng.standard_normal(
+                (b, cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
+            return {"image_embeds": img, "tokens": toks[:, :-1],
+                    "labels": toks[:, 1:]}
+        if cfg.kind == "audio":
+            toks = _tokens_for(step, cfg, rng, b, n + 1)
+            frames = rng.standard_normal(
+                (b, cfg.n_frames, cfg.d_model)).astype(np.float32)
+            return {"frames": frames, "tokens": toks[:, :-1],
+                    "labels": toks[:, 1:]}
+        if cfg.kind == "dit":
+            lat = rng.standard_normal((b, n, cfg.c_latent)).astype(np.float32)
+            txt = rng.standard_normal(
+                (b, cfg.n_text, cfg.d_model)).astype(np.float32)
+            noise = rng.standard_normal(
+                (b, n, cfg.c_latent)).astype(np.float32)
+            t = rng.random((b,)).astype(np.float32)
+            return {"latents": lat, "text": txt, "noise": noise, "time": t}
+        raise ValueError(cfg.kind)
+
+    def iterate(self, start_step: int = 0) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self[step]
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread double buffering around a batch iterator."""
+
+    def __init__(self, it: Iterator[dict], depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = it
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for item in self._it:
+                if self._stop.is_set():
+                    return
+                self._q.put(item)
+        finally:
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+
+
+def make_dataset(model_cfg, seq_len: int, global_batch: int, *,
+                 seed: int = 0, host_index: int = 0,
+                 host_count: int = 1) -> SyntheticDataset:
+    """Build the right synthetic stream for a model config."""
+    from repro.models import dit as D, encdec as E, transformer as T
+    if isinstance(model_cfg, D.DiTConfig):
+        cfg = DataConfig(seed=seed, global_batch=global_batch,
+                         seq_len=seq_len, kind="dit",
+                         d_model=model_cfg.d_model,
+                         c_latent=model_cfg.c_latent,
+                         n_text=model_cfg.n_text,
+                         host_index=host_index, host_count=host_count)
+    elif isinstance(model_cfg, E.EncDecConfig):
+        cfg = DataConfig(seed=seed, global_batch=global_batch,
+                         seq_len=seq_len, kind="audio",
+                         vocab_size=model_cfg.vocab_size,
+                         d_model=model_cfg.d_model,
+                         n_frames=model_cfg.n_frames,
+                         host_index=host_index, host_count=host_count)
+    elif isinstance(model_cfg, T.ModelConfig) and model_cfg.family == "vlm":
+        cfg = DataConfig(seed=seed, global_batch=global_batch,
+                         seq_len=seq_len, kind="vlm",
+                         vocab_size=model_cfg.vocab_size,
+                         d_model=model_cfg.d_model,
+                         n_image_tokens=model_cfg.prefix_len,
+                         host_index=host_index, host_count=host_count)
+    else:
+        cfg = DataConfig(seed=seed, global_batch=global_batch,
+                         seq_len=seq_len, kind="lm",
+                         vocab_size=model_cfg.vocab_size,
+                         host_index=host_index, host_count=host_count)
+    return SyntheticDataset(cfg)

@@ -1,0 +1,60 @@
+"""Cross-pod gradient compression: INT8-on-the-wire all-reduce.
+
+Standard pjit gradient reduction sends bf16 over the pod-crossing links
+(the slowest hop at 1000+ node scale).  ``int8_all_reduce_mean`` replaces
+the pod-axis piece with
+
+    scale  = psum(absmax) / 127          (a scalar per tensor — negligible)
+    chunks = all_to_all(int8(x/scale))   (N bytes on the wire)
+    local  = sum(dequant(chunks))        (each shard reduces its slice)
+    out    = all_gather(int8(local))     (N bytes on the wire)
+
+i.e. a reduce-scatter + all-gather decomposition where BOTH hops carry
+int8: 2N bytes total vs 4N for a bf16 ring all-reduce — a 2x cut in
+pod-crossing traffic.  The intermediate reduction is exact (int32-free:
+dequantised fp32 adds); the only loss is the two quantisation roundings,
+which error feedback (train_step) absorbs.
+
+Usable inside ``shard_map`` bodies where the pod axis is manual (see
+launch/dryrun.py --compress-pods and EXPERIMENTS §Perf for the measured
+collective-byte delta).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_all_reduce_mean(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean over ``axis_name`` with int8 wire format. x: any float array
+    whose leading dim is divisible by the axis size (pad upstream)."""
+    n = jax.lax.psum(1, axis_name)
+    orig_shape = x.shape
+    xf = x.astype(jnp.float32).reshape(-1)
+    pad = (-xf.size) % n
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad,), jnp.float32)])
+    # global scale so every shard quantises identically
+    amax = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    # reduce-scatter leg: all_to_all my chunks, locally reduce
+    chunks = q.reshape(n, -1)
+    recv = jax.lax.all_to_all(chunks, axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)
+    local = recv.astype(jnp.float32).sum(axis=0) * scale / n
+    # all-gather leg: re-quantise the reduced slice, gather int8
+    amax2 = jax.lax.pmax(jnp.max(jnp.abs(local)), axis_name)
+    scale2 = jnp.maximum(amax2, 1e-12) / 127.0
+    q2 = jnp.clip(jnp.round(local / scale2), -127, 127).astype(jnp.int8)
+    gathered = jax.lax.all_gather(q2, axis_name, axis=0, tiled=False)
+    out = gathered.astype(jnp.float32).reshape(-1) * scale2
+    if pad:
+        out = out[:-pad]
+    return out.reshape(orig_shape).astype(x.dtype)
+
+
+def bf16_all_reduce_mean(x: jax.Array, axis_name: str) -> jax.Array:
+    """Baseline for the comparison: plain psum mean (bf16 wire)."""
+    return (jax.lax.psum(x.astype(jnp.bfloat16), axis_name)
+            / jax.lax.psum(1, axis_name)).astype(x.dtype)

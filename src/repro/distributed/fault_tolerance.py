@@ -1,0 +1,86 @@
+"""Fault-tolerance policy pieces that sit above the Trainer.
+
+The container is single-process, so 'node failure' is modelled as an
+exception raised inside the step loop (tests inject it); what this module
+provides is the *policy* layer a 1000-node deployment wires to real
+signals:
+
+  * ``HeartbeatMonitor`` — per-host step heartbeats with a wall-clock
+    deadline; hosts that miss ``misses_allowed`` deadlines are declared
+    dead (on hardware this triggers the restart path that
+    trainer.run_with_restarts implements).
+  * ``StragglerPolicy``  — consumes the Trainer's per-step timing stats;
+    after ``strikes`` slow steps from the same host it recommends
+    eviction/data-reshard (logged decision object, applied by the caller).
+  * ``ElasticPlan``      — given old/new device counts, decides the new
+    mesh shape and whether the checkpoint can be resharded directly
+    (always true for our full-value checkpoints; see checkpoint/).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    deadline_s: float = 60.0
+    misses_allowed: int = 2
+
+    def __post_init__(self):
+        self._last: dict[int, float] = {}
+        self._misses: dict[int, int] = {}
+
+    def beat(self, host: int, now: Optional[float] = None):
+        self._last[host] = time.monotonic() if now is None else now
+        self._misses[host] = 0
+
+    def check(self, now: Optional[float] = None) -> list[int]:
+        """Returns hosts declared dead at ``now``."""
+        now = time.monotonic() if now is None else now
+        dead = []
+        for host, last in self._last.items():
+            if now - last > self.deadline_s:
+                self._misses[host] = self._misses.get(host, 0) + 1
+                self._last[host] = now
+                if self._misses[host] >= self.misses_allowed:
+                    dead.append(host)
+        return dead
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    factor: float = 3.0
+    strikes: int = 3
+
+    def __post_init__(self):
+        self._strikes: dict[int, int] = {}
+
+    def observe(self, host: int, step_time: float, ema: float) -> Optional[str]:
+        if ema <= 0:
+            return None
+        if step_time > self.factor * ema:
+            self._strikes[host] = self._strikes.get(host, 0) + 1
+            if self._strikes[host] >= self.strikes:
+                return f"evict:{host}"
+            return f"warn:{host}"
+        self._strikes[host] = 0
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_devices: int
+    new_devices: int
+
+    def new_mesh_shape(self, model_parallel: int = 16) -> tuple:
+        """Keep model-parallel fixed (it is set by HBM fit), give the rest
+        to data parallelism: elastic scaling changes only the DP extent."""
+        assert self.new_devices % model_parallel == 0
+        return (self.new_devices // model_parallel, model_parallel)
+
+    @property
+    def reshardable(self) -> bool:
+        # full-value manifest checkpoints restore onto any mesh
+        return True

@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for the SLA2 Pallas kernels.
+
+The kernels consume *routing indices* (``idx``/``valid`` from
+``router.route_indices``) rather than dense masks.  The oracles here rebuild
+the dense block mask from the indices and evaluate the same math with
+O(N^2) einsums, so every kernel output (forward O_s / LSE, backward
+dQ/dK/dV, linear-branch states) has an independently computed ground truth.
+
+``manual_backward`` replicates paper Algorithm 3 exactly (FP16-style backward
+from saved LSE + forward output), which is also what the Pallas backward
+kernel computes — including in QAT mode, where the forward ran low-bit but
+the backward uses the original full-precision tensors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as masklib
+from repro.core.attention import phi
+from repro.core.quant import fake_quant, smooth_k
+
+_EPS = 1e-12
+
+
+def mask_from_indices(idx: jax.Array, valid: jax.Array, t_n: int) -> jax.Array:
+    """(..., T_m, K_sel) indices -> dense {0,1} float mask (..., T_m, T_n)."""
+    one_hot = jax.nn.one_hot(idx, t_n, dtype=jnp.float32)
+    one_hot = one_hot * valid.astype(jnp.float32)[..., None]
+    return (one_hot.sum(axis=-2) > 0).astype(jnp.float32)
+
+
+def _scores(q, k, *, quant_bits: str):
+    d = q.shape[-1]
+    qq, kk = q, k
+    if quant_bits != "none":
+        kk = smooth_k(kk)
+        qq = fake_quant(qq, quant_bits)
+        kk = fake_quant(kk, quant_bits)
+    return jnp.einsum("...nd,...md->...nm", qq.astype(jnp.float32),
+                      kk.astype(jnp.float32)) / jnp.sqrt(d)
+
+
+def sparse_flash_ref(q, k, v, idx, valid, *, block_q: int, block_k: int,
+                     causal: bool, quant_bits: str = "none"):
+    """Oracle for the sparse-branch forward kernel.
+
+    Returns (o_s, lse):
+      o_s : (..., N, d) renormalised sparse attention output (P_s V).
+      lse : (..., N)    log-sum-exp over selected entries (Algorithm 2 L_i).
+    """
+    n_q, n_kv = q.shape[-2], k.shape[-2]
+    t_n = n_kv // block_k
+    mask_c = mask_from_indices(idx, valid, t_n)
+    m = masklib.expand_mask(mask_c, block_q, block_k)
+    s = _scores(q, k, quant_bits=quant_bits)
+    s = jnp.where(m > 0.5, s, masklib.NEG_INF)
+    if causal:
+        cm = masklib.token_causal_mask(n_q, n_kv)
+        s = jnp.where(cm, s, masklib.NEG_INF)
+    s_max = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e20)
+    p = jnp.exp(s - s_max)
+    l = p.sum(axis=-1, keepdims=True)
+    lse = (s_max + jnp.log(jnp.maximum(l, _EPS)))[..., 0]
+    p_norm = p / jnp.maximum(l, _EPS)
+    if quant_bits != "none":
+        p_norm = fake_quant(p_norm, quant_bits, (-1,))
+        v = fake_quant(v, quant_bits)
+    o = jnp.einsum("...nm,...md->...nd", p_norm, v.astype(jnp.float32))
+    return o.astype(q.dtype), lse
+
+
+def linear_branch_ref(q, k, v, idx, valid, *, block_q: int, block_k: int,
+                      causal: bool):
+    """Oracle for the linear branch over the complement of the routed blocks.
+
+    Causal semantics match the kernel: only kv blocks *fully* visible to every
+    query in a query block participate (partial blocks are forced into the
+    sparse branch by the router).  Returns (o_l, denom) where denom is the
+    row-wise normaliser phi(Q) . Z (zero when the complement is empty).
+    """
+    n_q, n_kv = q.shape[-2], k.shape[-2]
+    t_m, t_n = n_q // block_q, n_kv // block_k
+    mask_c = mask_from_indices(idx, valid, t_n)
+    comp = 1.0 - mask_c  # (..., T_m, T_n)
+    if causal:
+        i = jnp.arange(t_m)
+        n_full = (i * block_q + 1) // block_k  # blocks fully visible to row i
+        j = jnp.arange(t_n)
+        fully = j[None, :] < n_full[:, None]
+        comp = comp * fully.astype(comp.dtype)
+    qf, kf = phi(q), phi(k)
+    *lead, _, d = q.shape
+    kb = kf.reshape(*lead, t_n, block_k, d)
+    vb = v.astype(jnp.float32).reshape(*lead, t_n, block_k, d)
+    h = jnp.einsum("...jbd,...jbe->...jde", kb, vb)   # (..., T_n, d, d)
+    z = kb.sum(axis=-2)                                # (..., T_n, d)
+    h_i = jnp.einsum("...ij,...jde->...ide", comp, h)  # (..., T_m, d, d)
+    z_i = jnp.einsum("...ij,...jd->...id", comp, z)    # (..., T_m, d)
+    qb = qf.reshape(*lead, t_m, block_q, d)
+    num = jnp.einsum("...ibd,...ide->...ibe", qb, h_i)
+    den = jnp.einsum("...ibd,...id->...ib", qb, z_i)[..., None]
+    o = num / jnp.maximum(den, _EPS)
+    o = o.reshape(*lead, n_q, d)
+    den = den.reshape(*lead, n_q, 1)
+    return o.astype(q.dtype), den
+
+
+def combine_ref(o_s, o_l, den_l, alpha_tok):
+    """O = alpha . O_s + (1-alpha) . O_l, with alpha forced to 1 where the
+    linear complement is empty (den == 0): the row is then fully sparse."""
+    a = jnp.where(den_l > _EPS, alpha_tok, 1.0)
+    return (a * o_s.astype(jnp.float32)
+            + (1.0 - a) * o_l.astype(jnp.float32)).astype(o_s.dtype)
+
+
+def manual_backward(q, k, v, idx, valid, o_s, lse, do_s, *, block_q: int,
+                    block_k: int, causal: bool):
+    """Paper Algorithm 3 for the sparse branch, dense-math replica.
+
+    Always full precision (the QAT backward): P is recomputed from the
+    original Q, K and the saved LSE; D = rowsum(dO . O) uses the forward
+    output (quantized forward => its error enters only through lse/o_s)."""
+    n_q, n_kv = q.shape[-2], k.shape[-2]
+    t_n = n_kv // block_k
+    d = q.shape[-1]
+    mask_c = mask_from_indices(idx, valid, t_n)
+    m = masklib.expand_mask(mask_c, block_q, block_k)
+    if causal:
+        m = m * masklib.token_causal_mask(n_q, n_kv).astype(m.dtype)
+    s = jnp.einsum("...nd,...md->...nm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(d)
+    p = jnp.exp(s - lse[..., None]) * m  # rows with empty mask: lse=-inf -> 0
+    p = jnp.where(jnp.isfinite(p), p, 0.0)
+    do = do_s.astype(jnp.float32)
+    dv = jnp.einsum("...nm,...nd->...md", p, do)
+    dp = jnp.einsum("...nd,...md->...nm", do, v.astype(jnp.float32))
+    dd = jnp.sum(do * o_s.astype(jnp.float32), axis=-1, keepdims=True)
+    ds = p * (dp - dd)
+    dq = jnp.einsum("...nm,...md->...nd", ds, k.astype(jnp.float32)) / jnp.sqrt(d)
+    dk = jnp.einsum("...nm,...nd->...md", ds, q.astype(jnp.float32)) / jnp.sqrt(d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)

@@ -1,0 +1,269 @@
+"""Pallas TPU backward kernels for the SLA2 sparse branch (paper Algorithm 3).
+
+Per the paper's QAT design the backward is always full precision, recomputing
+P from the original (smoothed) Q/K and the forward LSE.
+
+Two kernels:
+
+* ``_dq_kernel`` — grid (BH, T_m, K_sel), the same routed-index structure as
+  the forward: dQ_i accumulates over the row's selected blocks in VMEM
+  scratch and is written once.
+
+* ``_dkv_kernel`` — the scatter direction.  TPU Pallas has no atomics, so we
+  make the writes *monotonic* instead: the (i, jj) -> j routed pairs are
+  counting-sorted by j (cheap jnp argsort outside the kernel, O(T_m K_sel)
+  ints), giving flat arrays ``js[bh, p]`` / ``is_[bh, p]``.  The grid is
+  (BH, P) and the dK/dV output BlockSpec follows ``js``; consecutive grid
+  steps that share j hit the same resident VMEM block, so accumulating into
+  the output ref is race-free by construction.  On the first visit of each j
+  the block is zeroed; kv blocks never selected by any row are zeroed outside
+  the kernel.  This replaces the paper's CUDA atomic-add pattern with a
+  TPU-native revisit schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# dQ
+# ---------------------------------------------------------------------------
+
+def _dq_kernel(idx_ref, valid_ref,
+               q_ref, k_ref, v_ref, do_ref, lse_ref, dd_ref,
+               dq_ref,
+               dq_acc,
+               *, block_q: int, block_k: int, k_sel: int, causal: bool,
+               prefix_len: int, sm_scale: float):
+    bh = pl.program_id(0)
+    i = pl.program_id(1)
+    jj = pl.program_id(2)
+
+    @pl.when(jj == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    j = idx_ref[bh, i, jj]
+    is_valid = valid_ref[bh, i, jj] == 1
+
+    @pl.when(is_valid)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0, 0].astype(jnp.float32)          # (b_q,)
+        dd = dd_ref[0, 0].astype(jnp.float32)            # (b_q,)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            rows = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            vis = rows >= cols
+            if prefix_len:
+                vis = jnp.logical_or(vis, cols < prefix_len)
+            s = jnp.where(vis, s, NEG_INF)
+        lse_safe = jnp.where(lse > NEG_INF * 0.5, lse, 0.0)
+        p = jnp.exp(s - lse_safe[:, None])
+        p = jnp.where((s > NEG_INF * 0.5) & (lse[:, None] > NEG_INF * 0.5),
+                      p, 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - dd[:, None]) * sm_scale
+        dq_acc[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jj == k_sel - 1)
+    def _finalize():
+        dq_ref[0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dK / dV
+# ---------------------------------------------------------------------------
+
+def _dkv_kernel(js_ref, is_ref, valid_ref,
+                q_ref, k_ref, v_ref, do_ref, lse_ref, dd_ref,
+                dk_ref, dv_ref,
+                *, block_q: int, block_k: int, causal: bool,
+                prefix_len: int, sm_scale: float):
+    bh = pl.program_id(0)
+    p_ = pl.program_id(1)
+
+    j = js_ref[bh, p_]
+    i = is_ref[bh, p_]
+    is_valid = valid_ref[bh, p_] == 1
+    first = jnp.logical_or(p_ == 0, js_ref[bh, jnp.maximum(p_ - 1, 0)] != j)
+
+    @pl.when(first)
+    def _zero():
+        dk_ref[0] = jnp.zeros_like(dk_ref[0])
+        dv_ref[0] = jnp.zeros_like(dv_ref[0])
+
+    @pl.when(is_valid)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0, 0].astype(jnp.float32)
+        dd = dd_ref[0, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            rows = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            vis = rows >= cols
+            if prefix_len:
+                vis = jnp.logical_or(vis, cols < prefix_len)
+            s = jnp.where(vis, s, NEG_INF)
+        lse_safe = jnp.where(lse > NEG_INF * 0.5, lse, 0.0)
+        p = jnp.exp(s - lse_safe[:, None])
+        p = jnp.where((s > NEG_INF * 0.5) & (lse[:, None] > NEG_INF * 0.5),
+                      p, 0.0)
+        dv_ref[0] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(dv_ref.dtype)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - dd[:, None]) * sm_scale
+        dk_ref[0] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(dk_ref.dtype)
+
+
+def sort_pairs(idx: jax.Array, valid: jax.Array):
+    """Counting-sort routed (i, jj) pairs by kv block id.
+
+    idx, valid: (BH, T_m, K_sel).  Returns (js, is_, vs) each (BH, P) with
+    P = T_m * K_sel, sorted ascending by j (invalid pairs keep their j, which
+    duplicates a real selected block of the same row — harmless since they
+    are skipped, and they never introduce a visit to an unselected block)."""
+    bh, t_m, k_sel = idx.shape
+    p = t_m * k_sel
+    js = idx.reshape(bh, p)
+    is_ = jnp.broadcast_to(jnp.arange(t_m, dtype=jnp.int32)[:, None],
+                           (t_m, k_sel)).reshape(1, p)
+    is_ = jnp.broadcast_to(is_, (bh, p))
+    vs = valid.reshape(bh, p).astype(jnp.int32)
+    order = jnp.argsort(js, axis=-1, stable=True)
+    take = lambda x: jnp.take_along_axis(x, order, axis=-1)
+    return take(js).astype(jnp.int32), take(is_).astype(jnp.int32), take(vs)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_k", "causal", "prefix_len",
+                     "interpret"))
+def sparse_flash_bwd(q, k, v, idx, valid, o, lse, do, *, block_q: int,
+                     block_k: int, causal: bool, prefix_len: int = 0,
+                     interpret: bool | None = None):
+    """Backward of the sparse branch. Returns (dq, dk, dv).
+
+    Always full precision (QAT backward); `lse`/`o` come from the (possibly
+    low-bit) forward.  `k` must be the same (smoothed) tensor the forward saw.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bh, n_q, d = q.shape
+    n_kv = k.shape[1]
+    t_m, t_n = n_q // block_q, n_kv // block_k
+    k_sel = idx.shape[-1]
+    sm_scale = 1.0 / (d ** 0.5)
+
+    dd = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    lse_b = lse.reshape(bh, t_m, block_q)
+    dd_b = dd.reshape(bh, t_m, block_q)
+    validi = valid.astype(jnp.int32)
+
+    # ---- dQ ----
+    dq_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bh, t_m, k_sel),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, jj, idx, val: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, i, jj, idx, val: (b, idx[b, i, jj], 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, i, jj, idx, val: (b, idx[b, i, jj], 0)),
+            pl.BlockSpec((1, block_q, d), lambda b, i, jj, idx, val: (b, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, i, jj, idx, val: (b, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, i, jj, idx, val: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, jj, idx, val: (b, i, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+    )
+    (dq,) = pl.pallas_call(
+        functools.partial(_dq_kernel, block_q=block_q, block_k=block_k,
+                          k_sel=k_sel, causal=causal, prefix_len=prefix_len,
+                          sm_scale=sm_scale),
+        grid_spec=dq_spec,
+        out_shape=[jax.ShapeDtypeStruct((bh, n_q, d), q.dtype)],
+        interpret=interpret,
+        name="sla2_sparse_bwd_dq",
+    )(idx, validi, q, k, v, do, lse_b, dd_b)
+
+    # ---- dK / dV ----
+    js, is_, vs = sort_pairs(idx, validi)
+    p_total = js.shape[-1]
+    dkv_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(bh, p_total),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d),
+                         lambda b, p, js, is_, vs: (b, is_[b, p], 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, p, js, is_, vs: (b, js[b, p], 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, p, js, is_, vs: (b, js[b, p], 0)),
+            pl.BlockSpec((1, block_q, d),
+                         lambda b, p, js, is_, vs: (b, is_[b, p], 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, p, js, is_, vs: (b, is_[b, p], 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, p, js, is_, vs: (b, is_[b, p], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, p, js, is_, vs: (b, js[b, p], 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, p, js, is_, vs: (b, js[b, p], 0)),
+        ],
+    )
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, block_q=block_q, block_k=block_k,
+                          causal=causal, prefix_len=prefix_len,
+                          sm_scale=sm_scale),
+        grid_spec=dkv_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n_kv, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, n_kv, d), jnp.float32),
+        ],
+        interpret=interpret,
+        name="sla2_sparse_bwd_dkv",
+    )(js, is_, vs, q, k, v, do, lse_b, dd_b)
+
+    # zero kv blocks never visited by any valid pair
+    visited = jax.vmap(
+        lambda jr, vr: jnp.zeros((t_n,), jnp.int32).at[jr].add(vr)
+    )(js, vs) > 0                                       # (BH, T_n)
+    gate = jnp.repeat(visited, block_k, axis=-1)[..., None]
+    dk = jnp.where(gate, dk, 0.0).astype(q.dtype)
+    dv = jnp.where(gate, dv, 0.0).astype(q.dtype)
+    return dq, dk, dv

@@ -1,0 +1,204 @@
+"""Pallas TPU forward kernel for the SLA2 sparse branch (paper Algorithm 2).
+
+Design (TPU adaptation of the paper's CUDA kernel):
+
+  * grid = (B*H, T_m, K_sel): the router's Top-k selection is materialised as
+    an index array ``idx[bh, i, jj] -> j`` (sorted ascending) which is fed to
+    Pallas as a *scalar-prefetch* operand.  The K/V BlockSpec index_maps read
+    it, so K/V tiles of unselected blocks are never fetched from HBM: both
+    compute and memory traffic scale with (1 - sparsity).
+  * online softmax state (m, l, acc) lives in VMEM scratch and persists over
+    the innermost jj axis; the output block (and LSE) is written once at
+    jj == K_sel - 1.
+  * QAT low-bit mode quantizes tiles on the fly: per-tile symmetric INT8 for
+    Q/K (K is pre-smoothed outside the kernel), fixed-scale INT8 for the
+    post-exp P tile (values in (0, 1]) and per-tile INT8 for V, so both
+    matmuls run INT8xINT8->INT32 on the MXU.  FP8 (e4m3) variant included.
+  * causal mode masks the straddling (diagonal) tiles in-register; fully
+    visible tiles skip the mask.  Invalid (padding) index entries are skipped
+    via ``pl.when`` — their DMA reads duplicate an already-selected block, so
+    they cost no extra HBM traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+INT8_MAX = 127.0
+FP8_MAX = 448.0
+
+
+def _quantize_tile(x, bits: str):
+    """Per-tile symmetric quantization; returns (codes, scale)."""
+    ax = jnp.max(jnp.abs(x))
+    if bits == "int8":
+        s = jnp.maximum(ax / INT8_MAX, 1e-8)
+        q = jnp.clip(jnp.round(x / s), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+        return q, s
+    if bits == "fp8":
+        s = jnp.maximum(ax / FP8_MAX, 1e-12)
+        return (x / s).astype(jnp.float8_e4m3fn), s
+    raise ValueError(bits)
+
+
+def _qdot(a, a_s, b, b_s, *, transpose_b: bool):
+    """Low-bit matmul with fp32 dequantized result."""
+    if transpose_b:
+        dim_nums = (((1,), (1,)), ((), ()))
+    else:
+        dim_nums = (((1,), (0,)), ((), ()))
+    if a.dtype == jnp.int8:
+        out = jax.lax.dot_general(a, b, dim_nums,
+                                  preferred_element_type=jnp.int32)
+        return out.astype(jnp.float32) * (a_s * b_s)
+    out = jax.lax.dot_general(a.astype(jnp.float32), b.astype(jnp.float32),
+                              dim_nums, preferred_element_type=jnp.float32)
+    return out * (a_s * b_s)
+
+
+def _fwd_kernel(idx_ref, valid_ref,      # scalar prefetch
+                q_ref, k_ref, v_ref,     # inputs
+                o_ref, lse_ref,          # outputs
+                acc, m_i, l_i,           # VMEM scratch
+                *, block_q: int, block_k: int, k_sel: int,
+                causal: bool, prefix_len: int, quant_bits: str,
+                sm_scale: float):
+    bh = pl.program_id(0)
+    i = pl.program_id(1)
+    jj = pl.program_id(2)
+
+    @pl.when(jj == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    j = idx_ref[bh, i, jj]
+    is_valid = valid_ref[bh, i, jj] == 1
+
+    @pl.when(is_valid)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)   # (b_q, d)
+        k = k_ref[0].astype(jnp.float32)   # (b_k, d)
+        if quant_bits == "none":
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * sm_scale
+        else:
+            q_c, q_s = _quantize_tile(q, quant_bits)
+            k_c, k_s = _quantize_tile(k, quant_bits)
+            s = _qdot(q_c, q_s, k_c, k_s, transpose_b=True) * sm_scale
+
+        if causal:
+            rows = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            vis = rows >= cols
+            if prefix_len:
+                vis = jnp.logical_or(vis, cols < prefix_len)
+            s = jnp.where(vis, s, NEG_INF)
+
+        m_prev = m_i[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(m_new > NEG_INF * 0.5, m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(s > NEG_INF * 0.5, p, 0.0)
+        corr = jnp.exp(jnp.where(m_prev > NEG_INF * 0.5, m_prev, m_safe)
+                       - m_safe)
+        l_i[...] = l_i[...] * corr + p.sum(axis=-1)
+
+        v = v_ref[0].astype(jnp.float32)
+        if quant_bits == "none":
+            o_tmp = jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        elif quant_bits == "int8":
+            # P in [0, 1]: fixed scale 1/127 keeps full int8 range
+            p_c = jnp.round(p * INT8_MAX).astype(jnp.int8)
+            v_c, v_s = _quantize_tile(v, "int8")
+            o_tmp = _qdot(p_c, 1.0 / INT8_MAX, v_c, v_s, transpose_b=False)
+        else:  # fp8
+            p_c, p_s = _quantize_tile(p, "fp8")
+            v_c, v_s = _quantize_tile(v, "fp8")
+            o_tmp = _qdot(p_c, p_s, v_c, v_s, transpose_b=False)
+
+        acc[...] = acc[...] * corr[:, None] + o_tmp
+        m_i[...] = m_new
+
+    @pl.when(jj == k_sel - 1)
+    def _finalize():
+        l = l_i[...]
+        l_safe = jnp.maximum(l, 1e-20)
+        o_ref[0] = (acc[...] / l_safe[:, None]).astype(o_ref.dtype)
+        m = m_i[...]
+        lse = jnp.where(m > NEG_INF * 0.5, m + jnp.log(l_safe), NEG_INF)
+        lse_ref[0, 0] = lse.astype(lse_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_k", "causal", "prefix_len",
+                     "quant_bits", "interpret"))
+def sparse_flash_fwd(q, k, v, idx, valid, *, block_q: int, block_k: int,
+                     causal: bool, prefix_len: int = 0,
+                     quant_bits: str = "none",
+                     interpret: bool | None = None):
+    """Block-sparse flash attention forward.
+
+    q        : (BH, N_q, d)
+    k, v     : (BH, N_kv, d)
+    idx      : (BH, T_m, K_sel) int32 selected kv-block ids (sorted asc)
+    valid    : (BH, T_m, K_sel) int32 {0,1} padding flags
+    returns  : o_s (BH, N_q, d), lse (BH, T_m, b_q) flattened to (BH, N_q)
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bh, n_q, d = q.shape
+    n_kv = k.shape[1]
+    t_m = n_q // block_q
+    k_sel = idx.shape[-1]
+    sm_scale = 1.0 / (d ** 0.5)
+
+    grid = (bh, t_m, k_sel)
+    kernel = functools.partial(
+        _fwd_kernel, block_q=block_q, block_k=block_k, k_sel=k_sel,
+        causal=causal, prefix_len=prefix_len, quant_bits=quant_bits,
+        sm_scale=sm_scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, jj, idx, val: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, i, jj, idx, val: (b, idx[b, i, jj], 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, i, jj, idx, val: (b, idx[b, i, jj], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, jj, idx, val: (b, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, i, jj, idx, val: (b, i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n_q, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, t_m, block_q), jnp.float32),
+        ],
+        interpret=interpret,
+        name=f"sla2_sparse_fwd_{quant_bits}",
+    )(idx, valid.astype(jnp.int32), q, k, v)
+    return o, lse.reshape(bh, n_q)

@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init), so this module has no __future__ imports.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, WITHOUT allocating any real tensors:
+
+    compiled = jax.jit(step, ...).lower(**ShapeDtypeStructs).compile()
+    memory_analysis()   -> bytes/device   (proves the cell fits HBM)
+    cost_analysis()     -> HLO FLOPs / bytes accessed (roofline terms)
+    compiled.as_text()  -> post-SPMD HLO: the collective schedule
+                           (all-gather/all-reduce/reduce-scatter/all-to-all
+                           instruction list with shapes -> collective bytes)
+
+Results are cached as JSON under results/dryrun/ so the 40-cell x 2-mesh
+sweep is resumable and can run in parallel shards:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_14b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.configs.wan_dit_1_3b import DIT_SHAPES
+from repro.distributed import sharding as shardlib
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# archs whose params are (near-)fully replicated: the model axis carries
+# batch instead of TP (see sharding.batch_specs pure_dp ladder)
+_PURE_DP = {"whisper_tiny"}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind from post-SPMD HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+(\w[\w\-]*)\(", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next((k for k in _COLLECTIVES
+                     if op == k.replace("-", "-") or op.startswith(k)), None)
+        if kind is None:
+            continue
+        nbytes = 0
+        # result type may be a tuple: sum every shaped component
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _sds(tree, shardings=None):
+    """Attach shardings to a ShapeDtypeStruct tree."""
+    if shardings is None:
+        return tree
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings)
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, sp: bool = True,
+               depth_groups=None, cfg_overrides=None, microbatches=None):
+    """Returns (fn, example_args) ready for jit(...).lower(*args).
+
+    depth_groups: if set, build a REDUCED-depth probe (first_kinds +
+    depth_groups x layer_kinds) for the cost-extrapolation pass."""
+    shapes = DIT_SHAPES if arch == "wan_dit_1_3b" else SHAPES
+    sh = shapes[shape_name]
+    seq, gbatch, mode = sh["seq_len"], sh["global_batch"], sh["mode"]
+
+    overrides = {}
+    if arch not in ("wan_dit_1_3b", "whisper_tiny", "xlstm_350m"):
+        overrides["sp_axis"] = "model" if sp else None
+    if depth_groups is not None:
+        if arch == "whisper_tiny":
+            overrides.update(n_enc_layers=depth_groups,
+                             n_dec_layers=depth_groups)
+        elif arch == "wan_dit_1_3b":
+            overrides["n_layers"] = depth_groups
+        else:
+            base = get_config(arch)
+            overrides["n_layers"] = (len(base.first_kinds)
+                                     + depth_groups * len(base.layer_kinds))
+    if cfg_overrides:
+        overrides.update(cfg_overrides)
+    cfg = get_config(arch, **overrides)
+    model = build_model(cfg)
+
+    if mode == "train":
+        # microbatch the giants: 4 grad-accum slices keep the per-device
+        # activation working set (FSDP weight gathers + remat recompute)
+        # inside 16 GiB HBM at d_model=16k (EXPERIMENTS.md SPerf)
+        mb = microbatches if microbatches is not None else (
+            4 if arch in ("llama3_405b", "llama4_maverick_400b") else 1)
+        tcfg = TrainConfig(optimizer=AdamWConfig(state_dtype="bfloat16"),
+                           microbatches=mb)
+        state_shape, state_sh = _train_state_specs(model, tcfg, mesh)
+        batch_shape = model.train_inputs(seq, gbatch)
+        batch_sh = shardlib.logical_to_shardings(
+            shardlib.batch_specs(batch_shape, mesh,
+                                 pure_dp=arch in _PURE_DP), mesh)
+        # donate the train state: params/opt buffers are reused in place
+        # (what a real trainer does; halves resident state bytes)
+        step = make_train_step(model, tcfg, mesh=None, donate=True)
+        args = (_sds(state_shape, state_sh), _sds(batch_shape, batch_sh))
+        return step, args
+
+    # serving modes
+    if mode == "prefill":
+        batch_shape = model.prefill_inputs(seq, gbatch)
+    else:
+        batch_shape = model.decode_inputs(gbatch)
+    batch_sh = shardlib.logical_to_shardings(
+        shardlib.batch_specs(batch_shape, mesh,
+                             pure_dp=arch in _PURE_DP), mesh)
+    params_shape = model.abstract_params()
+    params_sh = shardlib.logical_to_shardings(
+        shardlib.param_specs(params_shape, mesh), mesh)
+    # decode caches sized to the context length + headroom; the headroom is
+    # 512 tokens (a multiple of every block size AND of the 512-chip mesh)
+    # so the cache sequence axis stays evenly shardable — an indivisible
+    # axis makes _fit_to_shape silently REPLICATE the whole KV cache
+    max_len = seq + 512
+    cache_shape = model.abstract_caches(gbatch, max_len)
+    cache_sh = shardlib.logical_to_shardings(
+        shardlib.cache_specs(cache_shape, mesh), mesh)
+
+    if mode == "prefill":
+        fn = model.prefill
+    else:
+        fn = model.decode
+    # donate the caches: decode updates them in place (no double buffer)
+    fn = _donate_caches(fn)
+    args = (_sds(params_shape, params_sh), _sds(batch_shape, batch_sh),
+            _sds(cache_shape, cache_sh))
+    return fn, args
+
+
+def _donate_caches(fn):
+    fn._donate = (2,)
+    return fn
+
+
+def full_groups(arch: str) -> int:
+    """Scan trip count of the full config (for cost extrapolation)."""
+    cfg = get_config(arch)
+    if arch == "whisper_tiny":
+        return cfg.n_dec_layers          # enc and dec scale together
+    if arch == "wan_dit_1_3b":
+        return cfg.n_layers
+    return cfg.n_groups
+
+
+def _probe_costs(arch, shape_name, mesh, *, sp, depth_groups,
+                 cfg_overrides=None, microbatches=None):
+    """Compile a reduced-depth cell with ALL loops unrolled; return
+    (flops, bytes, collectives-dict) per device."""
+    from repro.core import maps
+    # q_chunk / loss_chunk are pure memory-chunking (FLOP-invariant): one
+    # giant chunk keeps the unrolled probe HLO small and compiles ~5x faster
+    probe_over = dict(cfg_overrides or {})
+    probe_over.setdefault("q_chunk", 1_000_000)
+    if arch != "wan_dit_1_3b":
+        probe_over.setdefault("loss_chunk", 1_000_000)
+    with maps.accounting_mode():
+        fn, args = build_cell(arch, shape_name, mesh, sp=sp,
+                              depth_groups=depth_groups,
+                              cfg_overrides=probe_over,
+                              microbatches=microbatches)
+        donate = getattr(fn, "_donate", ())
+        with mesh:
+            compiled = jax.jit(fn, donate_argnums=donate).lower(
+                *args).compile()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+    return (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
+            parse_collectives(hlo))
+
+
+def extrapolated_costs(arch, shape_name, mesh, *, sp=True,
+                       cfg_overrides=None, microbatches=None):
+    """total = f(1 group) + (G - 1) * (f(2 groups) - f(1 group)).
+
+    Valid because accounting_mode() unrolls every inner loop, so both
+    probes are exactly counted, and the per-group cost is depth-linear.
+    (The sLSTM time recurrence stays looped — never_unroll — and is
+    corrected analytically in the roofline notes.)"""
+    g = full_groups(arch)
+    kw = dict(sp=sp, cfg_overrides=cfg_overrides, microbatches=microbatches)
+    f1, b1, c1 = _probe_costs(arch, shape_name, mesh, depth_groups=1, **kw)
+    if g == 1:
+        return {"flops": f1, "bytes_accessed": b1}, c1
+    f2, b2, c2 = _probe_costs(arch, shape_name, mesh, depth_groups=2, **kw)
+    # per-group delta clamped at 0: XLA may CSE/fuse the 2-group build
+    # slightly differently, and a negative delta would extrapolate to
+    # negative totals at G=126
+    lin = lambda a, b: a + (g - 1) * max(b - a, 0.0)
+    coll = {}
+    for k in c1:
+        if k == "total_bytes":
+            coll[k] = lin(c1[k], c2[k])
+        else:
+            coll[k] = {"count": int(lin(c1[k]["count"], c2[k]["count"])),
+                       "bytes": lin(c1[k]["bytes"], c2[k]["bytes"])}
+    return {"flops": lin(f1, f2), "bytes_accessed": lin(b1, b2)}, coll
+
+
+def _train_state_specs(model, tcfg, mesh):
+    key = jax.random.PRNGKey(0)
+    state_shape = jax.eval_shape(
+        lambda: init_train_state(model, key, tcfg))
+    p_specs = shardlib.param_specs(state_shape["params"], mesh)
+    specs = {"params": p_specs,
+             "opt": {"m": p_specs, "v": p_specs,
+                     "step": jax.sharding.PartitionSpec()}}
+    sh = shardlib.logical_to_shardings(specs, mesh)
+    return state_shape, sh
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             save_dir: str = "results/dryrun", force: bool = False,
+             sp: bool = True, cfg_overrides=None, microbatches=None,
+             variant: str = "") -> dict:
+    os.makedirs(save_dir, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{mesh_kind}" + ("" if sp else "_nosp")         + (f"_{variant}" if variant else "")
+    path = os.path.join(save_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "devices": int(np.prod(list(mesh.shape.values()))),
+              "status": "error"}
+    try:
+        fn, args = build_cell(arch, shape_name, mesh, sp=sp,
+                              cfg_overrides=cfg_overrides,
+                              microbatches=microbatches)
+        donate = getattr(fn, "_donate", ())
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll_loop = parse_collectives(hlo)
+        # exact FLOP/byte/collective totals via unrolled reduced-depth
+        # probes (XLA cost_analysis counts while bodies once). The roofline
+        # table is single-pod only, so multi-pod cells skip the probes
+        # (the full-depth compile above is their pass/fail + memory proof).
+        if mesh_kind == "single":
+            cost_x, coll = extrapolated_costs(
+                arch, shape_name, mesh, sp=sp, cfg_overrides=cfg_overrides,
+                microbatches=microbatches)
+        else:
+            cost_x = {"flops": cost.get("flops", 0.0),
+                      "bytes_accessed": cost.get("bytes accessed", 0.0)}
+            coll = coll_loop
+        result.update({
+            "status": "ok",
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+                # live args + peak arena, minus donated (aliased) buffers
+                "peak_bytes_per_device":
+                    getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "peak_memory_in_bytes",
+                              getattr(mem, "temp_size_in_bytes", 0))
+                    - getattr(mem, "alias_size_in_bytes", 0),
+            },
+            "cost": cost_x,
+            "cost_loop_body": {
+                "flops": cost.get("flops", 0.0),
+                "bytes_accessed": cost.get("bytes accessed", 0.0)},
+            "collectives": coll,
+            "collectives_loop_body": coll_loop,
+        })
+    except Exception as e:   # noqa: BLE001 — sweep must survive one bad cell
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def cells_for(arch: str):
+    if arch == "wan_dit_1_3b":
+        return list(DIT_SHAPES)
+    return list(SHAPES)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence parallelism (perf ablation)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        todo = [(a, s) for a in ARCH_NAMES for s in cells_for(a)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in todo:
+        for mk in meshes:
+            r = run_cell(arch, shape, mk, save_dir=args.out,
+                         force=args.force, sp=not args.no_sp)
+            ok = r["status"] == "ok"
+            failures += 0 if ok else 1
+            mem = r.get("memory", {}).get("peak_bytes_per_device", 0)
+            print(f"[{r['status']:5s}] {arch:24s} {shape:12s} {mk:6s} "
+                  f"compile={r.get('compile_s', '-'):>6}s "
+                  f"peak/dev={mem / 2**30:7.2f}GiB "
+                  f"flops={r.get('cost', {}).get('flops', 0):.3e} "
+                  f"coll={r.get('collectives', {}).get('total_bytes', 0):.3e}B"
+                  if ok else
+                  f"[error] {arch} {shape} {mk}: {r.get('error')}")
+            sys.stdout.flush()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

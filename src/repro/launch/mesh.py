@@ -1,0 +1,37 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any jax
+initialisation).
+
+    single-pod : (data=16, model=16)           = 256 chips (one v5e pod)
+    multi-pod  : (pod=2, data=16, model=16)    = 512 chips
+
+"pod" folds into data parallelism (distributed/sharding.dp_axes); "model"
+carries TP/EP/SP and stays inside a pod (ICI); only the gradient
+all-reduce crosses pods (DCN), which is also where the int8 gradient
+compression (distributed/compression.py) applies.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has — smoke tests and examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline (launch/roofline.py)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+PEAK_FLOPS_INT8 = 394e12        # MXU int8 path
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per-chip usable)
+HBM_BYTES = 16 * 1024 ** 3      # 16 GiB per chip

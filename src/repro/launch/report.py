@@ -1,0 +1,67 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from results/.
+
+    PYTHONPATH=src python -m repro.launch.report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+
+def dryrun_table() -> str:
+    rows = []
+    for path in sorted(glob.glob("results/dryrun/*.json")):
+        if "_nosp" in path:
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAIL | — | — | — |")
+            continue
+        mem = r["memory"]["peak_bytes_per_device"] / 2 ** 30
+        coll = r["collectives"]
+        sched = ", ".join(
+            f"{k}×{v['count']}" for k, v in coll.items()
+            if isinstance(v, dict) and v.get("count"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {mem:.2f} | {r['cost']['flops']:.3g} "
+            f"| {coll['total_bytes']:.3g} | {sched} |")
+    head = ("| arch | shape | mesh | compile | peak GiB/dev | "
+            "HLO FLOPs/dev | coll bytes/dev | collective schedule |\n"
+            "|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(sorted(rows))
+
+
+def main():
+    table = dryrun_table()
+    roof = ""
+    if os.path.exists("results/roofline.md"):
+        roof = open("results/roofline.md").read()
+    md = open("EXPERIMENTS.md").read()
+    md = re.sub(
+        r"\(table inserted by results/dryrun[^)]*\)",
+        "", md)
+    md = md.replace(
+        "## §Dry-run\n",
+        "## §Dry-run\n", 1)
+    # insert/replace the dry-run table after its section marker
+    marker = "one JSON per\ncell under results/dryrun/"
+    if "| arch | shape | mesh | compile |" not in md:
+        md = md.replace(
+            "(table inserted by results/dryrun — see §Roofline for the "
+            "per-cell list)", table)
+        md = md.replace("(table inserted after the sweep)",
+                        roof or "(pending)")
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(md)
+    print("EXPERIMENTS.md updated "
+          f"({table.count(chr(10))} dry-run rows, "
+          f"{roof.count(chr(10))} roofline rows)")
+
+
+if __name__ == "__main__":
+    main()

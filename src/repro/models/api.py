@@ -1,0 +1,155 @@
+"""Unified model API — one handle per architecture for train/serve/dry-run.
+
+``build_model(cfg)`` dispatches on the config type and returns a ``Model``
+with a uniform surface:
+
+    model.init(key)                      -> params
+    model.loss(params, batch)            -> (loss, metrics)
+    model.train_inputs(seq, batch)       -> {name: ShapeDtypeStruct}
+    model.init_caches(batch, max_len)    -> cache pytree (concrete zeros)
+    model.prefill(params, batch, caches) -> (logits, caches)
+    model.decode(params, batch, caches)  -> (logits, caches)
+    model.prefill_inputs(seq, batch)     -> specs for the prefill batch
+    model.decode_inputs(batch)           -> specs for one decode step
+
+The *_inputs methods produce ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) — exactly what ``jit(...).lower()`` wants for the
+multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dit as D
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.models import vlm as V
+
+f32 = jnp.float32
+bf16 = jnp.bfloat16
+i32 = jnp.int32
+Spec = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Model:
+    kind: str                     # lm | vlm | audio | dit
+    cfg: Any
+    init: Callable
+    loss: Callable
+    train_inputs: Callable
+    init_caches: Optional[Callable] = None
+    prefill: Optional[Callable] = None
+    decode: Optional[Callable] = None
+    prefill_inputs: Optional[Callable] = None
+    decode_inputs: Optional[Callable] = None
+
+    def abstract_params(self, key=None):
+        k = jax.random.PRNGKey(0) if key is None else key
+        return jax.eval_shape(self.init, k)
+
+    def abstract_caches(self, batch: int, max_len: int):
+        return jax.eval_shape(
+            lambda: self.init_caches(batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+
+def _lm_model(cfg: T.ModelConfig) -> Model:
+    return Model(
+        kind="lm", cfg=cfg,
+        init=lambda key: T.init_model(key, cfg),
+        loss=lambda p, b: T.lm_loss(p, cfg, b),
+        train_inputs=lambda seq, batch: {
+            "tokens": Spec((batch, seq), i32),
+            "labels": Spec((batch, seq), i32)},
+        init_caches=lambda batch, max_len: T.init_caches(cfg, batch, max_len),
+        prefill=lambda p, b, c: T.prefill(p, cfg, b["tokens"], c),
+        decode=lambda p, b, c: T.decode_step(p, cfg, b["token"], c),
+        prefill_inputs=lambda seq, batch: {"tokens": Spec((batch, seq), i32)},
+        decode_inputs=lambda batch: {"token": Spec((batch,), i32)},
+    )
+
+
+def _vlm_model(cfg: T.ModelConfig) -> Model:
+    n_img = cfg.prefix_len
+    return Model(
+        kind="vlm", cfg=cfg,
+        init=lambda key: T.init_model(key, cfg),
+        loss=lambda p, b: V.vlm_loss(p, cfg, b),
+        train_inputs=lambda seq, batch: {
+            "image_embeds": Spec((batch, n_img, cfg.d_model), bf16),
+            "tokens": Spec((batch, seq - n_img), i32),
+            "labels": Spec((batch, seq - n_img), i32)},
+        init_caches=lambda batch, max_len: T.init_caches(cfg, batch, max_len),
+        prefill=lambda p, b, c: V.vlm_prefill(p, cfg, b["image_embeds"],
+                                              b["tokens"], c),
+        decode=lambda p, b, c: V.vlm_decode_step(p, cfg, b["token"], c),
+        prefill_inputs=lambda seq, batch: {
+            "image_embeds": Spec((batch, n_img, cfg.d_model), bf16),
+            "tokens": Spec((batch, seq - n_img), i32)},
+        decode_inputs=lambda batch: {"token": Spec((batch,), i32)},
+    )
+
+
+def _audio_model(cfg: E.EncDecConfig) -> Model:
+    return Model(
+        kind="audio", cfg=cfg,
+        init=lambda key: E.init_encdec(key, cfg),
+        loss=lambda p, b: E.encdec_loss(p, cfg, b),
+        train_inputs=lambda seq, batch: {
+            "frames": Spec((batch, cfg.n_frames, cfg.d_model), bf16),
+            "tokens": Spec((batch, seq), i32),
+            "labels": Spec((batch, seq), i32)},
+        init_caches=lambda batch, max_len: E.init_encdec_caches(
+            cfg, batch, max_len),
+        prefill=lambda p, b, c: E.prefill(p, cfg, b["frames"], b["tokens"],
+                                          c),
+        decode=lambda p, b, c: E.decode_step(p, cfg, b["token"], c),
+        prefill_inputs=lambda seq, batch: {
+            "frames": Spec((batch, cfg.n_frames, cfg.d_model), bf16),
+            "tokens": Spec((batch, seq), i32)},
+        decode_inputs=lambda batch: {"token": Spec((batch,), i32)},
+    )
+
+
+def _dit_model(cfg: D.DiTConfig) -> Model:
+    def denoise(p, b, _c):
+        x = D.denoise_step(p, cfg, b["latents"], b["text"], b["time"],
+                           b["dt"])
+        return x, _c
+
+    return Model(
+        kind="dit", cfg=cfg,
+        init=lambda key: D.init_dit(key, cfg),
+        loss=lambda p, b: D.flow_matching_loss(p, cfg, b),
+        train_inputs=lambda seq, batch: {
+            "latents": Spec((batch, seq, cfg.c_latent), f32),
+            "text": Spec((batch, cfg.n_text, cfg.d_model), bf16),
+            "noise": Spec((batch, seq, cfg.c_latent), f32),
+            "time": Spec((batch,), f32)},
+        init_caches=lambda batch, max_len: {},   # diffusion: no KV cache
+        prefill=denoise,                          # one denoise step == serve
+        decode=denoise,
+        prefill_inputs=lambda seq, batch: {
+            "latents": Spec((batch, seq, cfg.c_latent), f32),
+            "text": Spec((batch, cfg.n_text, cfg.d_model), bf16),
+            "time": Spec((batch,), f32), "dt": Spec((batch,), f32)},
+        decode_inputs=None,
+    )
+
+
+def build_model(cfg) -> Model:
+    if isinstance(cfg, D.DiTConfig):
+        return _dit_model(cfg)
+    if isinstance(cfg, E.EncDecConfig):
+        return _audio_model(cfg)
+    if isinstance(cfg, T.ModelConfig):
+        if cfg.family == "vlm":
+            return _vlm_model(cfg)
+        return _lm_model(cfg)
+    raise TypeError(f"unknown config type: {type(cfg)}")

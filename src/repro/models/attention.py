@@ -1,0 +1,364 @@
+"""Model-level attention: projections, RoPE, GQA, mechanism dispatch, caches.
+
+Mechanisms:
+  * ``full``        — dense softmax attention (FlashAttn2-equivalent math)
+  * ``sla2``        — the paper's sparse-linear attention (core/ + kernels/)
+  * ``sla``         — SLA baseline (heuristic router + proj(O_l))
+  * ``sparse_only`` — VSA/VMoBA-like block-sparse only
+
+Decode keeps a *block cache*: raw K/V plus, for SLA2, the per-block router
+keys (pooled K) and linear-branch states (h_j, z_j) with a running total, so
+one decode step costs O(K_sel * b_k * d + d^2) regardless of context length —
+this is what makes the 500k-token decode shape sub-quadratic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as core_attn
+from repro.core import masks as masklib
+from repro.core import sla as slalib
+from repro.core import sla2 as sla2lib
+from repro.core.attention import phi
+from repro.core.router import RouterConfig
+from repro.core.sla2 import SLA2Config
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    mechanism: str = "full"            # full | sla2 | sla | sparse_only
+    causal: bool = True
+    prefix_len: int = 0                # prefix-LM (PaliGemma)
+    sliding_window: Optional[int] = None
+    qk_norm: bool = False              # qwen3
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    # SLA2 knobs
+    block_q: int = 128
+    block_k: int = 64
+    k_frac: float = 0.05
+    quant_bits: str = "int8"
+    sla2_impl: str = "kernel"
+    n_q_blocks: int = 32               # alpha table size at init
+
+    def router_config(self) -> RouterConfig:
+        return RouterConfig(
+            block_q=self.block_q, block_k=self.block_k, k_frac=self.k_frac,
+            causal=self.causal, prefix_len=self.prefix_len,
+            sliding_window=self.sliding_window)
+
+    def sla2_config(self) -> SLA2Config:
+        return SLA2Config(router=self.router_config(),
+                          quant_bits=self.quant_bits, impl=self.sla2_impl)
+
+
+def init_attention(key, cfg: AttentionConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    std = d ** -0.5
+    p = {
+        "wq": L.truncated_normal(ks[0], (d, h * dh), dtype, std),
+        "wk": L.truncated_normal(ks[1], (d, hkv * dh), dtype, std),
+        "wv": L.truncated_normal(ks[2], (d, hkv * dh), dtype, std),
+        "wo": L.truncated_normal(ks[3], (h * dh, d), dtype, (h * dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(dh, dtype)
+        p["k_norm"] = L.init_rmsnorm(dh, dtype)
+    if cfg.mechanism == "sla2":
+        p["sla2"] = sla2lib.init_sla2_params(
+            ks[4], head_dim=dh, num_heads=h, n_q_blocks=cfg.n_q_blocks,
+            cfg=cfg.sla2_config(), dtype=dtype)
+    elif cfg.mechanism == "sla":
+        p["sla"] = slalib.init_sla_params(ks[5], head_dim=dh, dtype=dtype)
+    return p
+
+
+def _project_qkv(params, cfg: AttentionConfig, x, positions):
+    b, n, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, n, h, dh)
+    k = (x @ params["wk"]).reshape(b, n, hkv, dh)
+    v = (x @ params["wv"]).reshape(b, n, hkv, dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(params["q_norm"], q)
+        k = L.rmsnorm(params["k_norm"], k)
+    if cfg.use_rope:
+        q = L.apply_rope(q, positions, theta=cfg.rope_theta)
+        k = L.apply_rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(x, n_rep: int):
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=1)
+
+
+def _dense_masked_attention(q, k, v, cfg: AttentionConfig, q_offset: int = 0):
+    """Dense attention with causal/prefix/sliding-window masks. (B,H,N,D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhnd,bhmd->bhnm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(d)
+    n_q, n_kv = q.shape[-2], k.shape[-2]
+    mask = None
+    if cfg.causal:
+        mask = masklib.token_causal_mask(n_q, n_kv, q_offset, cfg.prefix_len)
+    if cfg.sliding_window is not None:
+        qi = jnp.arange(n_q) + q_offset
+        kj = jnp.arange(n_kv)
+        sw = kj[None, :] >= (qi[:, None] - cfg.sliding_window + 1)
+        if cfg.prefix_len:
+            sw = sw | (kj[None, :] < cfg.prefix_len)
+        mask = sw if mask is None else (mask & sw)
+    if mask is not None:
+        s = jnp.where(mask, s, masklib.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhnm,bhmd->bhnd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_forward(params: dict, cfg: AttentionConfig, x: jax.Array,
+                      positions: Optional[jax.Array] = None) -> jax.Array:
+    """Training / prefill-style full-sequence attention. x: (B, N, d_model)."""
+    b, n, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(n), (b, n))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    # (B, N, H, Dh) -> (B, H, N, Dh)
+    q = q.transpose(0, 2, 1, 3)
+    k = _repeat_kv(k.transpose(0, 2, 1, 3), cfg.num_heads // cfg.num_kv_heads)
+    v = _repeat_kv(v.transpose(0, 2, 1, 3), cfg.num_heads // cfg.num_kv_heads)
+
+    if cfg.mechanism == "full":
+        o = _dense_masked_attention(q, k, v, cfg)
+    elif cfg.mechanism == "sla2":
+        o = sla2lib.sla2_attention(params["sla2"], q, k, v, cfg.sla2_config())
+    elif cfg.mechanism == "sla":
+        scfg = slalib.SLAConfig(
+            router=dataclasses.replace(cfg.router_config(), learnable=False),
+            quant_bits="none")
+        o = slalib.sla_attention(params["sla"], q, k, v, scfg)
+    elif cfg.mechanism == "sparse_only":
+        scfg = slalib.SLAConfig(
+            router=dataclasses.replace(cfg.router_config(), learnable=False),
+            quant_bits=cfg.quant_bits)
+        o = slalib.sparse_only_attention(q, k, v, scfg)
+    else:
+        raise ValueError(cfg.mechanism)
+    o = o.transpose(0, 2, 1, 3).reshape(b, n, -1)
+    return o @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: AttentionConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Block KV cache (+ SLA2 router/linear states). max_len % block_k == 0."""
+    hkv, dh, bk = cfg.num_kv_heads, cfg.head_dim, cfg.block_k
+    t_n = max_len // bk
+    cache = {
+        "k": jnp.zeros((batch, hkv, max_len, dh), dtype),
+        "v": jnp.zeros((batch, hkv, max_len, dh), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    if cfg.mechanism == "sla2":
+        cache.update({
+            # router keys (block means); per-block linear states are NOT
+            # cached — the complement trick recomputes the K_sel selected
+            # blocks' (h_j, z_j) from the K/V tiles the sparse branch reads
+            # anyway, so only the running totals over *complete* blocks are
+            # kept: O(d^2) state instead of O(T_n d^2).
+            "pooled_k": jnp.zeros((batch, hkv, t_n, dh), jnp.float32),
+            "h_tot": jnp.zeros((batch, hkv, dh, dh), jnp.float32),
+            "z_tot": jnp.zeros((batch, hkv, dh), jnp.float32),
+        })
+    return cache
+
+
+def prefill_cache(params: dict, cfg: AttentionConfig, x: jax.Array,
+                  cache: dict) -> tuple[jax.Array, dict]:
+    """Run full-sequence attention AND populate the cache with the K/V (+
+    SLA2 block states) of the prefix. x: (B, N, d_model); N % block_k == 0."""
+    b, n, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(n), (b, n))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    k_t = k.transpose(0, 2, 1, 3)  # (B, Hkv, N, Dh)
+    v_t = v.transpose(0, 2, 1, 3)
+    out = attention_forward(params, cfg, x, positions)
+
+    max_len = cache["k"].shape[2]
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k_t.astype(cache["k"].dtype), (0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v_t.astype(cache["v"].dtype), (0, 0, 0, 0))
+    cache["length"] = jnp.asarray(n, jnp.int32)
+    if cfg.mechanism == "sla2":
+        bk = cfg.block_k
+        t_full = n // bk
+        kb = k_t.reshape(b, cfg.num_kv_heads, t_full, bk, cfg.head_dim)
+        vb = v_t.reshape(b, cfg.num_kv_heads, t_full, bk, cfg.head_dim)
+        kf = phi(kb)
+        h = jnp.einsum("bhjkd,bhjke->bhjde", kf, vb.astype(jnp.float32))
+        z = kf.sum(axis=-2)
+        pooled = kb.astype(jnp.float32).mean(axis=-2)
+        cache["pooled_k"] = jax.lax.dynamic_update_slice(
+            cache["pooled_k"], pooled.astype(cache["pooled_k"].dtype),
+            (0, 0, 0, 0))
+        cache["h_tot"] = h.sum(axis=2)
+        cache["z_tot"] = z.sum(axis=2)
+    return out, cache
+
+
+def decode_step(params: dict, cfg: AttentionConfig, x_t: jax.Array,
+                cache: dict) -> tuple[jax.Array, dict]:
+    """One-token decode. x_t: (B, 1, d_model). Returns (o_t, new cache)."""
+    b = x_t.shape[0]
+    h, hkv, dh, bk = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                      cfg.block_k)
+    n_rep = h // hkv
+    t = cache["length"]
+    positions = jnp.broadcast_to(t[None], (b, 1))
+    q, k_new, v_new = _project_qkv(params, cfg, x_t, positions)
+    q = q.transpose(0, 2, 1, 3)              # (B, H, 1, Dh)
+    k_new = k_new.transpose(0, 2, 1, 3)      # (B, Hkv, 1, Dh)
+    v_new = v_new.transpose(0, 2, 1, 3)
+
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, 0, t, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, 0, t, 0))
+    t_new = t + 1
+    cache["length"] = t_new
+
+    max_len = cache["k"].shape[2]
+    if cfg.mechanism == "sla2":
+        o = _sla2_decode(params, cfg, q, cache, t_new)
+    else:
+        # dense decode over the cache (masked by length)
+        k_all = _repeat_kv(cache["k"], n_rep).astype(q.dtype)
+        v_all = _repeat_kv(cache["v"], n_rep).astype(q.dtype)
+        s = jnp.einsum("bhqd,bhmd->bhqm", q.astype(jnp.float32),
+                       k_all.astype(jnp.float32)) / jnp.sqrt(dh)
+        pos_k = jnp.arange(max_len)
+        vis = pos_k[None, None, None, :] < t_new
+        if cfg.sliding_window is not None:
+            sw = pos_k[None, None, None, :] >= (t_new - cfg.sliding_window)
+            if cfg.prefix_len:
+                sw = sw | (pos_k[None, None, None, :] < cfg.prefix_len)
+            vis = vis & sw
+        s = jnp.where(vis, s, masklib.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqm,bhmd->bhqd", p, v_all.astype(jnp.float32))
+    o = o.astype(x_t.dtype).transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
+    return o @ params["wo"], cache
+
+
+def _sla2_decode(params: dict, cfg: AttentionConfig, q, cache, t_new):
+    """SLA2 decode: router over pooled block keys -> sparse flash over the
+    K_sel selected blocks + linear state over the complement of complete
+    blocks.  The current (possibly partial) block is always routed sparse."""
+    sla2_p = params["sla2"]
+    b, h, _, dh = q.shape
+    hkv = cfg.num_kv_heads
+    n_rep = h // hkv
+    bk = cfg.block_k
+    max_len = cache["k"].shape[2]
+    t_n = max_len // bk
+
+    # --- update block stats for the block containing the new token ---
+    cur_blk = (t_new - 1) // bk                      # block being filled
+    k_cache, v_cache = cache["k"], cache["v"]
+    kblk = jax.lax.dynamic_slice(
+        k_cache, (0, 0, cur_blk * bk, 0), (b, hkv, bk, dh)).astype(jnp.float32)
+    vblk = jax.lax.dynamic_slice(
+        v_cache, (0, 0, cur_blk * bk, 0), (b, hkv, bk, dh)).astype(jnp.float32)
+    in_blk = (cur_blk * bk + jnp.arange(bk)) < t_new  # valid positions
+    w = in_blk.astype(jnp.float32)[None, None, :, None]
+    pooled_cur = (kblk * w).sum(axis=-2) / jnp.maximum(w.sum(axis=-2), 1.0)
+    cache["pooled_k"] = jax.lax.dynamic_update_slice(
+        cache["pooled_k"], pooled_cur[:, :, None].astype(
+            cache["pooled_k"].dtype), (0, 0, cur_blk, 0))
+    completed = (t_new % bk) == 0
+    kf_cur = phi(kblk) * w
+    h_cur = jnp.einsum("bhkd,bhke->bhde", kf_cur, vblk * w)
+    z_cur = kf_cur.sum(axis=-2)
+    cache["h_tot"] = cache["h_tot"] + jnp.where(completed, h_cur, 0.0)
+    cache["z_tot"] = cache["z_tot"] + jnp.where(completed, z_cur, 0.0)
+
+    # --- route: GROUP-SHARED routing (one block set per KV head) ---
+    # Per-q-head routing would gather K/V repeated to every query head
+    # (n_rep x the tiles, 100s of GiB at llama3 decode_32k); sharing the
+    # selection across each GQA group keeps the gather at KV-head width.
+    # Scores: mean over the group's query heads (DESIGN.md §2, causal/GQA
+    # adaptation — the paper's DiT is MHA so this is new surface).
+    rp = sla2_p.get("router", {})
+    qr = q[:, :, 0].astype(jnp.float32)              # (B, H, Dh)
+    pk = cache["pooled_k"].astype(jnp.float32)       # (B, Hkv, T_n, Dh)
+    if rp:
+        qr = qr @ rp["proj_q"].astype(jnp.float32)
+        pk = pk @ rp["proj_k"].astype(jnp.float32)
+    qr_g = qr.reshape(b, hkv, n_rep, dh).mean(axis=2)
+    scores = jnp.einsum("bhd,bhtd->bht", qr_g, pk) / jnp.sqrt(dh)
+    blk_ids = jnp.arange(t_n)
+    allowed = blk_ids[None, None, :] <= cur_blk      # causal blocks
+    scores = jnp.where(allowed, scores, masklib.NEG_INF)
+    scores = jnp.where(blk_ids[None, None, :] == cur_blk, jnp.inf, scores)
+    k_sel = max(1, round(cfg.k_frac * t_n))
+    top_vals, idx = jax.lax.top_k(scores, k_sel)     # (B, Hkv, K_sel)
+    valid = top_vals > masklib.NEG_INF * 0.5
+
+    # --- sparse branch: gather selected blocks (KV-head width), flash ---
+    gather = lambda blocks, ids: jnp.take_along_axis(
+        blocks, ids[..., None, None], axis=2)
+    k_sel_blocks = gather(k_cache.reshape(b, hkv, t_n, bk, dh),
+                          idx).astype(jnp.float32)   # (B, Hkv, K_sel, bk, Dh)
+    v_sel_blocks = gather(v_cache.reshape(b, hkv, t_n, bk, dh),
+                          idx).astype(jnp.float32)
+    q_g = q[:, :, 0].astype(jnp.float32).reshape(b, hkv, n_rep, dh)
+    s = jnp.einsum("bhgd,bhjkd->bhgjk", q_g, k_sel_blocks) / jnp.sqrt(dh)
+    pos = idx[..., None] * bk + jnp.arange(bk)[None, None, None, :]
+    vis = (pos < t_new) & valid[..., None]           # (B, Hkv, K_sel, bk)
+    s = jnp.where(vis[:, :, None], s, masklib.NEG_INF)
+    p = jax.nn.softmax(s.reshape(b, hkv, n_rep, -1), axis=-1).reshape(s.shape)
+    o_s = jnp.einsum("bhgjk,bhjkd->bhgd", p, v_sel_blocks)
+
+    # --- linear branch: totals minus selected complete blocks ---
+    # phi(q).h_j is contracted directly over the gathered tiles:
+    #   phi(q) . h_j = sum_k (phi(q).phi(k_jk)) v_jk
+    # so no (K_sel, Dh, Dh) per-block states are ever formed.
+    complete_bound = cur_blk + jnp.where(completed, 1, 0)
+    sel_complete = (valid & (idx < complete_bound))  # (B, Hkv, K_sel)
+    qfeat = phi(q[:, :, 0]).reshape(b, hkv, n_rep, dh)
+    kf_sel = phi(k_sel_blocks)                       # (B, Hkv, K_sel, bk, Dh)
+    ls = jnp.einsum("bhgd,bhjkd->bhgjk", qfeat, kf_sel)
+    ls = ls * sel_complete[:, :, None, :, None].astype(jnp.float32)
+    sub_num = jnp.einsum("bhgjk,bhjkd->bhgd", ls, v_sel_blocks)
+    sub_den = ls.sum(axis=(-1, -2))                  # (B, Hkv, n_rep)
+    den_tot = jnp.einsum("bhgd,bhd->bhg", qfeat, cache["z_tot"])
+    num = jnp.einsum("bhgd,bhde->bhge", qfeat, cache["h_tot"]) - sub_num
+    # relative empty-complement threshold (cancellation residuals are not 0)
+    den = (den_tot - sub_den)
+    den = jnp.where(den > 1e-4 * den_tot + 1e-12, den, 0.0)[..., None]
+    o_l = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+
+    # --- combine ---
+    a = jax.nn.sigmoid(sla2_p["alpha_logit"].astype(jnp.float32))
+    if a.shape[0] == 1 and h > 1:
+        a = jnp.broadcast_to(a, (h, a.shape[1]))
+    a_last = a[:, -1].reshape(1, hkv, n_rep, 1)      # decode uses last alpha
+    a_eff = jnp.where(den > 0, a_last, 1.0)
+    o = a_eff * o_s + (1.0 - a_eff) * o_l            # (B, Hkv, n_rep, Dh)
+    return o.reshape(b, h, dh)[:, :, None, :]        # (B, H, 1, Dh)

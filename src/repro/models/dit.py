@@ -1,0 +1,249 @@
+"""Wan2.1-style video Diffusion Transformer — the paper's actual target.
+
+Block = adaLN-zero(self-attn) + cross-attn(text) + adaLN-zero(MLP), scanned
+over layers.  Self-attention is **bidirectional SLA2** (causal=False), which
+is exactly the setting of the paper: video-latent tokens at 480P/720P give
+N ≈ 32k sequence length, P decomposes into a 97%-sparse part plus a low-rank
+part, and SLA2 routes between the block-sparse flash branch and the linear
+branch.
+
+The VAE/patchifier frontend is a stub: ``input_specs`` provides pre-
+patchified latent tokens (B, N, c_latent); a linear patch embed maps them to
+d_model.  Text conditioning is a stubbed (B, n_text, d_model) embedding
+consumed by dense cross-attention (n_text = 77 is tiny).
+
+Training objective: rectified-flow matching.
+    x_t = (1 - t) x0 + t eps ,  target v = eps - x0 ,  L = ||v_hat - v||^2
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import maps
+from repro.core import sla2 as sla2lib
+from repro.core.router import RouterConfig
+from repro.core.sla2 import SLA2Config
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    name: str = "wan_dit"
+    n_layers: int = 30
+    d_model: int = 1536
+    num_heads: int = 12
+    head_dim: int = 128
+    d_ff: int = 8960
+    c_latent: int = 16
+    n_text: int = 77
+    mechanism: str = "sla2"         # sla2 | sla | sparse_only | full
+    block_q: int = 128
+    block_k: int = 64
+    k_frac: float = 0.05
+    quant_bits: str = "int8"
+    sla2_impl: str = "gather"
+    q_chunk: int = 16
+    fuse_branches: bool = False
+    t_emb_dim: int = 256
+    remat: str = "full"
+    dtype: str = "bfloat16"
+    max_target_len: int = 32768
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def router_config(self) -> RouterConfig:
+        return RouterConfig(block_q=self.block_q, block_k=self.block_k,
+                            k_frac=self.k_frac, causal=False)
+
+    def sla2_config(self) -> SLA2Config:
+        return SLA2Config(router=self.router_config(),
+                          quant_bits=self.quant_bits, impl=self.sla2_impl,
+                          q_chunk=self.q_chunk,
+                          fuse_branches=self.fuse_branches)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: DiTConfig) -> dict:
+    ks = jax.random.split(key, 10)
+    d, h, dh, dt = cfg.d_model, cfg.num_heads, cfg.head_dim, cfg.param_dtype
+    std = d ** -0.5
+    p = {
+        "ln1": L.init_layernorm(d, dt),
+        "wq": L.truncated_normal(ks[0], (d, h * dh), dt, std),
+        "wk": L.truncated_normal(ks[1], (d, h * dh), dt, std),
+        "wv": L.truncated_normal(ks[2], (d, h * dh), dt, std),
+        "wo": L.truncated_normal(ks[3], (h * dh, d), dt, (h * dh) ** -0.5),
+        "ln_x": L.init_layernorm(d, dt),
+        "xq": L.truncated_normal(ks[4], (d, h * dh), dt, std),
+        "xk": L.truncated_normal(ks[5], (d, h * dh), dt, std),
+        "xv": L.truncated_normal(ks[6], (d, h * dh), dt, std),
+        "xo": L.truncated_normal(ks[7], (h * dh, d), dt, (h * dh) ** -0.5),
+        "ln2": L.init_layernorm(d, dt),
+        "mlp": L.init_mlp(ks[8], d, cfg.d_ff, gated=False, dtype=dt),
+        # adaLN-zero: 6 modulation vectors from t-emb; zero-init projection
+        "ada": {"w": jnp.zeros((cfg.t_emb_dim, 6 * d), dt),
+                "b": jnp.zeros((6 * d,), dt)},
+    }
+    if cfg.mechanism == "sla2":
+        p["sla2"] = sla2lib.init_sla2_params(
+            ks[9], head_dim=dh, num_heads=h,
+            n_q_blocks=max(1, cfg.max_target_len // cfg.block_q),
+            cfg=cfg.sla2_config(), dtype=dt)
+    elif cfg.mechanism == "sla":
+        from repro.core import sla as slalib
+        p["sla"] = slalib.init_sla_params(ks[9], head_dim=dh, dtype=dt)
+    return p
+
+
+def init_dit(key, cfg: DiTConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d, dt = cfg.d_model, cfg.param_dtype
+    blocks = jax.vmap(functools.partial(_init_block, cfg=cfg))(
+        jax.random.split(ks[0], cfg.n_layers))
+    return {
+        "patch_in": {
+            "w": L.truncated_normal(ks[1], (cfg.c_latent, d), dt,
+                                    cfg.c_latent ** -0.5),
+            "b": jnp.zeros((d,), dt)},
+        "t_mlp": {
+            "w1": L.truncated_normal(ks[2], (cfg.t_emb_dim, cfg.t_emb_dim),
+                                     dt, cfg.t_emb_dim ** -0.5),
+            "w2": L.truncated_normal(ks[3], (cfg.t_emb_dim, cfg.t_emb_dim),
+                                     dt, cfg.t_emb_dim ** -0.5)},
+        "blocks": blocks,
+        "final_ln": L.init_layernorm(d, dt),
+        "final_ada": {"w": jnp.zeros((cfg.t_emb_dim, 2 * d), dt),
+                      "b": jnp.zeros((2 * d,), dt)},
+        "patch_out": {
+            "w": jnp.zeros((d, cfg.c_latent), dt),
+            "b": jnp.zeros((cfg.c_latent,), dt)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def timestep_embedding(t: jax.Array, dim: int) -> jax.Array:
+    """Sinusoidal embedding of t in [0, 1]. t: (B,) -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = t[:, None].astype(jnp.float32) * freqs[None] * 1000.0
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def _self_attention(bp: dict, cfg: DiTConfig, x: jax.Array) -> jax.Array:
+    b, n, _ = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    q = (x @ bp["wq"]).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    k = (x @ bp["wk"]).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    v = (x @ bp["wv"]).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    if cfg.mechanism == "sla2":
+        o = sla2lib.sla2_attention(bp["sla2"], q, k, v, cfg.sla2_config())
+    elif cfg.mechanism == "sla":
+        from repro.core import sla as slalib
+        scfg = slalib.SLAConfig(router=dataclasses.replace(
+            cfg.router_config(), learnable=False))
+        o = slalib.sla_attention(bp["sla"], q, k, v, scfg)
+    elif cfg.mechanism == "sparse_only":
+        from repro.core import sla as slalib
+        scfg = slalib.SLAConfig(router=dataclasses.replace(
+            cfg.router_config(), learnable=False),
+            quant_bits=cfg.quant_bits)
+        o = slalib.sparse_only_attention(q, k, v, scfg)
+    else:  # full
+        d = q.shape[-1]
+        s = jnp.einsum("bhnd,bhmd->bhnm", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) / jnp.sqrt(d)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhnm,bhmd->bhnd", p,
+                       v.astype(jnp.float32)).astype(x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+    return o @ bp["wo"]
+
+
+def _cross_attention(bp: dict, cfg: DiTConfig, x: jax.Array,
+                     text: jax.Array) -> jax.Array:
+    b, n, _ = x.shape
+    m = text.shape[1]
+    h, dh = cfg.num_heads, cfg.head_dim
+    q = (x @ bp["xq"]).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    k = (text @ bp["xk"]).reshape(b, m, h, dh).transpose(0, 2, 1, 3)
+    v = (text @ bp["xv"]).reshape(b, m, h, dh).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhnd,bhmd->bhnm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(dh)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhnm,bhmd->bhnd", p, v.astype(jnp.float32))
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+    return o @ bp["xo"]
+
+
+def _block_forward(bp: dict, cfg: DiTConfig, x, text, t_emb):
+    mod = (t_emb @ bp["ada"]["w"].astype(jnp.float32)
+           + bp["ada"]["b"].astype(jnp.float32))
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod.astype(x.dtype), 6, axis=-1)
+    h = _modulate(L.layernorm(bp["ln1"], x), sh1, sc1)
+    x = x + g1[:, None, :] * _self_attention(bp, cfg, h)
+    x = x + _cross_attention(bp, cfg, L.layernorm(bp["ln_x"], x), text)
+    h2 = _modulate(L.layernorm(bp["ln2"], x), sh2, sc2)
+    x = x + g2[:, None, :] * L.mlp(bp["mlp"], h2, activation="gelu")
+    return x
+
+
+def dit_forward(params: dict, cfg: DiTConfig, latents: jax.Array,
+                text: jax.Array, t: jax.Array) -> jax.Array:
+    """latents: (B, N, c_latent); text: (B, n_text, d_model); t: (B,).
+    Returns the predicted velocity field (B, N, c_latent)."""
+    x = (latents.astype(cfg.param_dtype) @ params["patch_in"]["w"]
+         + params["patch_in"]["b"])
+    t_emb = timestep_embedding(t, cfg.t_emb_dim)
+    t_emb = jax.nn.silu(t_emb @ params["t_mlp"]["w1"].astype(jnp.float32))
+    t_emb = t_emb @ params["t_mlp"]["w2"].astype(jnp.float32)
+    text = text.astype(cfg.param_dtype)
+
+    def body(x, bp):
+        return _block_forward(bp, cfg, x, text, t_emb), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = maps.scan(body, x, params["blocks"])
+
+    mod = (t_emb @ params["final_ada"]["w"].astype(jnp.float32)
+           + params["final_ada"]["b"].astype(jnp.float32))
+    sh, sc = jnp.split(mod.astype(x.dtype), 2, axis=-1)
+    x = _modulate(L.layernorm(params["final_ln"], x), sh, sc)
+    return (x @ params["patch_out"]["w"] + params["patch_out"]["b"]) \
+        .astype(jnp.float32)
+
+
+def flow_matching_loss(params: dict, cfg: DiTConfig, batch: dict):
+    """batch: latents x0 (B,N,c), text (B,n_text,d), noise eps (B,N,c),
+    time t (B,) in (0,1)."""
+    x0 = batch["latents"].astype(jnp.float32)
+    eps = batch["noise"].astype(jnp.float32)
+    t = batch["time"].astype(jnp.float32)
+    x_t = (1.0 - t[:, None, None]) * x0 + t[:, None, None] * eps
+    v_target = eps - x0
+    v_hat = dit_forward(params, cfg, x_t, batch["text"], t)
+    loss = jnp.mean((v_hat - v_target) ** 2)
+    return loss, {"mse": loss}
+
+
+def denoise_step(params: dict, cfg: DiTConfig, x_t, text, t, dt):
+    """One Euler step of the rectified-flow ODE (serving/e2e latency)."""
+    v = dit_forward(params, cfg, x_t, text, t)
+    return x_t - dt[:, None, None] * v

@@ -1,0 +1,286 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs``
+provides precomputed mel-frame embeddings (B, n_frames, d_model); the conv
+stack that would produce them is out of scope (noted in DESIGN.md).
+
+Encoder: bidirectional full attention over n_frames=1500 (tiny N — sparse
+routing would save nothing, so SLA2 is not applied there; see DESIGN.md
+§Arch-applicability).  Decoder: causal self-attention (SLA2-capable, this is
+where the long decode shapes bite) + dense cross-attention to the encoder
+states + GELU MLP, LayerNorm convention, learned positions, no RoPE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import maps
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str = "whisper"
+    n_enc_layers: int = 4
+    n_dec_layers: int = 4
+    d_model: int = 384
+    num_heads: int = 6
+    num_kv_heads: int = 6
+    head_dim: int = 64
+    d_ff: int = 1536
+    vocab_size: int = 51865
+    n_frames: int = 1500
+    max_target_len: int = 8192
+    mechanism: str = "sla2"          # decoder self-attention mechanism
+    block_q: int = 128
+    block_k: int = 64
+    k_frac: float = 0.05
+    quant_bits: str = "int8"
+    sla2_impl: str = "gather"
+    q_chunk: int = 16
+    remat: str = "full"
+    dtype: str = "bfloat16"
+    loss_chunk: int = 1024
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def enc_attention_config(self) -> A.AttentionConfig:
+        return A.AttentionConfig(
+            d_model=self.d_model, num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads, head_dim=self.head_dim,
+            mechanism="full", causal=False, use_rope=False)
+
+    def dec_attention_config(self) -> A.AttentionConfig:
+        return A.AttentionConfig(
+            d_model=self.d_model, num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads, head_dim=self.head_dim,
+            mechanism=self.mechanism, causal=True, use_rope=False,
+            block_q=self.block_q, block_k=self.block_k, k_frac=self.k_frac,
+            quant_bits=self.quant_bits, sla2_impl=self.sla2_impl,
+            n_q_blocks=max(1, self.max_target_len // self.block_q))
+
+
+def _init_cross(key, cfg: EncDecConfig, dt) -> dict:
+    ks = jax.random.split(key, 4)
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    std = d ** -0.5
+    return {
+        "wq": L.truncated_normal(ks[0], (d, h * dh), dt, std),
+        "wk": L.truncated_normal(ks[1], (d, h * dh), dt, std),
+        "wv": L.truncated_normal(ks[2], (d, h * dh), dt, std),
+        "wo": L.truncated_normal(ks[3], (h * dh, d), dt, (h * dh) ** -0.5),
+    }
+
+
+def _init_enc_layer(key, cfg: EncDecConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    dt = cfg.param_dtype
+    return {
+        "ln1": L.init_layernorm(cfg.d_model, dt),
+        "attn": A.init_attention(k1, cfg.enc_attention_config(), dt),
+        "ln2": L.init_layernorm(cfg.d_model, dt),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, gated=False, dtype=dt),
+    }
+
+
+def _init_dec_layer(key, cfg: EncDecConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    return {
+        "ln1": L.init_layernorm(cfg.d_model, dt),
+        "self_attn": A.init_attention(k1, cfg.dec_attention_config(), dt),
+        "ln_x": L.init_layernorm(cfg.d_model, dt),
+        "cross": _init_cross(k2, cfg, dt),
+        "ln2": L.init_layernorm(cfg.d_model, dt),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, gated=False, dtype=dt),
+    }
+
+
+def init_encdec(key, cfg: EncDecConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    dt = cfg.param_dtype
+    return {
+        "embed": {"table": L.truncated_normal(
+            ks[0], (cfg.vocab_size, cfg.d_model), dt, 1.0)},
+        "pos_dec": L.truncated_normal(
+            ks[1], (cfg.max_target_len, cfg.d_model), dt, 0.02),
+        "encoder": jax.vmap(functools.partial(_init_enc_layer, cfg=cfg))(
+            jax.random.split(ks[2], cfg.n_enc_layers)),
+        "enc_ln": L.init_layernorm(cfg.d_model, dt),
+        "decoder": jax.vmap(functools.partial(_init_dec_layer, cfg=cfg))(
+            jax.random.split(ks[3], cfg.n_dec_layers)),
+        "dec_ln": L.init_layernorm(cfg.d_model, dt),
+    }
+
+
+def _cross_attention(cp: dict, cfg: EncDecConfig, x, enc_k, enc_v):
+    b, n, _ = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    q = (x @ cp["wq"]).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhnd,bhmd->bhnm", q.astype(jnp.float32),
+                   enc_k.astype(jnp.float32)) / jnp.sqrt(dh)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhnm,bhmd->bhnd", p, enc_v.astype(jnp.float32))
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+    return o @ cp["wo"]
+
+
+def _enc_kv(cp: dict, cfg: EncDecConfig, enc_out):
+    b, m, _ = enc_out.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    k = (enc_out @ cp["wk"]).reshape(b, m, h, dh).transpose(0, 2, 1, 3)
+    v = (enc_out @ cp["wv"]).reshape(b, m, h, dh).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def encode(params: dict, cfg: EncDecConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, n_frames, d_model) stubbed conv output + sinusoid pos."""
+    b, n, d = frames.shape
+    pos = L.rope_frequencies(d, n)  # reuse cos/sin tables as sinusoid embed
+    sin_emb = jnp.concatenate([pos[0], pos[1]], axis=-1)[None]
+    x = (frames.astype(jnp.float32) + sin_emb).astype(cfg.param_dtype)
+
+    def body(x, lp):
+        h = L.layernorm(lp["ln1"], x)
+        x = x + A.attention_forward(lp["attn"], cfg.enc_attention_config(), h)
+        h2 = L.layernorm(lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h2, activation="gelu")
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = maps.scan(body, x, params["encoder"])
+    return L.layernorm(params["enc_ln"], x)
+
+
+def decoder_forward(params: dict, cfg: EncDecConfig, tokens, enc_out):
+    b, n = tokens.shape
+    x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    x = x + params["pos_dec"][:n][None]
+
+    def body(x, lp):
+        h = L.layernorm(lp["ln1"], x)
+        x = x + A.attention_forward(lp["self_attn"],
+                                    cfg.dec_attention_config(), h)
+        hx = L.layernorm(lp["ln_x"], x)
+        ek, ev = _enc_kv(lp["cross"], cfg, enc_out)
+        x = x + _cross_attention(lp["cross"], cfg, hx, ek, ev)
+        h2 = L.layernorm(lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h2, activation="gelu")
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = maps.scan(body, x, params["decoder"])
+    return L.layernorm(params["dec_ln"], x)
+
+
+def encdec_loss(params: dict, cfg: EncDecConfig, batch: dict):
+    """batch: frames (B, n_frames, d), tokens (B, N), labels (B, N)."""
+    enc_out = encode(params, cfg, batch["frames"])
+    hidden = decoder_forward(params, cfg, batch["tokens"], enc_out)
+    labels = batch["labels"]
+    b, n, d = hidden.shape
+    c = min(cfg.loss_chunk, n)
+    pad = (-n) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (n + pad) // c
+    hs = hidden.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        h, lab = args
+        lg = L.unembed(params["embed"], h)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(
+            lg, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        valid = (lab >= 0).astype(jnp.float32)
+        return (((lse - tgt) * valid).sum(), valid.sum())
+
+    sums, counts = maps.chunk_map(jax.checkpoint(chunk_loss), (hs, ls))
+    loss = sums.sum() / jnp.maximum(counts.sum(), 1.0)
+    return loss, {"ce": loss}
+
+
+# ---------------------------------------------------------------------------
+# decode (self-attn block cache + static cross-attn K/V)
+# ---------------------------------------------------------------------------
+
+def init_encdec_caches(cfg: EncDecConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16) -> dict:
+    h, dh = cfg.num_heads, cfg.head_dim
+    one = {
+        "self": A.init_cache(cfg.dec_attention_config(), batch, max_len,
+                             dtype),
+        "enc_k": jnp.zeros((batch, h, cfg.n_frames, dh), dtype),
+        "enc_v": jnp.zeros((batch, h, cfg.n_frames, dh), dtype),
+    }
+    return {"decoder": jax.tree.map(
+        lambda a: jnp.tile(a[None], (cfg.n_dec_layers,) + (1,) * a.ndim),
+        one)}
+
+
+def prefill(params: dict, cfg: EncDecConfig, frames, tokens, caches):
+    """Encode audio, prefill decoder caches. Returns (logits_last, caches)."""
+    enc_out = encode(params, cfg, frames)
+    b, n = tokens.shape
+    x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    x = x + params["pos_dec"][:n][None]
+
+    def body(x, pair):
+        lp, lc = pair
+        h = L.layernorm(lp["ln1"], x)
+        y, self_c = A.prefill_cache(lp["self_attn"],
+                                    cfg.dec_attention_config(), h,
+                                    lc["self"])
+        x = x + y
+        ek, ev = _enc_kv(lp["cross"], cfg, enc_out)
+        hx = L.layernorm(lp["ln_x"], x)
+        x = x + _cross_attention(lp["cross"], cfg, hx, ek, ev)
+        h2 = L.layernorm(lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h2, activation="gelu")
+        return x, {"self": self_c, "enc_k": ek.astype(lc["enc_k"].dtype),
+                   "enc_v": ev.astype(lc["enc_v"].dtype)}
+
+    x, new_dec = maps.scan(body, x, (params["decoder"],
+                                     caches["decoder"]))
+    x = L.layernorm(params["dec_ln"], x)
+    logits = L.unembed(params["embed"], x[:, -1:])[:, 0]
+    return logits, {"decoder": new_dec}
+
+
+def decode_step(params: dict, cfg: EncDecConfig, token_t, caches):
+    b = token_t.shape[0]
+    x = L.embed(params["embed"], token_t[:, None]).astype(cfg.param_dtype)
+    pos = caches["decoder"]["self"]["length"][0]
+    x = x + jax.lax.dynamic_slice(params["pos_dec"],
+                                  (pos, 0), (1, cfg.d_model))[None]
+
+    def body(x, pair):
+        lp, lc = pair
+        h = L.layernorm(lp["ln1"], x)
+        y, self_c = A.decode_step(lp["self_attn"],
+                                  cfg.dec_attention_config(), h, lc["self"])
+        x = x + y
+        hx = L.layernorm(lp["ln_x"], x)
+        x = x + _cross_attention(lp["cross"], cfg, hx, lc["enc_k"],
+                                 lc["enc_v"])
+        h2 = L.layernorm(lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h2, activation="gelu")
+        return x, {"self": self_c, "enc_k": lc["enc_k"],
+                   "enc_v": lc["enc_v"]}
+
+    x, new_dec = maps.scan(body, x, (params["decoder"],
+                                     caches["decoder"]))
+    x = L.layernorm(params["dec_ln"], x)
+    return L.unembed(params["embed"], x)[:, 0], {"decoder": new_dec}

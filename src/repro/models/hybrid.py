@@ -1,0 +1,112 @@
+"""Hymba-style hybrid mixer: parallel attention + Mamba heads in one block.
+
+Each block projects the (normed) residual stream into BOTH an attention path
+and an SSM path computed in parallel on the same input; the two outputs are
+per-path RMS-normed, averaged with learnable scalar gates (beta), and fused
+by one output projection — the Hymba fusion scheme (arXiv:2411.13676).
+Hymba's meta tokens are omitted (noted in DESIGN.md §Arch-applicability);
+the attention path runs SLA2, the SSM path is the chunked Mamba from ssm.py
+so the block is sub-quadratic end-to-end (long_500k runs).
+
+The attention sub-path reuses models/attention.py (mechanism dispatch, KV
+cache); the SSM sub-path reuses models/ssm.py (chunk scan, decode state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+def init_hybrid(key, attn_cfg: A.AttentionConfig, ssm_cfg: S.SSMConfig,
+                dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    d_inner = attn_cfg.num_heads * attn_cfg.head_dim
+    attn = A.init_attention(k1, attn_cfg, dtype)
+    # the fusion replaces the per-path output projections: attention's wo is
+    # re-purposed as the shared fused projection.
+    return {
+        "attn": attn,
+        "ssm": init_ssm_inner(k2, attn_cfg.d_model, ssm_cfg, dtype),
+        "norm_attn": L.init_rmsnorm(d_inner, dtype),
+        "norm_ssm": L.init_rmsnorm(d_inner, dtype),
+        "beta_attn": jnp.ones((), dtype),
+        "beta_ssm": jnp.ones((), dtype),
+    }
+
+
+def init_ssm_inner(key, d_model: int, ssm_cfg: S.SSMConfig, dtype):
+    """Mamba params minus its own output projection (fusion shares one)."""
+    p = S.init_mamba(key, d_model, ssm_cfg, dtype)
+    del p["w_out"]
+    return p
+
+
+def _ssm_inner_forward(params, x, cfg: S.SSMConfig, state=None):
+    """mamba_forward without the final out-projection: returns (B,N,H*dh)."""
+    p = dict(params)
+    d_inner = cfg.num_heads * cfg.head_dim
+    p["w_out"] = jnp.eye(d_inner, dtype=x.dtype)
+    return S.mamba_forward(p, x, cfg, state)
+
+
+def _ssm_inner_decode(params, x_t, cfg: S.SSMConfig, state):
+    p = dict(params)
+    d_inner = cfg.num_heads * cfg.head_dim
+    p["w_out"] = jnp.eye(d_inner, dtype=x_t.dtype)
+    return S.mamba_decode_step(p, x_t, cfg, state)
+
+
+def _attn_inner_forward(params, cfg: A.AttentionConfig, x, positions=None):
+    """attention_forward without the output projection."""
+    p = dict(params)
+    d_inner = cfg.num_heads * cfg.head_dim
+    p["wo"] = jnp.eye(d_inner, dtype=x.dtype)
+    return A.attention_forward(p, cfg, x, positions)
+
+
+def _fuse(params, a_out, s_out, x_dtype):
+    y = (params["beta_attn"].astype(jnp.float32)
+         * L.rmsnorm(params["norm_attn"], a_out).astype(jnp.float32)
+         + params["beta_ssm"].astype(jnp.float32)
+         * L.rmsnorm(params["norm_ssm"], s_out).astype(jnp.float32)) * 0.5
+    return y.astype(x_dtype) @ params["attn"]["wo"]
+
+
+def hybrid_forward(params: dict, attn_cfg: A.AttentionConfig,
+                   ssm_cfg: S.SSMConfig, x: jax.Array, positions=None):
+    a_out = _attn_inner_forward(params["attn"], attn_cfg, x, positions)
+    s_out, _ = _ssm_inner_forward(params["ssm"], x, ssm_cfg)
+    return _fuse(params, a_out, s_out, x.dtype)
+
+
+def init_hybrid_cache(attn_cfg: A.AttentionConfig, ssm_cfg: S.SSMConfig,
+                      batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "attn": A.init_cache(attn_cfg, batch, max_len, dtype),
+        "ssm": S.mamba_init_state(ssm_cfg, batch),
+    }
+
+
+def hybrid_prefill(params, attn_cfg, ssm_cfg, x, cache, positions=None):
+    p_attn = dict(params["attn"])
+    d_inner = attn_cfg.num_heads * attn_cfg.head_dim
+    p_attn["wo"] = jnp.eye(d_inner, dtype=x.dtype)
+    a_out, attn_cache = A.prefill_cache(p_attn, attn_cfg, x, cache["attn"])
+    s_out, ssm_state = _ssm_inner_forward(params["ssm"], x, ssm_cfg)
+    y = _fuse(params, a_out, s_out, x.dtype)
+    return y, {"attn": attn_cache, "ssm": ssm_state}
+
+
+def hybrid_decode_step(params, attn_cfg, ssm_cfg, x_t, cache):
+    p_attn = dict(params["attn"])
+    d_inner = attn_cfg.num_heads * attn_cfg.head_dim
+    p_attn["wo"] = jnp.eye(d_inner, dtype=x_t.dtype)
+    a_out, attn_cache = A.decode_step(p_attn, attn_cfg, x_t, cache["attn"])
+    s_out, ssm_state = _ssm_inner_decode(params["ssm"], x_t, ssm_cfg,
+                                         cache["ssm"])
+    y = _fuse(params, a_out, s_out, x_t.dtype)
+    return y, {"attn": attn_cache, "ssm": ssm_state}

@@ -1,0 +1,118 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings.
+
+Everything is a pure function over explicit param pytrees (no flax).  Param
+initialisers return nested dicts; the sharding rules in
+``repro.distributed.sharding`` assign PartitionSpecs by key-path, so layer
+code never mentions meshes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, dtype, stddev):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)\
+        .astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, max_pos: int, theta: float = 10000.0):
+    """(max_pos, head_dim/2) cos/sin tables."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    t = jnp.arange(max_pos, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0):
+    """x: (..., N, H, Dh) or (..., N, Dh); positions: (..., N) int32."""
+    dh = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., N, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:  # head axis present
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., ::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, *, gated: bool = True,
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in = d_model ** -0.5
+    std_out = d_ff ** -0.5
+    p = {
+        "w_up": truncated_normal(k1, (d_model, d_ff), dtype, std_in),
+        "w_down": truncated_normal(k2, (d_ff, d_model), dtype, std_out),
+    }
+    if gated:
+        p["w_gate"] = truncated_normal(k3, (d_model, d_ff), dtype, std_in)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, *, activation: str = "silu") -> jax.Array:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+           "relu": jax.nn.relu}[activation]
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        up = act(x @ params["w_gate"]) * up
+    else:
+        up = act(up)
+    return up @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> dict:
+    return {"table": truncated_normal(key, (vocab, d_model), dtype, 1.0)}
+
+
+def embed(params: dict, ids: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits = x @ table^T (fp32 for a stable softmax)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      params["table"].astype(jnp.float32))

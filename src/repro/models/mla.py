@@ -1,0 +1,296 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with SLA2 in latent space.
+
+MLA compresses K/V into a shared latent ``c_kv = x W_dkv`` (rank r) plus a
+shared RoPE key ``k_r``; per-head keys/values are linear decompressions
+``K_h = c_kv W_uk^h``, ``V_h = c_kv W_uv^h``.
+
+**SLA2 integration (TPU-native adaptation, DESIGN.md §2):** instead of
+decompressing K/V and routing in head space, we absorb ``W_uk`` into the
+query and run SLA2 entirely in latent space:
+
+    q_tilde_h = [ q_nope_h W_uk^{h,T} ,  q_rope_h ]   in R^{r + d_r}
+    k_tilde   = [ rmsnorm(c_kv)       ,  k_rope   ]   shared across heads
+    s_h       = q_tilde_h . k_tilde  ==  q_h . K_h    (exactly)
+
+so the sparse branch scores are *identical* to decompressed MLA, the router
+pools latent keys (pooling commutes with the decompression since it is
+linear), the linear branch's phi-features live on the 576-dim latent, and
+the attention "values" are the latents themselves — the per-head value
+decompression ``W_uv`` is applied once to the (r-dim) attention output.
+This keeps the KV cache at r + d_r per token (MLA's whole point) while the
+SLA2 block mask still prunes ~97% of score/PV work.
+
+Used by ``deepseek-v2-lite``; plugs into transformer.py as the attention of
+the ``mla_*`` layer kinds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as masklib
+from repro.core import sla2 as sla2lib
+from repro.core.attention import phi
+from repro.core.router import RouterConfig
+from repro.core.sla2 import SLA2Config
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    q_lora_rank: int = 0          # 0 => dense q projection (V2-Lite)
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+    @property
+    def latent_dim(self) -> int:  # the SLA2 working dimension
+        return self.kv_lora_rank + self.qk_rope_dim
+
+
+def init_mla(key, d_model: int, num_heads: int, mcfg: MLAConfig,
+             *, mechanism: str, sla2_cfg: Optional[SLA2Config],
+             n_q_blocks: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    h = num_heads
+    std = d_model ** -0.5
+    p = {
+        "w_dkv": L.truncated_normal(
+            ks[0], (d_model, mcfg.kv_lora_rank + mcfg.qk_rope_dim), dtype, std),
+        "kv_norm": L.init_rmsnorm(mcfg.kv_lora_rank, dtype),
+        "w_uk": L.truncated_normal(
+            ks[1], (mcfg.kv_lora_rank, h * mcfg.qk_nope_dim), dtype,
+            mcfg.kv_lora_rank ** -0.5),
+        "w_uv": L.truncated_normal(
+            ks[2], (mcfg.kv_lora_rank, h * mcfg.v_head_dim), dtype,
+            mcfg.kv_lora_rank ** -0.5),
+        "w_o": L.truncated_normal(
+            ks[3], (h * mcfg.v_head_dim, d_model), dtype,
+            (h * mcfg.v_head_dim) ** -0.5),
+    }
+    if mcfg.q_lora_rank:
+        p["w_dq"] = L.truncated_normal(ks[4], (d_model, mcfg.q_lora_rank),
+                                       dtype, std)
+        p["q_norm"] = L.init_rmsnorm(mcfg.q_lora_rank, dtype)
+        p["w_uq"] = L.truncated_normal(
+            ks[5], (mcfg.q_lora_rank, h * mcfg.qk_head_dim), dtype,
+            mcfg.q_lora_rank ** -0.5)
+    else:
+        p["w_q"] = L.truncated_normal(ks[4], (d_model, h * mcfg.qk_head_dim),
+                                      dtype, std)
+    if mechanism == "sla2":
+        p["sla2"] = sla2lib.init_sla2_params(
+            ks[6], head_dim=mcfg.latent_dim, num_heads=h,
+            n_q_blocks=n_q_blocks, cfg=sla2_cfg, dtype=dtype)
+    return p
+
+
+def _latent_qk(params: dict, mcfg: MLAConfig, num_heads: int, x, positions):
+    """Project to latent-space queries/keys.
+
+    Returns q_tilde (B, H, N, r+d_r), k_tilde (B, N, r+d_r)."""
+    b, n, _ = x.shape
+    h = num_heads
+    if mcfg.q_lora_rank:
+        q = L.rmsnorm(params["q_norm"], x @ params["w_dq"]) @ params["w_uq"]
+    else:
+        q = x @ params["w_q"]
+    q = q.reshape(b, n, h, mcfg.qk_head_dim)
+    q_nope = q[..., : mcfg.qk_nope_dim]
+    q_rope = L.apply_rope(q[..., mcfg.qk_nope_dim:], positions)
+
+    ckv_full = x @ params["w_dkv"]
+    c_kv = L.rmsnorm(params["kv_norm"], ckv_full[..., : mcfg.kv_lora_rank])
+    k_rope = L.apply_rope(ckv_full[..., mcfg.kv_lora_rank:], positions)
+
+    # absorb W_uk into q:  q_abs_h = q_nope_h @ W_uk^{h,T}  (B, N, H, r)
+    w_uk = params["w_uk"].reshape(mcfg.kv_lora_rank, h, mcfg.qk_nope_dim)
+    q_abs = jnp.einsum("bnhd,rhd->bnhr", q_nope, w_uk)
+    q_t = jnp.concatenate([q_abs, q_rope], axis=-1)       # (B, N, H, r+d_r)
+    k_t = jnp.concatenate([c_kv, k_rope], axis=-1)        # (B, N, r+d_r)
+    return q_t.transpose(0, 2, 1, 3), k_t, c_kv
+
+
+def mla_forward(params: dict, x: jax.Array, positions, *, mcfg: MLAConfig,
+                num_heads: int, mechanism: str,
+                sla2_cfg: Optional[SLA2Config]) -> jax.Array:
+    """Full-sequence MLA attention. x: (B, N, d_model)."""
+    b, n, _ = x.shape
+    h = num_heads
+    q_t, k_t, c_kv = _latent_qk(params, mcfg, h, x, positions)
+    # scores must match decompressed MLA: scale by sqrt(qk_head_dim)
+    scale_fix = jnp.sqrt(mcfg.latent_dim / mcfg.qk_head_dim).astype(q_t.dtype)
+    q_t = q_t * scale_fix  # sla2/full divide by sqrt(latent_dim)
+
+    k_bh = jnp.broadcast_to(k_t[:, None], (b, h, n, k_t.shape[-1]))
+    v_bh = jnp.broadcast_to(c_kv[:, None], (b, h, n, c_kv.shape[-1]))
+    if mechanism == "sla2":
+        o_lat = sla2lib.sla2_attention(params["sla2"], q_t, k_bh, v_bh,
+                                       sla2_cfg)
+    else:  # dense latent attention
+        d_lat = q_t.shape[-1]
+        s = jnp.einsum("bhnd,bhmd->bhnm", q_t.astype(jnp.float32),
+                       k_bh.astype(jnp.float32)) / jnp.sqrt(d_lat)
+        cm = masklib.token_causal_mask(n, n)
+        s = jnp.where(cm, s, masklib.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhnm,bhmd->bhnd", p,
+                           v_bh.astype(jnp.float32)).astype(x.dtype)
+    # decompress values per head:  o_h = o_lat_h @ W_uv^h
+    w_uv = params["w_uv"].reshape(mcfg.kv_lora_rank, h, mcfg.v_head_dim)
+    o = jnp.einsum("bhnr,rhv->bnhv", o_lat.astype(jnp.float32),
+                   w_uv.astype(jnp.float32))
+    o = o.reshape(b, n, h * mcfg.v_head_dim).astype(x.dtype)
+    return o @ params["w_o"]
+
+
+# ---------------------------------------------------------------------------
+# Decode with the latent block cache
+# ---------------------------------------------------------------------------
+
+def init_mla_cache(mcfg: MLAConfig, num_heads: int, batch: int, max_len: int,
+                   block_k: int, dtype=jnp.bfloat16) -> dict:
+    t_n = max_len // block_k
+    d_lat = mcfg.latent_dim
+    return {
+        "k_lat": jnp.zeros((batch, max_len, d_lat), dtype),   # [c_kv; k_rope]
+        "pooled_k": jnp.zeros((batch, t_n, d_lat), jnp.float32),
+        "h_tot": jnp.zeros((batch, d_lat, mcfg.kv_lora_rank), jnp.float32),
+        "z_tot": jnp.zeros((batch, d_lat), jnp.float32),
+        "blk_h": jnp.zeros((batch, d_lat, mcfg.kv_lora_rank), jnp.float32),
+        "blk_z": jnp.zeros((batch, d_lat), jnp.float32),
+        "blk_ksum": jnp.zeros((batch, d_lat), jnp.float32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_prefill(params: dict, x: jax.Array, positions, cache: dict, *,
+                mcfg: MLAConfig, num_heads: int, mechanism: str,
+                sla2_cfg: Optional[SLA2Config]):
+    """Full-sequence forward + populate the latent cache (N % block_k == 0)."""
+    b, n, _ = x.shape
+    out = mla_forward(params, x, positions, mcfg=mcfg, num_heads=num_heads,
+                      mechanism=mechanism, sla2_cfg=sla2_cfg)
+    _, k_t, c_kv = _latent_qk(params, mcfg, num_heads, x, positions)
+    bk = sla2_cfg.router.block_k if sla2_cfg else 64
+    t_full = n // bk
+    cache = dict(cache)
+    cache["k_lat"] = jax.lax.dynamic_update_slice(
+        cache["k_lat"], k_t.astype(cache["k_lat"].dtype), (0, 0, 0))
+    kb = k_t.reshape(b, t_full, bk, -1).astype(jnp.float32)
+    cache["pooled_k"] = jax.lax.dynamic_update_slice(
+        cache["pooled_k"], kb.mean(axis=-2), (0, 0, 0))
+    kf = phi(kb)
+    vb = c_kv.reshape(b, t_full, bk, -1).astype(jnp.float32)
+    cache["h_tot"] = jnp.einsum("btkd,btkr->bdr", kf, vb)
+    cache["z_tot"] = kf.sum(axis=(1, 2))
+    cache["length"] = jnp.asarray(n, jnp.int32)
+    return out, cache
+
+
+def mla_decode_step(params: dict, x_t: jax.Array, cache: dict, *,
+                    mcfg: MLAConfig, num_heads: int, k_frac: float,
+                    block_k: int):
+    """One-token MLA-SLA2 decode. x_t: (B, 1, d_model)."""
+    b = x_t.shape[0]
+    h = num_heads
+    d_lat, r = mcfg.latent_dim, mcfg.kv_lora_rank
+    bk = block_k
+    t = cache["length"]
+    positions = jnp.broadcast_to(t[None], (b, 1))
+    q_t, k_new, c_new = _latent_qk(params, mcfg, h, x_t, positions)
+    scale_fix = jnp.sqrt(d_lat / mcfg.qk_head_dim).astype(jnp.float32)
+    q1 = q_t[:, :, 0].astype(jnp.float32) * scale_fix      # (B, H, d_lat)
+
+    cache = dict(cache)
+    cache["k_lat"] = jax.lax.dynamic_update_slice(
+        cache["k_lat"], k_new.astype(cache["k_lat"].dtype), (0, t, 0))
+    t_new = t + 1
+    cache["length"] = t_new
+    max_len = cache["k_lat"].shape[1]
+    t_n = max_len // bk
+    cur_blk = (t_new - 1) // bk
+
+    # --- incremental block stats (reset at block start) ---
+    k1 = k_new[:, 0].astype(jnp.float32)                   # (B, d_lat)
+    at_start = ((t_new - 1) % bk) == 0
+    blk_ksum = jnp.where(at_start, 0.0, cache["blk_ksum"]) + k1
+    kf1 = phi(k1)
+    blk_h = jnp.where(at_start, 0.0, cache["blk_h"]) \
+        + kf1[:, :, None] * c_new[:, 0].astype(jnp.float32)[:, None, :]
+    blk_z = jnp.where(at_start, 0.0, cache["blk_z"]) + kf1
+    fill = ((t_new - 1) % bk) + 1
+    cache["pooled_k"] = jax.lax.dynamic_update_slice(
+        cache["pooled_k"], (blk_ksum / fill)[:, None], (0, cur_blk, 0))
+    completed = (t_new % bk) == 0
+    cache["h_tot"] = cache["h_tot"] + jnp.where(completed, blk_h, 0.0)
+    cache["z_tot"] = cache["z_tot"] + jnp.where(completed, blk_z, 0.0)
+    cache["blk_ksum"], cache["blk_h"], cache["blk_z"] = blk_ksum, blk_h, blk_z
+
+    # --- route over pooled latent keys ---
+    sla2_p = params["sla2"]
+    rp = sla2_p.get("router", {})
+    qr, pk = q1, cache["pooled_k"]
+    if rp:
+        qr = qr @ rp["proj_q"].astype(jnp.float32)
+        pk = pk @ rp["proj_k"].astype(jnp.float32)
+    scores = jnp.einsum("bhd,btd->bht", qr, pk) / jnp.sqrt(d_lat)
+    blk_ids = jnp.arange(t_n)
+    scores = jnp.where(blk_ids[None, None, :] <= cur_blk, scores,
+                       masklib.NEG_INF)
+    scores = jnp.where(blk_ids[None, None, :] == cur_blk, jnp.inf, scores)
+    k_sel = max(1, round(k_frac * t_n))
+    top_vals, idx = jax.lax.top_k(scores, k_sel)           # (B, H, K_sel)
+    valid = top_vals > masklib.NEG_INF * 0.5
+
+    # --- sparse branch over gathered latent blocks ---
+    k_blocks = cache["k_lat"].reshape(b, t_n, bk, d_lat)
+    # union of per-head selections gathered per head: (B, H, K_sel, bk, d)
+    kg = jnp.take_along_axis(
+        k_blocks[:, None], idx[..., None, None], axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhjkd->bhjk", q1, kg) / jnp.sqrt(d_lat)
+    pos = idx[..., None] * bk + jnp.arange(bk)[None, None, None, :]
+    vis = (pos < t_new) & valid[..., None]
+    s = jnp.where(vis, s, masklib.NEG_INF)
+    p = jax.nn.softmax(s.reshape(b, h, -1), axis=-1).reshape(s.shape)
+    vg = kg[..., :r]  # values = c_kv part of the latent
+    o_s = jnp.einsum("bhjk,bhjkr->bhr", p, vg)
+
+    # --- linear branch: totals minus selected complete blocks ---
+    # phi(q).h_j contracted over the gathered latent tiles directly
+    # (phi(q).h_j = sum_k (phi(q).phi(k_jk)) c_jk) — no (d_lat x r)
+    # per-block states are formed (they are 100s of GiB at decode_32k).
+    complete_bound = cur_blk + jnp.where(completed, 1, 0)
+    selc = (valid & (idx < complete_bound)).astype(jnp.float32)
+    qf = phi(q1)                                     # (B, H, d_lat)
+    kf_sel = phi(kg)                                 # (B, H, K_sel, bk, d)
+    ls = jnp.einsum("bhd,bhjkd->bhjk", qf, kf_sel)
+    ls = ls * selc[..., None]
+    sub_num = jnp.einsum("bhjk,bhjkr->bhr", ls, vg)
+    sub_den = ls.sum(axis=(-1, -2))
+    den_tot = jnp.einsum("bhd,bd->bh", qf, cache["z_tot"])
+    num = jnp.einsum("bhd,bdr->bhr", qf, cache["h_tot"]) - sub_num
+    # relative empty-complement threshold (cancellation residuals are not 0)
+    den = den_tot - sub_den
+    den = jnp.where(den > 1e-4 * den_tot + 1e-12, den, 0.0)[..., None]
+    o_l = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+
+    a = jax.nn.sigmoid(sla2_p["alpha_logit"].astype(jnp.float32))
+    if a.shape[0] == 1 and h > 1:
+        a = jnp.broadcast_to(a, (h, a.shape[1]))
+    a_last = a[:, -1][None, :, None]
+    a_eff = jnp.where(den > 0, a_last, 1.0)
+    o_lat = a_eff * o_s + (1.0 - a_eff) * o_l              # (B, H, r)
+
+    w_uv = params["w_uv"].reshape(r, h, mcfg.v_head_dim)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(b, 1, h * mcfg.v_head_dim).astype(x_t.dtype)
+    return o @ params["w_o"], cache

@@ -1,0 +1,124 @@
+"""Mixture-of-Experts FFN with expert parallelism (EP).
+
+Token-choice top-k routing with capacity-based scatter dispatch (the
+GShard/MaxText pattern, which is what XLA shards well):
+
+    router logits -> top-k (gates, expert ids)
+    rank-within-expert via cumsum of one-hot      (T, E)
+    scatter tokens into a per-expert buffer       (E, C, d)   [sharded over EP]
+    grouped einsum with expert weights            (E, d, ff)  [sharded over EP]
+    gather/combine back with gate weighting
+
+Tokens beyond an expert's capacity ``C = ceil(T*k/E * capacity_factor)`` are
+dropped (standard GShard semantics); the aux load-balance loss keeps the
+router near-uniform so drops are rare.  DeepSeek-style *shared experts* run
+densely beside the routed ones.
+
+Under pjit the buffer's EP sharding makes XLA emit the canonical
+all-to-all dispatch/combine pair across the ``model`` axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int            # per-expert hidden dim
+    num_shared: int = 0         # DeepSeek shared experts (always-on)
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    router_dtype: str = "float32"
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    e, ff = cfg.num_experts, cfg.d_ff_expert
+    std = d_model ** -0.5
+    p = {
+        "router": L.truncated_normal(ks[0], (d_model, e), jnp.float32, std),
+        # fused gate+up: (E, d, 2*ff); down: (E, ff, d)
+        "w_in": L.truncated_normal(ks[1], (e, d_model, 2 * ff), dtype, std),
+        "w_out": L.truncated_normal(ks[2], (e, ff, d_model), dtype, ff ** -0.5),
+    }
+    if cfg.num_shared:
+        p["shared"] = L.init_mlp(
+            jax.random.fold_in(key, 7), d_model, cfg.num_shared * ff,
+            gated=True, dtype=dtype)
+    return p
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: MoEConfig,
+            ep_axis: Optional[str] = None):
+    """x: (B, S, d) -> (y: (B, S, d), aux_loss: scalar).
+
+    ``ep_axis`` is the mesh axis name experts are sharded over; the dispatch
+    buffer gets an explicit sharding constraint on it so GSPMD materialises
+    the all-to-all at the dispatch/combine boundary.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)             # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                 # renorm
+
+    # ---- load-balance aux loss (Switch): E * sum_e f_e * p_e ----
+    one_hot_top1 = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
+    f = one_hot_top1.mean(0)
+    p_mean = probs.mean(0)
+    aux = cfg.aux_loss_weight * e * jnp.sum(f * p_mean)
+
+    # ---- capacity + rank-within-expert ----
+    cap = int(max(1, round(t * k / e * cfg.capacity_factor)))
+    # flatten (token, slot) pairs; earlier slots (higher gate) win capacity
+    flat_ids = expert_ids.reshape(t * k)                        # (T*k,)
+    oh = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)           # (T*k, E)
+    ranks = jnp.cumsum(oh, axis=0) - oh                         # exclusive
+    rank_in_e = jnp.take_along_axis(
+        ranks, flat_ids[:, None], axis=1)[:, 0]                 # (T*k,)
+    keep = rank_in_e < cap
+    slot = flat_ids * cap + jnp.minimum(rank_in_e, cap - 1)     # (T*k,)
+
+    # ---- dispatch: scatter tokens into (E*C, d) ----
+    xk = jnp.repeat(xt, k, axis=0)                              # (T*k, d)
+    buf = jnp.zeros((e * cap, d), xt.dtype)
+    buf = buf.at[jnp.where(keep, slot, e * cap - 1)].add(
+        jnp.where(keep[:, None], xk, 0.0),
+        mode="drop", indices_are_sorted=False)
+    buf = buf.reshape(e, cap, d)
+    if ep_axis is not None:
+        buf = jax.lax.with_sharding_constraint(
+            buf, jax.sharding.PartitionSpec(ep_axis, None, None))
+
+    # ---- expert compute: grouped gated MLP ----
+    hin = jnp.einsum("ecd,edf->ecf", buf, params["w_in"])       # (E, C, 2ff)
+    gate_h, up_h = jnp.split(hin, 2, axis=-1)
+    act = jax.nn.silu(gate_h.astype(jnp.float32)).astype(up_h.dtype) * up_h
+    out = jnp.einsum("ecf,efd->ecd", act, params["w_out"])      # (E, C, d)
+    if ep_axis is not None:
+        out = jax.lax.with_sharding_constraint(
+            out, jax.sharding.PartitionSpec(ep_axis, None, None))
+
+    # ---- combine: gather each (token, slot) result, weight by gate ----
+    out_flat = out.reshape(e * cap, d)
+    ys = jnp.take(out_flat, slot, axis=0)                       # (T*k, d)
+    w = (gate_vals.reshape(t * k) * keep.astype(jnp.float32))
+    y = (ys.astype(jnp.float32) * w[:, None]).reshape(t, k, d).sum(axis=1)
+    y = y.astype(x.dtype).reshape(b, s, d)
+
+    if cfg.num_shared:
+        y = y + L.mlp(params["shared"], x)
+    return y, aux

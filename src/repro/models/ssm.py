@@ -1,0 +1,360 @@
+"""State-space / recurrent sequence mixers: Mamba(SSD), mLSTM, sLSTM.
+
+All three follow the same contract as the attention layers so
+transformer.py can scan over heterogeneous blocks:
+
+    init_*        -> params
+    *_forward     (params, x, [state]) -> (y, final_state)
+    *_init_state  (cfg, batch)         -> state pytree
+    *_decode_step (params, x_t, state) -> (y_t, state)
+
+Mamba is the simplified Mamba-2 SSD form (scalar decay per head, state
+(dh, ds)) computed **chunkwise**: within a chunk the recurrence is expanded
+into an attention-like masked matmul (MXU-friendly), across chunks a
+``lax.scan`` carries the state — O(N) time, O(chunk^2) working set.
+
+mLSTM (xLSTM) is the same skeleton plus exponential input/forget gates with
+the max-stabiliser m and normaliser n, also chunkwise.
+
+sLSTM has a nonlinear hidden->gate recurrence, so it is inherently
+sequential: one ``lax.scan`` over time (cheap per step; XLA compiles a
+single while loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import maps
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    num_heads: int
+    head_dim: int            # per-head channel dim (dh)
+    d_state: int = 16        # ds (mamba) / qk head dim (mlstm uses head_dim)
+    chunk: int = 128
+    # mLSTM: v head dim = head_dim, qk head dim = head_dim // 2
+    qk_dim: int = 0          # 0 -> head_dim (mamba) or head_dim//2 (mlstm)
+
+
+# ===========================================================================
+# Mamba (SSD, scalar-decay-per-head)
+# ===========================================================================
+
+def init_mamba(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    h, dh, ds = cfg.num_heads, cfg.head_dim, cfg.d_state
+    d_inner = h * dh
+    std = d_model ** -0.5
+    return {
+        "w_x": L.truncated_normal(ks[0], (d_model, d_inner), dtype, std),
+        "w_gate": L.truncated_normal(ks[1], (d_model, d_inner), dtype, std),
+        "w_b": L.truncated_normal(ks[2], (d_model, h * ds), dtype, std),
+        "w_c": L.truncated_normal(ks[3], (d_model, h * ds), dtype, std),
+        "w_dt": L.truncated_normal(ks[4], (d_model, h), dtype, std),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "w_out": L.truncated_normal(ks[5], (d_inner, d_model), dtype,
+                                    d_inner ** -0.5),
+    }
+
+
+def mamba_init_state(cfg: SSMConfig, batch: int) -> jax.Array:
+    return jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.d_state),
+                     jnp.float32)
+
+
+def _mamba_scan_chunks(xbch, a_b, b_b, c_b, s0):
+    """Chunkwise SSD. xbch: (B, nc, c, H, dh); a_b: (B, nc, c, H) decay in
+    (0,1); b_b/c_b: (B, nc, c, H, ds); s0: (B, H, dh, ds)."""
+    def chunk_step(s, args):
+        xb, ab, bb, cb = args        # (B, c, H, dh), (B, c, H), ...
+        la = jnp.log(jnp.maximum(ab, 1e-37))
+        lcum = jnp.cumsum(la, axis=1)                       # (B, c, H)
+        # inter-chunk: y_inter_t = C_t . (prod_{s<=t} a_s) s_carry
+        decay0 = jnp.exp(lcum)                              # (B, c, H)
+        y_inter = jnp.einsum("bch,bhds,bchs->bchd", decay0, s, cb)
+        # intra-chunk, with the convention u_s enters AFTER decay a_s:
+        #   s_t = a_t s_{t-1} + u_t => y_t = C_t . sum_{s<=t} e^{lcum_t-lcum_s} u_s
+        rel = lcum[:, :, None, :] - lcum[:, None, :, :]     # (B, t, s, H)
+        causal = jnp.tril(jnp.ones((xb.shape[1], xb.shape[1]), bool))
+        # mask in log space BEFORE exp: the t<s entries can overflow exp
+        dmat = jnp.exp(jnp.where(causal[None, :, :, None], rel, -1e30))
+        g = jnp.einsum("bchs,bghs->bcgh", cb, bb)           # C_t . B_s
+        y_intra = jnp.einsum("bcgh,bcgh,bghd->bchd", g, dmat, xb)
+        # state update: s' = e^{lcum_T} s + sum_s e^{lcum_T - lcum_s} u_s
+        decay_tail = jnp.exp(lcum[:, -1:, :] - lcum)        # (B, c, H)
+        s_new = jnp.einsum("bh,bhds->bhds", jnp.exp(lcum[:, -1]), s) \
+            + jnp.einsum("bch,bchd,bchs->bhds", decay_tail, xb, bb)
+        return s_new, y_inter + y_intra
+
+    s_fin, ys = maps.scan(
+        chunk_step,
+        s0, (xbch.transpose(1, 0, 2, 3, 4), a_b.transpose(1, 0, 2, 3),
+             b_b.transpose(1, 0, 2, 3, 4), c_b.transpose(1, 0, 2, 3, 4)))
+    return s_fin, ys.transpose(1, 0, 2, 3, 4)               # (B, nc, c, H, dh)
+
+
+def mamba_forward(params: dict, x: jax.Array, cfg: SSMConfig,
+                  state: Optional[jax.Array] = None):
+    """x: (B, N, d_model) -> (y, final_state). N % cfg.chunk == 0."""
+    b, n, _ = x.shape
+    h, dh, ds, c = cfg.num_heads, cfg.head_dim, cfg.d_state, cfg.chunk
+    c = min(c, n)
+    nc = n // c
+    xs = (x @ params["w_x"]).reshape(b, n, h, dh)
+    gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+    bb = (x @ params["w_b"]).reshape(b, n, h, ds).astype(jnp.float32)
+    cb = (x @ params["w_c"]).reshape(b, n, h, ds).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (x @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(-jnp.exp(params["a_log"].astype(jnp.float32)) * dt)  # (B,N,H)
+    xin = (xs.astype(jnp.float32) * dt[..., None])
+
+    if state is None:
+        state = mamba_init_state(cfg, b)
+    s_fin, y = _mamba_scan_chunks(
+        xin.reshape(b, nc, c, h, dh), a.reshape(b, nc, c, h),
+        bb.reshape(b, nc, c, h, ds), cb.reshape(b, nc, c, h, ds), state)
+    y = y.reshape(b, n, h, dh) + params["d_skip"].astype(jnp.float32)[
+        None, None, :, None] * xs.astype(jnp.float32)
+    y = (y * gate.reshape(b, n, h, dh)).reshape(b, n, h * dh)
+    return (y.astype(x.dtype) @ params["w_out"]), s_fin
+
+
+def mamba_decode_step(params: dict, x_t: jax.Array, cfg: SSMConfig,
+                      state: jax.Array):
+    """x_t: (B, 1, d_model)."""
+    b = x_t.shape[0]
+    h, dh, ds = cfg.num_heads, cfg.head_dim, cfg.d_state
+    xs = (x_t @ params["w_x"]).reshape(b, h, dh)
+    gate = jax.nn.silu((x_t @ params["w_gate"]).astype(jnp.float32))
+    bb = (x_t @ params["w_b"]).reshape(b, h, ds).astype(jnp.float32)
+    cb = (x_t @ params["w_c"]).reshape(b, h, ds).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (x_t @ params["w_dt"]).astype(jnp.float32).reshape(b, h)
+        + params["dt_bias"])
+    a = jnp.exp(-jnp.exp(params["a_log"].astype(jnp.float32)) * dt)  # (B,H)
+    u = (xs.astype(jnp.float32) * dt[..., None])
+    state = a[..., None, None] * state + jnp.einsum("bhd,bhs->bhds", u, bb)
+    y = jnp.einsum("bhds,bhs->bhd", state, cb) \
+        + params["d_skip"].astype(jnp.float32)[None, :, None] \
+        * xs.astype(jnp.float32)
+    y = (y * gate.reshape(b, h, dh)).reshape(b, 1, h * dh)
+    return (y.astype(x_t.dtype) @ params["w_out"]), state
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory cell), chunkwise-stabilised
+# ===========================================================================
+
+def init_mlstm(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 7)
+    h, dv = cfg.num_heads, cfg.head_dim
+    dk = cfg.qk_dim or dv // 2
+    std = d_model ** -0.5
+    return {
+        "w_q": L.truncated_normal(ks[0], (d_model, h * dk), dtype, std),
+        "w_k": L.truncated_normal(ks[1], (d_model, h * dk), dtype, std),
+        "w_v": L.truncated_normal(ks[2], (d_model, h * dv), dtype, std),
+        "w_i": L.truncated_normal(ks[3], (d_model, h), dtype, std),
+        "w_f": L.truncated_normal(ks[4], (d_model, h), dtype, std),
+        "f_bias": 3.0 * jnp.ones((h,), dtype),   # start remembering
+        "i_bias": jnp.zeros((h,), dtype),
+        "out_norm": L.init_rmsnorm(h * dv, dtype),
+        "w_gate": L.truncated_normal(ks[5], (d_model, h * dv), dtype, std),
+        "w_out": L.truncated_normal(ks[6], (h * dv, d_model), dtype,
+                                    (h * dv) ** -0.5),
+    }
+
+
+def mlstm_init_state(cfg: SSMConfig, batch: int) -> dict:
+    h, dv = cfg.num_heads, cfg.head_dim
+    dk = cfg.qk_dim or dv // 2
+    return {
+        "c": jnp.zeros((batch, h, dk, dv), jnp.float32),
+        "n": jnp.zeros((batch, h, dk), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_forward(params: dict, x: jax.Array, cfg: SSMConfig,
+                  state: Optional[dict] = None):
+    """Chunkwise stabilised mLSTM. x: (B, N, d_model)."""
+    b, n, _ = x.shape
+    h, dv = cfg.num_heads, cfg.head_dim
+    dk = cfg.qk_dim or dv // 2
+    c_len = min(cfg.chunk, n)
+    nc = n // c_len
+    q = (x @ params["w_q"]).reshape(b, n, h, dk).astype(jnp.float32)
+    k = (x @ params["w_k"]).reshape(b, n, h, dk).astype(jnp.float32) \
+        / jnp.sqrt(dk)
+    v = (x @ params["w_v"]).reshape(b, n, h, dv).astype(jnp.float32)
+    it = ((x @ params["w_i"]).astype(jnp.float32)
+          + params["i_bias"]).reshape(b, n, h)              # log input gate
+    ft = jax.nn.log_sigmoid(
+        (x @ params["w_f"]).astype(jnp.float32)
+        + params["f_bias"]).reshape(b, n, h)                # log forget gate
+
+    if state is None:
+        state = mlstm_init_state(cfg, b)
+
+    rs = lambda t, d: t.reshape(b, nc, c_len, h, d).transpose(1, 0, 2, 3, 4)
+    qc, kc, vc = rs(q, dk), rs(k, dk), rs(v, dv)
+    ic = it.reshape(b, nc, c_len, h).transpose(1, 0, 2, 3)
+    fc = ft.reshape(b, nc, c_len, h).transpose(1, 0, 2, 3)
+
+    def chunk_step(st, args):
+        qb, kb, vb, ib, fb = args    # (B, c, H, *)
+        c0, n0, m0 = st["c"], st["n"], st["m"]
+        fcum = jnp.cumsum(fb, axis=1)                       # (B, c, H)
+        # log weight of u_s at position t (s<=t): fcum_t - fcum_s + i_s
+        lw = (fcum[:, :, None, :] - fcum[:, None, :, :]
+              + ib[:, None, :, :])                          # (B, t, s, H)
+        causal = jnp.tril(jnp.ones((lw.shape[1], lw.shape[1]), bool))
+        lw = jnp.where(causal[None, :, :, None], lw, -jnp.inf)
+        # log weight of the carried state at position t
+        lw0 = fcum + m0[:, None, :]                         # (B, c, H)
+        m_t = jnp.maximum(jnp.max(lw, axis=2), lw0)         # (B, c, H)
+        m_t = jnp.maximum(m_t, -1e30)
+        w = jnp.exp(lw - m_t[:, :, None, :])                # (B, t, s, H)
+        w0 = jnp.exp(lw0 - m_t)                             # (B, c, H)
+        scores = jnp.einsum("bthd,bshd->btsh", qb, kb)      # (B, t, s, H)
+        num = jnp.einsum("btsh,btsh,bshv->bthv", scores, w, vb) \
+            + jnp.einsum("bth,bthd,bhdv->bthv", w0, qb, c0)
+        den = jnp.einsum("btsh,btsh->bth", scores, w) \
+            + jnp.einsum("bth,bthd,bhd->bth", w0, qb, n0)
+        # paper: / max(|n^T q|, 1); in stabilised units the floor is e^{-m}
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # chunk-final state
+        m_end = jnp.maximum(fcum[:, -1] + m0,
+                            jnp.max(fcum[:, -1:, :] - fcum + ib, axis=1))
+        ws = jnp.exp(fcum[:, -1:, :] - fcum + ib
+                     - m_end[:, None, :])                   # (B, c, H)
+        c_new = jnp.exp(fcum[:, -1] + m0 - m_end)[:, :, None, None] * c0 \
+            + jnp.einsum("bsh,bshd,bshv->bhdv", ws, kb, vb)
+        n_new = jnp.exp(fcum[:, -1] + m0 - m_end)[:, :, None] * n0 \
+            + jnp.einsum("bsh,bshd->bhd", ws, kb)
+        return {"c": c_new, "n": n_new, "m": m_end}, y
+
+    # mLSTM chunk scan stays looped even in accounting mode: unrolling
+    # 256 chunk bodies x 14 layers is a compile explosion; the xlstm cells'
+    # HLO flops are therefore per-chunk and the roofline uses the analytic
+    # mLSTM cost for that arch (launch/roofline.py ANALYTIC_SSM note).
+    st_fin, ys = maps.scan(chunk_step, state, (qc, kc, vc, ic, fc),
+                           never_unroll=True)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n, h * dv)
+    y = L.rmsnorm(params["out_norm"], y.astype(x.dtype))
+    gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+    y = (y.astype(jnp.float32) * gate).astype(x.dtype)
+    return y @ params["w_out"], st_fin
+
+
+def mlstm_decode_step(params: dict, x_t: jax.Array, cfg: SSMConfig,
+                      state: dict):
+    b = x_t.shape[0]
+    h, dv = cfg.num_heads, cfg.head_dim
+    dk = cfg.qk_dim or dv // 2
+    q = (x_t @ params["w_q"]).reshape(b, h, dk).astype(jnp.float32)
+    k = (x_t @ params["w_k"]).reshape(b, h, dk).astype(jnp.float32) \
+        / jnp.sqrt(dk)
+    v = (x_t @ params["w_v"]).reshape(b, h, dv).astype(jnp.float32)
+    it = ((x_t @ params["w_i"]).astype(jnp.float32)
+          + params["i_bias"]).reshape(b, h)
+    ft = jax.nn.log_sigmoid((x_t @ params["w_f"]).astype(jnp.float32)
+                            + params["f_bias"]).reshape(b, h)
+    m_new = jnp.maximum(ft + state["m"], it)
+    fw = jnp.exp(ft + state["m"] - m_new)
+    iw = jnp.exp(it - m_new)
+    c = fw[..., None, None] * state["c"] \
+        + iw[..., None, None] * jnp.einsum("bhd,bhv->bhdv", k, v)
+    nn = fw[..., None] * state["n"] + iw[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, c)
+    den = jnp.einsum("bhd,bhd->bh", q, nn)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    y = y.reshape(b, 1, h * dv)
+    y = L.rmsnorm(params["out_norm"], y.astype(x_t.dtype))
+    gate = jax.nn.silu((x_t @ params["w_gate"]).astype(jnp.float32))
+    y = (y.astype(jnp.float32) * gate.reshape(b, 1, -1)).astype(x_t.dtype)
+    return y @ params["w_out"], {"c": c, "n": nn, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM (scalar-memory cell with hidden recurrence) — sequential
+# ===========================================================================
+
+def init_slstm(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    h, dh = cfg.num_heads, cfg.head_dim
+    d_inner = h * dh
+    std = d_model ** -0.5
+    return {
+        # 4 gates (i, f, z, o) from input and block-diag recurrent weights
+        "w_in": L.truncated_normal(ks[0], (d_model, 4 * d_inner), dtype, std),
+        "r": L.truncated_normal(ks[1], (h, dh, 4 * dh), dtype, dh ** -0.5),
+        "bias": jnp.zeros((4 * d_inner,), dtype),
+        "out_norm": L.init_rmsnorm(d_inner, dtype),
+        "w_out": L.truncated_normal(ks[2], (d_inner, d_model), dtype,
+                                    d_inner ** -0.5),
+    }
+
+
+def slstm_init_state(cfg: SSMConfig, batch: int) -> dict:
+    h, dh = cfg.num_heads, cfg.head_dim
+    z = lambda: jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, h, dh), -1e30, jnp.float32)}
+
+
+def _slstm_cell(params, cfg, gates_in, st):
+    """gates_in: (B, 4*H*dh) precomputed input contribution."""
+    b = gates_in.shape[0]
+    h, dh = cfg.num_heads, cfg.head_dim
+    rec = jnp.einsum("bhd,hdg->bhg", st["h"], params["r"].astype(jnp.float32))
+    g = gates_in.reshape(b, h, 4 * dh) + rec \
+        + params["bias"].astype(jnp.float32).reshape(h, 4 * dh)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)               # (B, H, dh) each
+    lf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(lf + st["m"], gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(lf + st["m"] - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c = f * st["c"] + i * z
+    n = f * st["n"] + i
+    hh = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": hh, "m": m_new}
+
+
+def slstm_forward(params: dict, x: jax.Array, cfg: SSMConfig,
+                  state: Optional[dict] = None):
+    b, n, _ = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    if state is None:
+        state = slstm_init_state(cfg, b)
+    gates_in = (x @ params["w_in"]).astype(jnp.float32)     # (B, N, 4*H*dh)
+
+    def step(st, g_t):
+        st = _slstm_cell(params, cfg, g_t, st)
+        return st, st["h"]
+
+    st_fin, hs = maps.scan(step, state, gates_in.transpose(1, 0, 2),
+                           never_unroll=True)
+    y = hs.transpose(1, 0, 2, 3).reshape(b, n, h * dh)
+    y = L.rmsnorm(params["out_norm"], y.astype(x.dtype))
+    return y @ params["w_out"], st_fin
+
+
+def slstm_decode_step(params: dict, x_t: jax.Array, cfg: SSMConfig,
+                      state: dict):
+    g = (x_t[:, 0] @ params["w_in"]).astype(jnp.float32)
+    st = _slstm_cell(params, cfg, g, state)
+    y = st["h"].reshape(x_t.shape[0], 1, -1)
+    y = L.rmsnorm(params["out_norm"], y.astype(x_t.dtype))
+    return y @ params["w_out"], st

@@ -1,0 +1,475 @@
+"""The decoder-only transformer substrate for every assigned LM architecture.
+
+One ``ModelConfig`` describes an architecture; layers are laid out as
+
+    [first_kinds...unrolled]  +  scan over n_groups x layer_kinds
+
+so heterogeneous stacks (llama4's alternating dense/MoE, deepseek's leading
+dense-FFN layer, xlstm's 7:1 mLSTM:sLSTM pattern) scan over a homogeneous
+*group* while keeping the HLO compact (one group body regardless of depth).
+
+Layer kinds:
+    dense     pre-norm attention + gated MLP
+    moe       pre-norm attention + MoE FFN (EP-sharded)
+    mla_dense DeepSeek MLA attention + gated MLP
+    mla_moe   DeepSeek MLA attention + MoE FFN
+    hybrid    Hymba parallel attention+Mamba mixer + MLP
+    mlstm     xLSTM matrix-memory block (no FFN)
+    slstm     xLSTM scalar-memory block (no FFN)
+
+Params are plain nested dicts (stacked on a leading group axis inside
+"groups"); sharding is assigned by key-path in distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import hybrid as HY
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.core import maps
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"           # dense|moe|ssm|hybrid|vlm|audio|dit
+    n_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 512
+    vocab_size: int = 1024
+    # layer layout
+    layer_kinds: tuple = ("dense",)
+    first_kinds: tuple = ()
+    # attention
+    mechanism: str = "sla2"         # full | sla2 | sla | sparse_only
+    causal: bool = True
+    sliding_window: Optional[int] = None
+    qk_norm: bool = False
+    prefix_len: int = 0             # prefix-LM tokens (VLM image prefix)
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    mlp_activation: str = "silu"
+    mlp_gated: bool = True
+    tie_embeddings: bool = True
+    embed_scale: bool = False       # gemma: embeddings * sqrt(d_model)
+    # SLA2
+    block_q: int = 128
+    block_k: int = 64
+    k_frac: float = 0.05
+    quant_bits: str = "int8"
+    sla2_impl: str = "gather"
+    q_chunk: int = 16
+    fuse_branches: bool = False
+    # sub-configs
+    moe: Optional[MOE.MoEConfig] = None
+    mla: Optional[MLA.MLAConfig] = None
+    ssm: Optional[SSM.SSMConfig] = None
+    # training / system
+    remat: str = "full"             # full | none
+    dtype: str = "bfloat16"
+    max_target_len: int = 8192      # sizes the alpha table at init
+    loss_chunk: int = 1024          # CE computed per sequence chunk
+    z_loss: float = 1e-4
+    ep_axis: Optional[str] = None   # mesh axis for MoE expert parallelism
+    sp_axis: Optional[str] = None   # mesh axis for sequence sharding hints
+
+    # ------------------------------------------------------------------
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_groups(self) -> int:
+        body = self.n_layers - len(self.first_kinds)
+        assert body % len(self.layer_kinds) == 0, \
+            f"{body} layers not divisible by group {self.layer_kinds}"
+        return body // len(self.layer_kinds)
+
+    def attention_config(self) -> A.AttentionConfig:
+        return A.AttentionConfig(
+            d_model=self.d_model, num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads, head_dim=self.head_dim,
+            mechanism=self.mechanism, causal=self.causal,
+            prefix_len=self.prefix_len, sliding_window=self.sliding_window,
+            qk_norm=self.qk_norm, rope_theta=self.rope_theta,
+            use_rope=self.use_rope, block_q=self.block_q,
+            block_k=self.block_k, k_frac=self.k_frac,
+            quant_bits=self.quant_bits, sla2_impl=self.sla2_impl,
+            n_q_blocks=max(1, self.max_target_len // self.block_q))
+
+    def sla2_config(self):
+        cfg = self.attention_config().sla2_config()
+        return dataclasses.replace(cfg, q_chunk=self.q_chunk,
+                                   fuse_branches=self.fuse_branches)
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    d, dt = cfg.d_model, cfg.param_dtype
+    p: dict[str, Any] = {"ln1": L.init_rmsnorm(d, dt)}
+    if kind in ("dense", "moe"):
+        p["attn"] = A.init_attention(ks[0], cfg.attention_config(), dt)
+    elif kind in ("mla_dense", "mla_moe"):
+        p["mla"] = MLA.init_mla(
+            ks[0], d, cfg.num_heads, cfg.mla, mechanism=cfg.mechanism,
+            sla2_cfg=cfg.sla2_config(),
+            n_q_blocks=max(1, cfg.max_target_len // cfg.block_q), dtype=dt)
+    elif kind == "hybrid":
+        p["mixer"] = HY.init_hybrid(ks[0], cfg.attention_config(), cfg.ssm, dt)
+    elif kind == "mlstm":
+        p["core"] = SSM.init_mlstm(ks[0], d, cfg.ssm, dt)
+        return p
+    elif kind == "slstm":
+        p["core"] = SSM.init_slstm(ks[0], d, cfg.ssm, dt)
+        return p
+    else:
+        raise ValueError(kind)
+    p["ln2"] = L.init_rmsnorm(d, dt)
+    if kind.endswith("moe"):
+        p["moe"] = MOE.init_moe(ks[1], d, cfg.moe, dt)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, gated=cfg.mlp_gated,
+                              dtype=dt)
+    return p
+
+
+def _init_group(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, len(cfg.layer_kinds))
+    return {f"l{i}": _init_layer(ks[i], cfg, kind)
+            for i, kind in enumerate(cfg.layer_kinds)}
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    k_e, k_f, k_g, k_h = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    params: dict[str, Any] = {
+        "embed": {"table": L.truncated_normal(
+            k_e, (cfg.vocab_size, cfg.d_model), dt, 1.0)},
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.truncated_normal(
+            k_h, (cfg.d_model, cfg.vocab_size), dt, cfg.d_model ** -0.5)
+    if cfg.first_kinds:
+        fks = jax.random.split(k_f, len(cfg.first_kinds))
+        params["prefix_layers"] = [
+            _init_layer(fks[i], cfg, kind)
+            for i, kind in enumerate(cfg.first_kinds)]
+    gks = jax.random.split(k_g, cfg.n_groups)
+    params["groups"] = jax.vmap(
+        functools.partial(_init_group, cfg=cfg))(gks)
+    return params
+
+
+# ===========================================================================
+# forward
+# ===========================================================================
+
+def _layer_forward(lp: dict, cfg: ModelConfig, kind: str, x, positions):
+    """One block. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(lp["ln1"], x)
+    if kind in ("dense", "moe"):
+        x = x + A.attention_forward(lp["attn"], cfg.attention_config(), h,
+                                    positions)
+    elif kind in ("mla_dense", "mla_moe"):
+        x = x + MLA.mla_forward(
+            lp["mla"], h, positions, mcfg=cfg.mla, num_heads=cfg.num_heads,
+            mechanism=cfg.mechanism, sla2_cfg=cfg.sla2_config())
+    elif kind == "hybrid":
+        x = x + HY.hybrid_forward(lp["mixer"], cfg.attention_config(),
+                                  cfg.ssm, h, positions)
+    elif kind == "mlstm":
+        y, _ = SSM.mlstm_forward(lp["core"], h, cfg.ssm)
+        return x + y, aux
+    elif kind == "slstm":
+        y, _ = SSM.slstm_forward(lp["core"], h, cfg.ssm)
+        return x + y, aux
+    h2 = L.rmsnorm(lp["ln2"], x)
+    if kind.endswith("moe"):
+        y, aux = MOE.moe_ffn(lp["moe"], h2, cfg.moe, ep_axis=cfg.ep_axis)
+        x = x + y
+    else:
+        x = x + L.mlp(lp["mlp"], h2, activation=cfg.mlp_activation)
+    return x, aux
+
+
+def _group_forward(gp: dict, cfg: ModelConfig, x, positions):
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.layer_kinds):
+        x, a = _layer_forward(gp[f"l{i}"], cfg, kind, x, positions)
+        aux = aux + a
+    return x, aux
+
+
+def _sp_constraint(cfg: ModelConfig, x):
+    """Sequence-parallel residual-stream hint between blocks."""
+    if cfg.sp_axis is None:
+        return x
+    spec = jax.sharding.PartitionSpec(None, cfg.sp_axis, None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens=None, *,
+            inputs_embeds=None, positions=None):
+    """Full-sequence forward. Returns (hidden (B,N,d) pre-unembed, aux)."""
+    if inputs_embeds is None:
+        x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    else:
+        x = inputs_embeds.astype(cfg.param_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    b, n, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(n), (b, n))
+    aux = jnp.zeros((), jnp.float32)
+
+    for i, kind in enumerate(cfg.first_kinds):
+        x, a = _layer_forward(params["prefix_layers"][i], cfg, kind, x,
+                              positions)
+        aux = aux + a
+
+    def body(carry, gp):
+        x, aux = carry
+        x = _sp_constraint(cfg, x)
+        x, a = _group_forward(gp, cfg, x, positions)
+        return (x, aux + a), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    (x, aux), _ = maps.scan(body, (x, aux), params["groups"])
+    x = L.rmsnorm(params["final_norm"], x)
+    return x, aux
+
+
+def logits_from_hidden(params: dict, cfg: ModelConfig, hidden):
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], hidden)
+    return hidden.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+
+
+# ===========================================================================
+# loss
+# ===========================================================================
+
+def lm_loss(params: dict, cfg: ModelConfig, batch: dict):
+    """Next-token CE. batch: tokens (B, N) int32, labels (B, N) int32 with
+    -1 = ignore. Returns (loss, metrics)."""
+    hidden, aux = forward(params, cfg, batch["tokens"],
+                          inputs_embeds=batch.get("inputs_embeds"))
+    labels = batch["labels"]
+    b, n, d = hidden.shape
+    c = min(cfg.loss_chunk, n)
+    pad = (-n) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (n + pad) // c
+    hs = hidden.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        h, lab = args
+        lg = logits_from_hidden(params, cfg, h)             # (B, c, V) fp32
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(
+            lg, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        valid = (lab >= 0).astype(jnp.float32)
+        ce = (lse - tgt) * valid
+        zl = cfg.z_loss * (lse ** 2) * valid
+        return ((ce + zl).sum(), valid.sum())
+
+    f = jax.checkpoint(chunk_loss) if cfg.remat == "full" else chunk_loss
+    sums, counts = maps.chunk_map(f, (hs, ls))
+    n_valid = jnp.maximum(counts.sum(), 1.0)
+    loss = sums.sum() / n_valid + aux
+    return loss, {"ce": sums.sum() / n_valid, "aux": aux,
+                  "tokens": n_valid}
+
+
+# ===========================================================================
+# caches / prefill / decode
+# ===========================================================================
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    if kind in ("dense", "moe"):
+        return {"attn": A.init_cache(cfg.attention_config(), batch, max_len,
+                                     dtype)}
+    if kind in ("mla_dense", "mla_moe"):
+        return {"mla": MLA.init_mla_cache(cfg.mla, cfg.num_heads, batch,
+                                          max_len, cfg.block_k, dtype)}
+    if kind == "hybrid":
+        return {"mixer": HY.init_hybrid_cache(cfg.attention_config(),
+                                              cfg.ssm, batch, max_len, dtype)}
+    if kind == "mlstm":
+        return {"core": SSM.mlstm_init_state(cfg.ssm, batch)}
+    if kind == "slstm":
+        return {"core": SSM.slstm_init_state(cfg.ssm, batch)}
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> dict:
+    caches: dict[str, Any] = {}
+    if cfg.first_kinds:
+        caches["prefix_layers"] = [
+            _init_layer_cache(cfg, kind, batch, max_len, dtype)
+            for kind in cfg.first_kinds]
+    one = {f"l{i}": _init_layer_cache(cfg, kind, batch, max_len, dtype)
+           for i, kind in enumerate(cfg.layer_kinds)}
+    caches["groups"] = jax.tree.map(
+        lambda a: jnp.tile(a[None], (cfg.n_groups,) + (1,) * a.ndim), one)
+    return caches
+
+
+def _layer_prefill(lp, cfg: ModelConfig, kind, x, lc, positions):
+    h = L.rmsnorm(lp["ln1"], x)
+    if kind in ("dense", "moe"):
+        y, c = A.prefill_cache(lp["attn"], cfg.attention_config(), h,
+                               lc["attn"])
+        x = x + y
+        lc = {"attn": c}
+    elif kind in ("mla_dense", "mla_moe"):
+        y, c = MLA.mla_prefill(lp["mla"], h, positions, lc["mla"],
+                               mcfg=cfg.mla, num_heads=cfg.num_heads,
+                               mechanism=cfg.mechanism,
+                               sla2_cfg=cfg.sla2_config())
+        x = x + y
+        lc = {"mla": c}
+    elif kind == "hybrid":
+        y, c = HY.hybrid_prefill(lp["mixer"], cfg.attention_config(),
+                                 cfg.ssm, h, lc["mixer"], positions)
+        x = x + y
+        lc = {"mixer": c}
+    elif kind == "mlstm":
+        y, st = SSM.mlstm_forward(lp["core"], h, cfg.ssm)
+        return x + y, {"core": st}
+    elif kind == "slstm":
+        y, st = SSM.slstm_forward(lp["core"], h, cfg.ssm)
+        return x + y, {"core": st}
+    h2 = L.rmsnorm(lp["ln2"], x)
+    if kind.endswith("moe"):
+        y, _ = MOE.moe_ffn(lp["moe"], h2, cfg.moe, ep_axis=cfg.ep_axis)
+        x = x + y
+    else:
+        x = x + L.mlp(lp["mlp"], h2, activation=cfg.mlp_activation)
+    return x, lc
+
+
+def _layer_decode(lp, cfg: ModelConfig, kind, x_t, lc):
+    h = L.rmsnorm(lp["ln1"], x_t)
+    if kind in ("dense", "moe"):
+        y, c = A.decode_step(lp["attn"], cfg.attention_config(), h,
+                             lc["attn"])
+        x_t = x_t + y
+        lc = {"attn": c}
+    elif kind in ("mla_dense", "mla_moe"):
+        y, c = MLA.mla_decode_step(lp["mla"], h, lc["mla"], mcfg=cfg.mla,
+                                   num_heads=cfg.num_heads,
+                                   k_frac=cfg.k_frac, block_k=cfg.block_k)
+        x_t = x_t + y
+        lc = {"mla": c}
+    elif kind == "hybrid":
+        y, c = HY.hybrid_decode_step(lp["mixer"], cfg.attention_config(),
+                                     cfg.ssm, h, lc["mixer"])
+        x_t = x_t + y
+        lc = {"mixer": c}
+    elif kind == "mlstm":
+        y, st = SSM.mlstm_decode_step(lp["core"], h, cfg.ssm, lc["core"])
+        return x_t + y, {"core": st}
+    elif kind == "slstm":
+        y, st = SSM.slstm_decode_step(lp["core"], h, cfg.ssm, lc["core"])
+        return x_t + y, {"core": st}
+    h2 = L.rmsnorm(lp["ln2"], x_t)
+    if kind.endswith("moe"):
+        y, _ = MOE.moe_ffn(lp["moe"], h2, cfg.moe, ep_axis=cfg.ep_axis)
+        x_t = x_t + y
+    else:
+        x_t = x_t + L.mlp(lp["mlp"], h2, activation=cfg.mlp_activation)
+    return x_t, lc
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens, caches, *,
+            inputs_embeds=None):
+    """Run the prompt through the model, filling every cache.
+    Returns (logits_last (B, V), caches)."""
+    if inputs_embeds is None:
+        x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    else:
+        x = inputs_embeds.astype(cfg.param_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    b, n, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(n), (b, n))
+    caches = dict(caches)
+
+    if cfg.first_kinds:
+        new_pref = []
+        for i, kind in enumerate(cfg.first_kinds):
+            x, lc = _layer_prefill(params["prefix_layers"][i], cfg, kind, x,
+                                   caches["prefix_layers"][i], positions)
+            new_pref.append(lc)
+        caches["prefix_layers"] = new_pref
+
+    def body(x, pair):
+        gp, gc = pair
+        new_gc = {}
+        for i, kind in enumerate(cfg.layer_kinds):
+            x, lc = _layer_prefill(gp[f"l{i}"], cfg, kind, x, gc[f"l{i}"],
+                                   positions)
+            new_gc[f"l{i}"] = lc
+        return x, new_gc
+
+    x, new_groups = maps.scan(body, x, (params["groups"],
+                                        caches["groups"]))
+    caches["groups"] = new_groups
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])[:, 0]
+    return logits, caches
+
+
+def decode_step(params: dict, cfg: ModelConfig, token_t, caches):
+    """One decode step. token_t: (B,) int32. Returns (logits (B, V), caches)."""
+    x = L.embed(params["embed"], token_t[:, None]).astype(cfg.param_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    caches = dict(caches)
+
+    if cfg.first_kinds:
+        new_pref = []
+        for i, kind in enumerate(cfg.first_kinds):
+            x, lc = _layer_decode(params["prefix_layers"][i], cfg, kind, x,
+                                  caches["prefix_layers"][i])
+            new_pref.append(lc)
+        caches["prefix_layers"] = new_pref
+
+    def body(x, pair):
+        gp, gc = pair
+        new_gc = {}
+        for i, kind in enumerate(cfg.layer_kinds):
+            x, lc = _layer_decode(gp[f"l{i}"], cfg, kind, x, gc[f"l{i}"])
+            new_gc[f"l{i}"] = lc
+        return x, new_gc
+
+    x, new_groups = maps.scan(body, x, (params["groups"],
+                                        caches["groups"]))
+    caches["groups"] = new_groups
+    x = L.rmsnorm(params["final_norm"], x)
+    return logits_from_hidden(params, cfg, x)[:, 0], caches

@@ -1,0 +1,83 @@
+"""PaliGemma-style VLM: SigLIP-stub image prefix + Gemma decoder.
+
+The SigLIP vision tower is a STUB per the assignment: ``input_specs``
+provides precomputed patch embeddings (B, n_image_tokens, d_model) — the
+vision transformer that would produce them is out of scope.
+
+The language model is the shared transformer substrate configured as Gemma
+(MQA kv=1, GeGLU, embedding scaling, huge 257k vocab) with **prefix-LM
+attention**: the image tokens (and any text prompt inside prefix_len) attend
+bidirectionally, the suffix is causal.  This maps onto SLA2's
+``prefix_len`` support: router rows may select any prefix block, the causal
+restriction applies beyond it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import maps
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def merge_embeddings(params: dict, cfg: T.ModelConfig, image_embeds,
+                     tokens) -> jax.Array:
+    """Concat [image prefix | embedded text]. image_embeds: (B, P, d);
+    tokens: (B, N_text). Returns (B, P + N_text, d)."""
+    txt = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    img = image_embeds.astype(cfg.param_dtype)
+    x = jnp.concatenate([img, txt], axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def vlm_loss(params: dict, cfg: T.ModelConfig, batch: dict):
+    """batch: image_embeds (B, P, d), tokens (B, N_text), labels (B, N_text).
+
+    Loss is computed on text positions only; image positions get label -1."""
+    x = merge_embeddings(params, cfg, batch["image_embeds"], batch["tokens"])
+    p = batch["image_embeds"].shape[1]
+    img_labels = jnp.full(batch["image_embeds"].shape[:2], -1, jnp.int32)
+    labels = jnp.concatenate([img_labels, batch["labels"]], axis=1)
+    # forward() applies embed_scale only when embedding tokens itself; the
+    # merged path pre-scales, so hand it inputs_embeds with scaling disabled.
+    hidden, aux = T.forward(params, dataclasses.replace(
+        cfg, embed_scale=False), None, inputs_embeds=x)
+    b, n, d = hidden.shape
+    c = min(cfg.loss_chunk, n)
+    pad = (-n) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (n + pad) // c
+    hs = hidden.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        h, lab = args
+        lg = T.logits_from_hidden(params, cfg, h)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(
+            lg, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        valid = (lab >= 0).astype(jnp.float32)
+        zl = cfg.z_loss * (lse ** 2) * valid
+        return (((lse - tgt) * valid + zl).sum(), valid.sum())
+
+    sums, counts = maps.chunk_map(jax.checkpoint(chunk_loss), (hs, ls))
+    loss = sums.sum() / jnp.maximum(counts.sum(), 1.0) + aux
+    return loss, {"ce": loss, "aux": aux}
+
+
+def vlm_prefill(params: dict, cfg: T.ModelConfig, image_embeds, tokens,
+                caches):
+    x = merge_embeddings(params, cfg, image_embeds, tokens)
+    cfg_noscale = dataclasses.replace(cfg, embed_scale=False)
+    return T.prefill(params, cfg_noscale, None, caches, inputs_embeds=x)
+
+
+def vlm_decode_step(params: dict, cfg: T.ModelConfig, token_t, caches):
+    return T.decode_step(params, cfg, token_t, caches)

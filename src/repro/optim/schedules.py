@@ -1,0 +1,20 @@
+"""Learning-rate schedules as pure step -> scale functions (multiply the
+optimizer's peak lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int):
+    s = jnp.asarray(step, jnp.float32)
+    return jnp.minimum(1.0, (s + 1.0) / max(1, warmup_steps))
+
+
+def cosine_schedule(step, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, warmup_steps)
+    t = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                 0.0, 1.0)
+    cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return warm * cos

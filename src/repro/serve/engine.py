@@ -1,0 +1,139 @@
+"""Batched serving engine over the unified model API.
+
+Slot-based continuous batching: ``max_slots`` concurrent sequences share one
+batched cache.  Incoming requests fill free slots; each engine step decodes
+one token for every active slot; finished slots (EOS or budget) are freed
+and refilled from the queue *between* steps.  Prefill for a joining request
+runs per-slot (padded to the block size) and its KV is spliced into the
+batched cache by slot index.
+
+On CPU this runs small models end-to-end (examples/serve_lm.py); on TPU the
+same jitted step functions shard per distributed/sharding.cache_specs
+(sequence-sharded KV, flash-decoding style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (n,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: Optional[list] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 4
+    max_len: int = 512
+    temperature: float = 0.0           # 0 => greedy
+    seed: int = 0
+
+
+class ServeEngine:
+    """Static-shape batched decode over Model.prefill/Model.decode.
+
+    For simplicity and jit-friendliness, prefill runs one joining request at
+    a time with batch == max_slots (inactive slots carry zeros); the decode
+    step always runs the full slot batch.  Slot bookkeeping is host-side.
+    """
+
+    def __init__(self, model, ecfg: EngineConfig):
+        self.model = model
+        self.cfg = ecfg
+        self.params = None
+        self._queue: list[Request] = []
+        self._active: dict[int, Request] = {}      # slot -> request
+        self._tokens = np.zeros((ecfg.max_slots,), np.int32)
+        self._budget = np.zeros((ecfg.max_slots,), np.int32)
+        self.caches = None
+        self._decode = jax.jit(
+            lambda p, b, c: model.decode(p, b, c))
+
+    # ------------------------------------------------------------------
+    def load(self, params):
+        self.params = params
+        self.caches = None
+
+    def submit(self, req: Request):
+        req.output = []
+        self._queue.append(req)
+
+    def _free_slots(self):
+        return [s for s in range(self.cfg.max_slots)
+                if s not in self._active]
+
+    def _admit(self):
+        """Prefill queued requests into free slots."""
+        for slot in self._free_slots():
+            if not self._queue:
+                break
+            req = self._queue.pop(0)
+            n = len(req.prompt)
+            bq = getattr(self.model.cfg, "block_q", 32)
+            n_pad = max(bq, ((n + bq - 1) // bq) * bq)
+            prompt = np.zeros((self.cfg.max_slots, n_pad), np.int32)
+            prompt[slot, -n:] = req.prompt      # left-pad with token 0
+            if self.caches is None or not self._active:
+                self.caches = self.model.init_caches(
+                    self.cfg.max_slots, self.cfg.max_len)
+            # NOTE: per-slot prefill with a shared-length cache; slots join
+            # at sequence start only (static batching within a generation
+            # wave). Mixed-length continuous joining needs per-slot offsets,
+            # tracked as future work in DESIGN.md.
+            logits, self.caches = self.model.prefill(
+                self.params, {"tokens": jnp.asarray(prompt)}, self.caches)
+            tok = self._sample(np.asarray(logits))
+            self._tokens[slot] = tok[slot]
+            self._budget[slot] = req.max_new_tokens - 1
+            req.output.append(int(tok[slot]))
+            self._active[slot] = req
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.cfg.temperature <= 0:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        z = np.random.default_rng(self.cfg.seed).gumbel(size=logits.shape)
+        return np.argmax(logits / self.cfg.temperature + z,
+                         axis=-1).astype(np.int32)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine step. Returns number of active slots."""
+        self._admit()
+        if not self._active:
+            return 0
+        batch = {"token": jnp.asarray(self._tokens)}
+        logits, self.caches = self._decode(self.params, batch, self.caches)
+        tok = self._sample(np.asarray(logits))
+        done_slots = []
+        for slot, req in self._active.items():
+            t = int(tok[slot])
+            req.output.append(t)
+            self._budget[slot] -= 1
+            if self._budget[slot] <= 0 or (req.eos_id is not None
+                                           and t == req.eos_id):
+                done_slots.append(slot)
+            else:
+                self._tokens[slot] = t
+        for slot in done_slots:
+            del self._active[slot]
+        return len(self._active)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        """Drain the queue; returns completed requests."""
+        done: list[Request] = []
+        seen = set()
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and not self._queue:
+                break
+        return done

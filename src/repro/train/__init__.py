@@ -1,0 +1,2 @@
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig

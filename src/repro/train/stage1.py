@@ -1,0 +1,175 @@
+"""Stage-1 training (paper Algorithm 1, lines 1-4): initialise the router R
+and the mixing ratio alpha before end-to-end fine-tuning.
+
+    Sample (Q, K, V) from every attention layer at each diffusion timestep;
+    L = MSE( FullAttn(Q,K,V), SLA2(Q,K,V, k%, R, alpha) );
+    train R, alpha under different k% with SoftTop-k routing.
+
+Here Q/K/V come from a capture pass over the model being fine-tuned (or a
+synthetic generator with realistic low-rank+sparse structure for unit
+tests).  Stage 2 (end-to-end fine-tuning with hard Top-k, without R) is the
+normal trainer with mechanism='sla2' — matching the paper's train/inference
+consistency argument (Insight 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sla2 as sla2lib
+from repro.core.sla2 import SLA2Config
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage1Config:
+    k_fracs: tuple = (0.05, 0.04, 0.03)   # the paper trains 5%, 4%, 3%
+    steps_per_k: int = 100
+    optimizer: AdamWConfig = AdamWConfig(lr=1e-3, weight_decay=0.0)
+    log_every: int = 25
+    # SoftTop-k temperature anneal (paper uses a fixed tau=0.1; annealing
+    # toward hard Top-k closes the soft->hard transfer gap — the soft mask
+    # at constant tau can 'cheat' by staying semi-dense)
+    tau_start: float = 0.1
+    tau_end: float = 0.01
+    tau_stages: int = 4
+
+
+def synthetic_qkv(key, *, batch: int, heads: int, seq: int, dim: int,
+                  structure: float = 0.7):
+    """Q/K/V with the paper's structure: attention maps decompose into a
+    sparse part (a few strong local/global blocks) plus a low-rank part.
+    ``structure`` blends a shared low-rank subspace into Q/K."""
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (batch, heads, seq, dim))
+    k = jax.random.normal(ks[1], (batch, heads, seq, dim))
+    v = jax.random.normal(ks[2], (batch, heads, seq, dim))
+    rank = max(1, dim // 8)
+    sub = jax.random.normal(ks[3], (heads, rank, dim))
+    coef_q = jax.random.normal(jax.random.fold_in(key, 9),
+                               (batch, heads, seq, rank))
+    coef_k = jax.random.normal(jax.random.fold_in(key, 10),
+                               (batch, heads, seq, rank))
+    q = (1 - structure) * q + structure * jnp.einsum(
+        "bhsr,hrd->bhsd", coef_q, sub)
+    k = (1 - structure) * k + structure * jnp.einsum(
+        "bhsr,hrd->bhsd", coef_k, sub)
+    return q, k, v
+
+
+def init_alpha_from_data(params: dict, q, k, cfg: SLA2Config) -> dict:
+    """Beyond-paper: initialise alpha from the *measured* selected
+    probability mass under the hard router mask (Eq. 7: alpha = P1.1),
+    instead of a blind constant.  One forward pass; typically halves the
+    initial hard-Top-k MSE (EXPERIMENTS.md §Perf, stage-1 table)."""
+    from repro.core import attention as attnlib
+    from repro.core import masks as masklib
+    from repro.core import router as routerlib
+    rcfg = cfg.router
+    mask_c = routerlib.route(params.get("router", {}), q, k, rcfg,
+                             soft=False)
+    m = masklib.expand_mask(mask_c, rcfg.block_q, rcfg.block_k)
+    d = q.shape[-1]
+    s = jnp.einsum("bhnd,bhmd->bhnm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(d)
+    if rcfg.causal:
+        cm = masklib.token_causal_mask(q.shape[-2], k.shape[-2], 0,
+                                       rcfg.prefix_len)
+        s = jnp.where(cm, s, masklib.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    mass = (p * m).sum(-1)                     # (B, H, N) true alpha rows
+    h = mass.shape[1]
+    t_m = mass.shape[-1] // rcfg.block_q
+    mm = mass.mean(0).reshape(h, t_m, rcfg.block_q).mean(-1)
+    mm = jnp.clip(mm, 1e-3, 1 - 1e-3)
+    out = dict(params)
+    stored = params["alpha_logit"]
+    logit = jnp.log(mm / (1 - mm))
+    if stored.shape == logit.shape:
+        out["alpha_logit"] = logit.astype(stored.dtype)
+    elif stored.shape[-1] >= t_m:              # alpha table longer than data
+        out["alpha_logit"] = stored.at[..., :t_m].set(
+            logit.astype(stored.dtype))
+    else:
+        out["alpha_logit"] = jnp.broadcast_to(
+            logit.mean(-1, keepdims=True), stored.shape).astype(stored.dtype)
+    return out
+
+
+def run_stage1(key, qkv_stream: Iterator, cfg: SLA2Config, s1: Stage1Config,
+               *, head_dim: int, num_heads: int, n_q_blocks: int,
+               log_fn: Callable[[str], None] = print,
+               data_driven_alpha: bool = True):
+    """Train (R, alpha) to minimise the SLA2-vs-full-attention MSE.
+
+    qkv_stream yields (q, k, v) tuples (B, H, N, D).  Returns
+    (params, history) where history records the loss per step and the
+    initial/final MSE per k%."""
+    import dataclasses as dc
+    params = sla2lib.init_sla2_params(
+        key, head_dim=head_dim, num_heads=num_heads, n_q_blocks=n_q_blocks,
+        cfg=cfg)
+    opt = adamw_init(params, s1.optimizer)
+    history = {"loss": [], "per_k": {}}
+
+    # geometric tau ladder, one jitted step per (k%, tau) pair
+    import numpy as np
+    taus = np.geomspace(s1.tau_start, s1.tau_end, s1.tau_stages)
+
+    for k_frac in s1.k_fracs:
+        c = dc.replace(cfg, router=dc.replace(cfg.router, k_frac=k_frac))
+        eval_mse_hard = jax.jit(
+            lambda params, q, k, v, _c=c: sla2lib.sla2_mse_loss(
+                params, q, k, v, _c, soft=False))
+
+        def make_step(tau):
+            ct = dc.replace(c, router=dc.replace(c.router, tau=float(tau)))
+
+            @jax.jit
+            def step(params, opt, q, k, v):
+                loss, grads = jax.value_and_grad(
+                    lambda p: sla2lib.sla2_mse_loss(p, q, k, v, ct,
+                                                    soft=True))(params)
+                params, opt, _ = adamw_update(params, grads, opt,
+                                              s1.optimizer)
+                return params, opt, loss
+            return step
+
+        q0, k0, v0 = next(qkv_stream)
+        mse_before = float(eval_mse_hard(params, q0, k0, v0))
+        if data_driven_alpha:
+            params = init_alpha_from_data(params, q0, k0, c)
+            mse_dd = float(eval_mse_hard(params, q0, k0, v0))
+            history["per_k"].setdefault(k_frac, {})
+            log_fn(f"[stage1 k={k_frac:.2f}] data-driven alpha init: "
+                   f"{mse_before:.5f} -> {mse_dd:.5f}")
+        per_stage = max(1, s1.steps_per_k // s1.tau_stages)
+        i = 0
+        for tau in taus:
+            step = make_step(tau)
+            for _ in range(per_stage):
+                q, k, v = next(qkv_stream)
+                params, opt, loss = step(params, opt, q, k, v)
+                history["loss"].append(float(loss))
+                i += 1
+                if i % s1.log_every == 0:
+                    log_fn(f"[stage1 k={k_frac:.2f} tau={tau:.3f}] "
+                           f"step {i} soft-mse {float(loss):.5f}")
+        mse_after = float(eval_mse_hard(params, q0, k0, v0))
+        history["per_k"][k_frac] = {"before": mse_before,
+                                    "after": mse_after}
+        log_fn(f"[stage1 k={k_frac:.2f}] hard-topk MSE "
+               f"{mse_before:.5f} -> {mse_after:.5f}")
+    return params, history
+
+
+def capture_qkv_stream(key, *, batch: int, heads: int, seq: int, dim: int):
+    """Endless synthetic Q/K/V generator (deterministic per step)."""
+    step = 0
+    while True:
+        yield synthetic_qkv(jax.random.fold_in(key, step), batch=batch,
+                            heads=heads, seq=seq, dim=dim)
+        step += 1

@@ -1,0 +1,141 @@
+"""The jitted train step: loss -> grads -> (optional EF-compress) -> AdamW.
+
+``make_train_step(model, tcfg, mesh)`` returns a pjit-compiled function
+    step_fn(state, batch) -> (state, metrics)
+with in/out shardings derived from distributed/sharding.py, so the same
+factory serves the single-host smoke tests (mesh=None -> plain jit) and the
+512-chip dry-run.
+
+Gradient accumulation: ``microbatches > 1`` scans over batch slices
+accumulating fp32 grads (remat inside the model bounds activation memory;
+the scan bounds gradient memory).
+
+Error-feedback INT8 gradient compression (``compress_grads='int8_ef'``):
+g' = g + ef;  q = Q8(g');  ef' = g' - q;  optimizer consumes q.  The
+quantize-before-reduce wire saving is exercised explicitly over the pod
+axis in distributed/compression.py (see EXPERIMENTS §Perf); here the EF
+dynamics are exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import maps
+from repro.distributed import sharding as shardlib
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    microbatches: int = 1
+    compress_grads: str = "none"      # none | int8_ef
+
+
+def init_train_state(model, key, tcfg: TrainConfig) -> dict:
+    params = model.init(key)
+    state = {"params": params,
+             "opt": adamw_init(params, tcfg.optimizer)}
+    if tcfg.compress_grads == "int8_ef":
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+    return state
+
+
+def _ef_compress(grads, ef):
+    """Error-feedback INT8 fake compression (per-tensor scale)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        s = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.round(g32 / s) * s
+        return q, (g32 - q).astype(jnp.bfloat16)
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return td.unflatten([o[0] for o in out]), \
+        td.unflatten([o[1] for o in out])
+
+
+def make_train_step(model, tcfg: TrainConfig, mesh=None, *,
+                    donate: bool = True):
+    """Build the (p)jitted train step for ``model`` (a models.api.Model)."""
+
+    def grads_and_metrics(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            return grads, loss, metrics
+        mb = tcfg.microbatches
+        sliced = jax.tree.map(
+            lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch)
+
+        def body(carry, mbatch):
+            g_acc, l_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                model.loss, has_aux=True)(params, mbatch)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, l_acc + loss), metrics
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g_sum, l_sum), metrics = maps.scan(body, (g0, 0.0), sliced)
+        grads = jax.tree.map(lambda g: g / mb, g_sum)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return grads, l_sum / mb, metrics
+
+    def step_fn(state, batch):
+        params = state["params"]
+        grads, loss, metrics = grads_and_metrics(params, batch)
+        new_state = dict(state)
+        if tcfg.compress_grads == "int8_ef":
+            grads, new_ef = _ef_compress(grads, state["ef"])
+            new_state["ef"] = new_ef
+        lr_scale = cosine_schedule(state["opt"]["step"], tcfg.warmup_steps,
+                                   tcfg.total_steps)
+        new_params, new_opt, om = adamw_update(
+            params, grads, state["opt"], tcfg.optimizer, lr_scale)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        out_metrics = {"loss": loss, **metrics, **om}
+        return new_state, out_metrics
+
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+    # --- pjit with explicit shardings ---
+    key = jax.random.PRNGKey(0)
+    state_shape = jax.eval_shape(
+        lambda: init_train_state(model, key, tcfg))
+    p_specs = shardlib.param_specs(state_shape["params"], mesh)
+    state_specs = {"params": p_specs,
+                   "opt": {"m": p_specs, "v": p_specs,
+                           "step": jax.sharding.PartitionSpec()}}
+    if "ef" in state_shape:
+        state_specs["ef"] = p_specs
+    state_sh = shardlib.logical_to_shardings(state_specs, mesh)
+    metric_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return jax.jit(
+        step_fn,
+        in_shardings=(state_sh, None),     # batch: placed by caller
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,) if donate else ())
+
+
+def state_shardings(model, tcfg: TrainConfig, mesh):
+    """NamedSharding tree for a train state (used by dryrun/trainer)."""
+    key = jax.random.PRNGKey(0)
+    state_shape = jax.eval_shape(lambda: init_train_state(model, key, tcfg))
+    p_specs = shardlib.param_specs(state_shape["params"], mesh)
+    specs = {"params": p_specs,
+             "opt": {"m": p_specs, "v": p_specs,
+                     "step": jax.sharding.PartitionSpec()}}
+    if "ef" in state_shape:
+        specs["ef"] = p_specs
+    return state_shape, shardlib.logical_to_shardings(specs, mesh)

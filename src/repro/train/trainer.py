@@ -1,0 +1,135 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler telemetry,
+failure injection, deterministic resume.
+
+The loop is restart-oriented: ``Trainer.run()`` always begins by restoring
+the latest checkpoint (params + optimizer + EF buffers + data cursor — the
+cursor is just the step because the data pipeline is a pure function of the
+step).  A crash at any point loses at most ``ckpt_every`` steps; the outer
+``run_with_restarts`` harness demonstrates the full die-and-recover cycle
+(tests/test_integration.py injects failures through ``fault_hook``).
+
+Straggler mitigation (single-process container -> telemetry + policy):
+per-step wall times feed an EMA; steps slower than ``straggler_factor`` x
+EMA are counted and logged.  On a real multi-host job this signal drives
+the documented policy (re-shard input files away from the slow host /
+evict after K strikes); the detection plumbing is what lives here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    train: TrainConfig
+    ckpt_dir: str
+    max_steps: int = 100
+    ckpt_every: int = 20
+    keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model, tcfg: TrainerConfig, dataset, *, mesh=None,
+                 batch_shardings=None,
+                 fault_hook: Optional[Callable[[int], None]] = None,
+                 log_fn: Callable[[str], None] = print):
+        self.model = model
+        self.tcfg = tcfg
+        self.dataset = dataset
+        self.mesh = mesh
+        self.batch_shardings = batch_shardings
+        self.fault_hook = fault_hook
+        self.log = log_fn
+        self.ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.step_fn = make_train_step(model, tcfg.train, mesh)
+        self.step_times: list[float] = []
+        self.straggler_steps: list[int] = []
+
+    # ------------------------------------------------------------------
+    def _init_or_restore(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(self.model, key, self.tcfg.train))
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            from repro.checkpoint import restore
+            shardings = None
+            if self.mesh is not None:
+                from repro.train.train_step import state_shardings
+                _, shardings = state_shardings(self.model, self.tcfg.train,
+                                               self.mesh)
+            state = restore(self.tcfg.ckpt_dir, latest, state_shape,
+                            shardings=shardings)
+            self.log(f"[trainer] restored step {latest}")
+            return int(latest), state
+        state = init_train_state(self.model, key, self.tcfg.train)
+        return 0, state
+
+    def _place_batch(self, batch):
+        batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        if self.mesh is not None and self.batch_shardings is not None:
+            batch = jax.device_put(batch, self.batch_shardings)
+        return batch
+
+    # ------------------------------------------------------------------
+    def run(self) -> dict:
+        """Train until max_steps (resuming from the latest checkpoint)."""
+        start, state = self._init_or_restore()
+        ema = None
+        losses = []
+        for step in range(start, self.tcfg.max_steps):
+            if self.fault_hook is not None:
+                self.fault_hook(step)          # may raise (injected failure)
+            batch = self._place_batch(self.dataset[step])
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            losses.append(loss)
+            # straggler detection (EMA over post-warmup steps)
+            if step > start + 1:               # skip compile step
+                ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+                if ema and dt > self.tcfg.straggler_factor * ema:
+                    self.straggler_steps.append(step)
+                    self.log(f"[trainer] straggler step {step}: "
+                             f"{dt:.3f}s vs ema {ema:.3f}s")
+            if (step + 1) % self.tcfg.log_every == 0:
+                self.log(f"[trainer] step {step + 1} "
+                         f"loss {loss:.4f} ({dt * 1e3:.0f} ms)")
+            if (step + 1) % self.tcfg.ckpt_every == 0 \
+                    or step + 1 == self.tcfg.max_steps:
+                self.ckpt.save_async(step + 1, state)
+        self.ckpt.wait()
+        return {"state": state, "losses": losses,
+                "stragglers": self.straggler_steps}
+
+
+def run_with_restarts(make_trainer: Callable[[], Trainer],
+                      max_restarts: int = 3) -> dict:
+    """Node-failure harness: rebuild the trainer (fresh 'process') and
+    resume from the last checkpoint after each injected/real crash."""
+    last_exc: Optional[BaseException] = None
+    for attempt in range(max_restarts + 1):
+        trainer = make_trainer()
+        try:
+            out = trainer.run()
+            out["restarts"] = attempt
+            return out
+        except Exception as e:                 # noqa: BLE001 — restart loop
+            last_exc = e
+            trainer.log(f"[trainer] crash (attempt {attempt}): {e!r} — "
+                        f"restarting from latest checkpoint")
+    raise RuntimeError(f"exceeded {max_restarts} restarts") from last_exc

@@ -1,0 +1,87 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+one train-grad step on CPU, asserting output shapes and finiteness.  The
+full-size configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.models.api import build_model
+
+
+def _concretize(spec_tree, key):
+    """Turn ShapeDtypeStructs into small concrete arrays."""
+    leaves, treedef = jax.tree.flatten(spec_tree)
+    out = []
+    for i, s in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out.append(jax.random.randint(k, s.shape, 0, 17).astype(s.dtype))
+        else:
+            x = jax.random.normal(k, s.shape, jnp.float32)
+            if s.shape and s.shape[-1] == 0:
+                x = jnp.zeros(s.shape, s.dtype)
+            out.append(x.astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _smoke_shapes(name):
+    # seq divisible by block_q=32 and loss_chunk; prefix shapes per family
+    return {"seq": 128, "batch": 2}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_train_step(name):
+    cfg = get_smoke_config(name)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    dims = _smoke_shapes(name)
+    specs = model.train_inputs(dims["seq"], dims["batch"])
+    batch = _concretize(specs, key)
+    if "time" in batch:  # diffusion: time in (0,1)
+        batch["time"] = jnp.abs(batch["time"]) % 1.0
+    if "labels" in batch:
+        vocab = model.cfg.vocab_size
+        batch["labels"] = batch["labels"] % vocab
+        batch["tokens"] = batch["tokens"] % vocab
+
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{name}: non-finite loss"
+
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    for path, leaf in jax.tree_util.tree_leaves_with_path(grads):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), \
+            f"{name}: non-finite grad at {jax.tree_util.keystr(path)}"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_serve_step(name):
+    cfg = get_smoke_config(name)
+    model = build_model(cfg)
+    if model.prefill is None:
+        pytest.skip("no serving path")
+    key = jax.random.PRNGKey(1)
+    dims = _smoke_shapes(name)
+    params = model.init(key)
+    specs = model.prefill_inputs(dims["seq"], dims["batch"])
+    batch = _concretize(specs, key)
+    if "time" in batch:
+        batch["time"] = jnp.abs(batch["time"]) % 1.0
+        batch["dt"] = jnp.full((dims["batch"],), 0.1)
+    if "tokens" in batch:
+        batch["tokens"] = batch["tokens"] % model.cfg.vocab_size
+
+    caches = model.init_caches(dims["batch"], dims["seq"] + 64)
+    out, caches = model.prefill(params, batch, caches)
+    assert bool(jnp.all(jnp.isfinite(
+        jax.tree.leaves(out)[0].astype(jnp.float32)))), f"{name}: prefill"
+
+    if model.decode_inputs is not None:
+        dbatch = _concretize(model.decode_inputs(dims["batch"]), key)
+        dbatch["token"] = dbatch["token"] % model.cfg.vocab_size
+        logits, caches = model.decode(params, dbatch, caches)
+        assert logits.shape[0] == dims["batch"]
+        assert bool(jnp.all(jnp.isfinite(logits))), f"{name}: decode"

@@ -1,0 +1,158 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as masklib
+from repro.core import router as routerlib
+from repro.core import sla2 as sla2lib
+from repro.core.quant import fake_quant, quant_int8, smooth_k, dequant
+from repro.core.router import RouterConfig
+from repro.core.sla2 import SLA2Config
+from repro.core.soft_topk import soft_topk
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@given(seed=st.integers(0, 2 ** 16), t_n=st.sampled_from([8, 16, 32]),
+       k_frac=st.floats(0.05, 0.9))
+@settings(**SETTINGS)
+def test_soft_topk_row_budget(seed, t_n, k_frac):
+    """SoftTop-k rows sum to k% * T_n (the defining constraint)."""
+    key = jax.random.PRNGKey(seed)
+    scores = jax.random.normal(key, (2, 4, t_n))
+    m = soft_topk(scores, k_frac, 0.1)
+    rows = np.asarray(m.sum(-1))
+    np.testing.assert_allclose(rows, k_frac * t_n, rtol=1e-3, atol=1e-3)
+    assert (np.asarray(m) >= 0).all() and (np.asarray(m) <= 1).all()
+
+
+@given(seed=st.integers(0, 2 ** 16), t_n=st.sampled_from([8, 16]),
+       k_sel=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_hard_topk_exact_count(seed, t_n, k_sel):
+    key = jax.random.PRNGKey(seed)
+    scores = jax.random.normal(key, (3, 5, t_n))
+    m = masklib.topk_block_mask(scores, k_sel)
+    counts = np.asarray(m.sum(-1))
+    assert (counts == min(k_sel, t_n)).all()
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_sla2_at_full_k_equals_full_attention(seed):
+    """k=100% routes everything sparse => SLA2 == full attention exactly
+    (alpha is forced to 1 on empty complements)."""
+    from repro.core.attention import full_attention
+    key = jax.random.PRNGKey(seed)
+    B, H, N, D = 1, 2, 128, 32
+    q, k, v = [jax.random.normal(jax.random.fold_in(key, i), (B, H, N, D))
+               for i in range(3)]
+    for causal in (False, True):
+        rcfg = RouterConfig(block_q=32, block_k=16, k_frac=1.0,
+                            causal=causal)
+        cfg = SLA2Config(router=rcfg, quant_bits="none", impl="gather")
+        p = sla2lib.init_sla2_params(key, head_dim=D, num_heads=H,
+                                     n_q_blocks=4, cfg=cfg)
+        out = sla2lib.sla2_attention(p, q, k, v, cfg)
+        ref = full_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=5e-5, rtol=5e-4)
+
+
+@given(seed=st.integers(0, 2 ** 16), scale=st.floats(0.01, 100.0))
+@settings(**SETTINGS)
+def test_int8_quant_roundtrip_error_bound(seed, scale):
+    """Symmetric per-block INT8: |x - deq(q(x))| <= scale_step/2."""
+    key = jax.random.PRNGKey(seed)
+    x = scale * jax.random.normal(key, (4, 32, 16))
+    qz = quant_int8(x, axes=(-2, -1))
+    err = np.abs(np.asarray(dequant(qz) - x))
+    step = np.asarray(qz.scale)
+    assert (err <= step / 2 + 1e-6).all()
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_k_smoothing_softmax_invariant(seed):
+    """K-smoothing shifts every score in a row equally => same softmax."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(jax.random.fold_in(key, 0), (2, 16, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, 8))
+    s1 = jax.nn.softmax(q @ jnp.swapaxes(k, -1, -2), -1)
+    s2 = jax.nn.softmax(q @ jnp.swapaxes(smooth_k(k), -1, -2), -1)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=1e-5, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 2 ** 16), k_frac=st.floats(0.1, 0.5))
+@settings(**SETTINGS)
+def test_router_sparsity_matches_target(seed, k_frac):
+    key = jax.random.PRNGKey(seed)
+    B, H, N, D = 1, 2, 256, 16
+    q = jax.random.normal(jax.random.fold_in(key, 0), (B, H, N, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, N, D))
+    rcfg = RouterConfig(block_q=32, block_k=16, k_frac=k_frac, causal=False)
+    m = routerlib.route({}, q, k, rcfg, soft=False)
+    t_n = m.shape[-1]
+    want = max(1, round(k_frac * t_n))
+    assert (np.asarray(m.sum(-1)) == want).all()
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_route_indices_sorted_and_valid(seed):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(jax.random.fold_in(key, 0), (3, 128, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (3, 128, 16))
+    rcfg = RouterConfig(block_q=32, block_k=16, k_frac=0.5, causal=True)
+    idx, valid = routerlib.route_indices({}, q, k, rcfg)
+    idx_np, valid_np = np.asarray(idx), np.asarray(valid)
+    assert (np.diff(idx_np, axis=-1) >= 0).all()          # ascending
+    t_m = idx_np.shape[1]
+    for i in range(t_m):
+        # valid selections never exceed the causally visible block count
+        n_vis = ((i + 1) * 32 - 1) // 16 + 1
+        assert (idx_np[:, i][valid_np[:, i]] < n_vis).all()
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=8, deadline=None)
+def test_alpha_mix_convexity(seed):
+    """SLA2 output lies between pure-sparse and pure-linear outputs:
+    with a scalar alpha in (0,1), O = a*O_s + (1-a)*O_l element-wise."""
+    key = jax.random.PRNGKey(seed)
+    B, H, N, D = 1, 1, 128, 16
+    q, k, v = [jax.random.normal(jax.random.fold_in(key, i), (B, H, N, D))
+               for i in range(3)]
+    rcfg = RouterConfig(block_q=32, block_k=16, k_frac=0.5, causal=False)
+    cfg = SLA2Config(router=rcfg, quant_bits="none", impl="ref")
+    p = sla2lib.init_sla2_params(key, head_dim=D, num_heads=H,
+                                 n_q_blocks=4, cfg=cfg)
+    from repro.core import attention as attnlib
+    mask_c = routerlib.route(p.get("router", {}), q, k, rcfg, soft=False)
+    o_s = attnlib.sparse_attention(q, k, v, mask_c, block_q=32, block_k=16)
+    o_l = attnlib.linear_attention(q, k, v, mask_c, block_q=32, block_k=16)
+    out = sla2lib.sla2_attention(p, q, k, v, cfg)
+    lo = np.minimum(np.asarray(o_s), np.asarray(o_l)) - 1e-4
+    hi = np.maximum(np.asarray(o_s), np.asarray(o_l)) + 1e-4
+    o = np.asarray(out)
+    assert ((o >= lo) & (o <= hi)).mean() > 0.999
+
+
+@given(step=st.integers(0, 1000), host=st.integers(0, 3))
+@settings(max_examples=10, deadline=None)
+def test_data_pipeline_deterministic(step, host):
+    from repro.data.pipeline import DataConfig, SyntheticDataset
+    cfg = DataConfig(seed=5, global_batch=8, seq_len=32, vocab_size=97,
+                     host_index=host, host_count=4)
+    ds = SyntheticDataset(cfg)
+    a, b = ds[step], ds[step]
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    if host:
+        other = SyntheticDataset(dc.replace(cfg, host_index=0))[step]
+        assert not np.array_equal(a["tokens"], other["tokens"])
