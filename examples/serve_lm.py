@@ -1,22 +1,43 @@
-"""Serve a small SLA2 LM with batched requests through the slot engine.
+"""Serve a small SLA2 LM with mixed-length continuous batching.
 
     PYTHONPATH=src python examples/serve_lm.py
 
-Trains a tiny model briefly (so generations aren't pure noise), then runs
-batched generation: prefill into the block KV cache + SLA2 decode steps
-(router over pooled block keys, sparse gather + linear complement states).
+Trains a tiny model briefly (so generations aren't pure noise), then serves
+a mixed-length workload twice: through the continuous-batching ServeEngine
+(block-paged KV cache, per-slot offsets, chunked prefill) and through the
+legacy StaticWaveEngine (all slots join at sequence start, the wave drains
+before refilling).  The long prompt in the mix stalls the static waves but
+interleaves with ongoing decode under the paged engine.
 """
 import tempfile
-
-import jax
-import numpy as np
+import time
 
 from repro.configs import get_smoke_config
 from repro.data import make_dataset
 from repro.models.api import build_model
 from repro.optim import AdamWConfig
-from repro.serve import EngineConfig, Request, ServeEngine
+from repro.serve import (EngineConfig, ServeEngine, StaticWaveEngine,
+                         make_mixed_requests)
 from repro.train import TrainConfig, Trainer, TrainerConfig
+
+# mixed lengths on both ends: mostly short prompts plus one long one, and
+# decode budgets from 8 to 48 tokens
+WORK = [(12, 48), (8, 8), (150, 8), (16, 48), (10, 8), (24, 32),
+        (9, 48), (14, 8)]
+
+
+def make_requests(cfg, seed=0):
+    return make_mixed_requests(cfg.vocab_size, WORK, seed=seed)
+
+
+def drive(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run_to_completion(max_steps=2000)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output or []) for r in reqs)
+    return toks, dt
 
 
 def main():
@@ -29,28 +50,27 @@ def main():
                           total_steps=60),
         ckpt_dir=tempfile.mkdtemp(), max_steps=60, ckpt_every=60,
         log_every=20), ds).run()
+    params = out["state"]["params"]
 
-    print("\n== batched serving ==")
-    eng = ServeEngine(model, EngineConfig(max_slots=4, max_len=256))
-    eng.load(out["state"]["params"])
-    rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(1, cfg.vocab_size, 12)
-                    .astype(np.int32),
-                    max_new_tokens=12) for i in range(6)]
+    print("\n== continuous batching (paged KV, per-slot offsets) ==")
+    ecfg = EngineConfig(max_slots=4, max_len=256, prefill_chunk=32)
+    eng = ServeEngine(model, ecfg)
+    eng.load(params)
+    reqs = make_requests(cfg)
+    toks, dt = drive(eng, reqs)
     for r in reqs:
-        eng.submit(r)
-    steps = 0
-    while eng.step() or eng._queue:
-        steps += 1
-        if steps > 200:
-            break
-    for r in reqs:
-        print(f"req {r.uid}: {len(r.output or [])} tokens -> "
-              f"{(r.output or [])[:10]}")
-    total = sum(len(r.output or []) for r in reqs)
-    print(f"\n{total} tokens across {len(reqs)} requests, "
-          f"{steps} engine steps (slot-batched decode)")
+        print(f"req {r.uid}: prompt {len(r.prompt):3d} -> "
+              f"{(r.output or [])[:8]}")
+    print(f"{toks} tokens in {dt:.2f}s  ({toks / dt:.1f} tok/s, "
+          f"{eng.allocator.available} pages free)")
+
+    print("\n== static generation waves (baseline) ==")
+    wave = StaticWaveEngine(model, ecfg)
+    wave.load(params)
+    reqs_w = make_requests(cfg)
+    toks_w, dt_w = drive(wave, reqs_w)
+    print(f"{toks_w} tokens in {dt_w:.2f}s  ({toks_w / dt_w:.1f} tok/s)")
+    print(f"\ncontinuous/static throughput: {(toks / dt) / (toks_w / dt_w):.2f}x")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,8 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models.api import build_model
-from repro.serve import EngineConfig, Request, ServeEngine
+from repro.serve import (EngineConfig, Request, ServeEngine,
+                         StaticWaveEngine)
 
 
 def main():
@@ -34,8 +35,12 @@ def main():
         raise SystemExit(f"{args.arch} has no token decode path")
 
     params = model.init(jax.random.PRNGKey(args.seed))
-    eng = ServeEngine(model, EngineConfig(max_slots=args.slots,
-                                          max_len=args.max_len))
+    ecfg = EngineConfig(max_slots=args.slots, max_len=args.max_len)
+    if model.decode_paged is not None:
+        eng = ServeEngine(model, ecfg)
+    else:   # recurrent mixers / MLA: static generation waves
+        print(f"[serve] {args.arch}: no paged path, using StaticWaveEngine")
+        eng = StaticWaveEngine(model, ecfg)
     eng.load(params)
     rng = np.random.default_rng(args.seed)
     reqs = []

@@ -47,6 +47,11 @@ class Model:
     decode: Optional[Callable] = None
     prefill_inputs: Optional[Callable] = None
     decode_inputs: Optional[Callable] = None
+    # paged serving (continuous batching with per-slot offsets); None when
+    # the architecture keeps the static cache path (recurrent mixers, MLA).
+    init_paged_caches: Optional[Callable] = None
+    prefill_chunk: Optional[Callable] = None
+    decode_paged: Optional[Callable] = None
 
     def abstract_params(self, key=None):
         k = jax.random.PRNGKey(0) if key is None else key
@@ -60,6 +65,19 @@ class Model:
 # ---------------------------------------------------------------------------
 
 def _lm_model(cfg: T.ModelConfig) -> Model:
+    paged = {}
+    if T.supports_paged(cfg):
+        paged = dict(
+            init_paged_caches=lambda batch, num_pages, **kw:
+                T.init_paged_caches(cfg, batch, num_pages, **kw),
+            prefill_chunk=lambda p, b, c: T.prefill_chunk(
+                p, cfg, b["tokens"], c, page_row=b["page_row"],
+                offset=b["offset"], chunk_len=b["chunk_len"],
+                slot=b["slot"]),
+            decode_paged=lambda p, b, c: T.decode_paged(
+                p, cfg, b["token"], c, page_table=b["page_table"],
+                lengths=b["lengths"], active=b["active"]),
+        )
     return Model(
         kind="lm", cfg=cfg,
         init=lambda key: T.init_model(key, cfg),
@@ -72,6 +90,7 @@ def _lm_model(cfg: T.ModelConfig) -> Model:
         decode=lambda p, b, c: T.decode_step(p, cfg, b["token"], c),
         prefill_inputs=lambda seq, batch: {"tokens": Spec((batch, seq), i32)},
         decode_inputs=lambda batch: {"token": Spec((batch,), i32)},
+        **paged,
     )
 
 

@@ -266,6 +266,274 @@ def decode_step(params: dict, cfg: AttentionConfig, x_t: jax.Array,
     return o @ params["wo"], cache
 
 
+# ---------------------------------------------------------------------------
+# Paged decode cache (block-paged KV for continuous batching)
+# ---------------------------------------------------------------------------
+#
+# KV lives in a pool of physical pages of ``block_k`` tokens each; a host-side
+# page table maps (slot, logical block) -> physical page so slots of very
+# different lengths share one pool instead of reserving max_len each.
+# Physical page 0 is reserved as a trash page: writes from inactive slots and
+# chunk padding land there, so every update stays a static-shape scatter.
+
+def init_paged_cache(cfg: AttentionConfig, num_pages: int, batch: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Page pool for one attention layer (+ SLA2 per-page pooled keys and
+    per-slot linear-branch totals)."""
+    hkv, dh, bk = cfg.num_kv_heads, cfg.head_dim, cfg.block_k
+    cache = {
+        "k_pages": jnp.zeros((num_pages, hkv, bk, dh), dtype),
+        "v_pages": jnp.zeros((num_pages, hkv, bk, dh), dtype),
+    }
+    if cfg.mechanism == "sla2":
+        cache.update({
+            "pooled_pages": jnp.zeros((num_pages, hkv, dh), jnp.float32),
+            "h_tot": jnp.zeros((batch, hkv, dh, dh), jnp.float32),
+            "z_tot": jnp.zeros((batch, hkv, dh), jnp.float32),
+        })
+    return cache
+
+
+def _gather_pages(pages, page_table):
+    """pages (P, Hkv, bk, Dh), page_table (B, maxP) -> (B, Hkv, maxP*bk, Dh)
+    contiguous per-slot view in logical order."""
+    g = pages[page_table]                       # (B, maxP, Hkv, bk, Dh)
+    b, mp, hkv, bk, dh = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, mp * bk, dh)
+
+
+def _gather_blocks(pages, phys):
+    """pages (P, Hkv, bk, Dh), phys (B, Hkv, K) per-kv-head physical page ids
+    -> (B, Hkv, K, bk, Dh)."""
+    return jax.vmap(lambda ph, pg: pg[ph], in_axes=(1, 1), out_axes=1)(
+        phys, pages)
+
+
+def chunk_prefill_paged(params: dict, cfg: AttentionConfig, x: jax.Array,
+                        cache: dict, *, page_row, offset, chunk_len, slot):
+    """Prefill one chunk of ONE slot's prompt into the page pool.
+
+    x         : (1, C, d_model) chunk embeddings, padded to the chunk size;
+    page_row  : (maxP,) int32 — the slot's page-table row;
+    offset    : scalar int32 — tokens of this slot already in the cache
+                (must be a multiple of block_k: the engine chunks in
+                block_k multiples);
+    chunk_len : scalar int32 — valid tokens in this chunk (<= C);
+    slot      : scalar int32 — batch row owning the per-slot linear states.
+
+    Chunk attention is computed exactly (dense softmax over cached history +
+    the chunk itself, causal within the chunk) — prefill is exact even for
+    sla2 models; the sparse/linear split applies to decode, where per-step
+    cost matters.  Returns (y (1, C, d_model), cache)."""
+    _, c, _ = x.shape
+    h, hkv, dh, bk = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                      cfg.block_k)
+    n_rep = h // hkv
+    max_p = page_row.shape[0]
+    positions = (offset + jnp.arange(c))[None]          # (1, C)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    # --- write the chunk's K/V into the slot's pages (padding -> trash) ---
+    tok_pos = offset + jnp.arange(c)
+    valid_t = jnp.arange(c) < chunk_len
+    logical = jnp.minimum(tok_pos // bk, max_p - 1)
+    phys = jnp.where(valid_t, page_row[logical], 0)
+    rows = tok_pos % bk
+    cache = dict(cache)
+    cache["k_pages"] = cache["k_pages"].at[phys, :, rows].set(
+        k_new[0].astype(cache["k_pages"].dtype))
+    cache["v_pages"] = cache["v_pages"].at[phys, :, rows].set(
+        v_new[0].astype(cache["v_pages"].dtype))
+
+    # --- exact attention: chunk queries over history + chunk ---
+    k_all = _repeat_kv(_gather_pages(cache["k_pages"], page_row[None]), n_rep)
+    v_all = _repeat_kv(_gather_pages(cache["v_pages"], page_row[None]), n_rep)
+    q_t = q.transpose(0, 2, 1, 3)                       # (1, H, C, Dh)
+    s = jnp.einsum("bhnd,bhmd->bhnm", q_t.astype(jnp.float32),
+                   k_all.astype(jnp.float32)) / jnp.sqrt(dh)
+    n_kv = k_all.shape[2]
+    vis = masklib.token_causal_mask(c, n_kv, offset, cfg.prefix_len)
+    if cfg.sliding_window is not None:
+        qi = jnp.arange(c) + offset
+        kj = jnp.arange(n_kv)
+        sw = kj[None, :] >= (qi[:, None] - cfg.sliding_window + 1)
+        if cfg.prefix_len:
+            sw = sw | (kj[None, :] < cfg.prefix_len)
+        vis = vis & sw
+    s = jnp.where(vis, s, masklib.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhnm,bhmd->bhnd", p, v_all.astype(jnp.float32))
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(1, c, h * dh)
+
+    # --- SLA2 block states for the chunk's blocks ---
+    if cfg.mechanism == "sla2":
+        t_c = c // bk                                   # blocks in the chunk
+        kb = k_new[0].reshape(t_c, bk, hkv, dh).transpose(0, 2, 1, 3)
+        vb = v_new[0].reshape(t_c, bk, hkv, dh).transpose(0, 2, 1, 3)
+        w = valid_t.reshape(t_c, bk).astype(jnp.float32)
+        wb = w[:, None, :, None]
+        kb32, vb32 = kb.astype(jnp.float32), vb.astype(jnp.float32)
+        pooled = (kb32 * wb).sum(-2) / jnp.maximum(wb.sum(-2), 1.0)
+        blk_ids = jnp.minimum(offset // bk + jnp.arange(t_c), max_p - 1)
+        has_tok = w.sum(-1) > 0
+        phys_blk = jnp.where(has_tok, page_row[blk_ids], 0)
+        cache["pooled_pages"] = cache["pooled_pages"].at[phys_blk].set(
+            jnp.where(has_tok[:, None, None], pooled,
+                      cache["pooled_pages"][phys_blk]))
+        complete = (w.sum(-1) == bk)[:, None, None, None]
+        kf = phi(kb32) * wb
+        h_add = (jnp.einsum("thkd,thke->thde", kf, vb32 * wb)
+                 * complete).sum(0)
+        z_add = (kf.sum(-2) * complete[..., 0]).sum(0)
+        # first chunk of a (possibly recycled) slot: reset the linear totals
+        fresh = offset == 0
+        cache["h_tot"] = cache["h_tot"].at[slot].set(
+            jnp.where(fresh, 0.0, cache["h_tot"][slot]) + h_add)
+        cache["z_tot"] = cache["z_tot"].at[slot].set(
+            jnp.where(fresh, 0.0, cache["z_tot"][slot]) + z_add)
+    return o @ params["wo"], cache
+
+
+def decode_step_paged(params: dict, cfg: AttentionConfig, x_t: jax.Array,
+                      cache: dict, *, page_table, lengths, active):
+    """Batched one-token decode with per-slot offsets over the page pool.
+
+    x_t: (B, 1, d_model); page_table: (B, maxP) int32; lengths: (B,) int32 —
+    tokens already cached per slot (the new token lands at lengths[b]);
+    active: (B,) bool — inactive rows write to the trash page and produce
+    garbage logits the engine ignores."""
+    b = x_t.shape[0]
+    h, hkv, dh, bk = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                      cfg.block_k)
+    n_rep = h // hkv
+    positions = lengths[:, None]
+    q, k_new, v_new = _project_qkv(params, cfg, x_t, positions)
+    q = q.transpose(0, 2, 1, 3)                         # (B, H, 1, Dh)
+
+    cur_blk = lengths // bk
+    phys_w = jnp.where(
+        active, jnp.take_along_axis(page_table, cur_blk[:, None], 1)[:, 0], 0)
+    rows = lengths % bk
+    cache = dict(cache)
+    cache["k_pages"] = cache["k_pages"].at[phys_w, :, rows].set(
+        k_new[:, 0].astype(cache["k_pages"].dtype))
+    cache["v_pages"] = cache["v_pages"].at[phys_w, :, rows].set(
+        v_new[:, 0].astype(cache["v_pages"].dtype))
+    t_new = lengths + 1
+
+    if cfg.mechanism == "sla2":
+        o = _sla2_decode_paged(params, cfg, q, cache, page_table, phys_w,
+                               t_new, active)
+    else:
+        k_all = _repeat_kv(_gather_pages(cache["k_pages"], page_table), n_rep)
+        v_all = _repeat_kv(_gather_pages(cache["v_pages"], page_table), n_rep)
+        s = jnp.einsum("bhqd,bhmd->bhqm", q.astype(jnp.float32),
+                       k_all.astype(jnp.float32)) / jnp.sqrt(dh)
+        pos_k = jnp.arange(k_all.shape[2])
+        vis = pos_k[None, :] < t_new[:, None]           # (B, S)
+        if cfg.sliding_window is not None:
+            sw = pos_k[None, :] >= (t_new[:, None] - cfg.sliding_window)
+            if cfg.prefix_len:
+                sw = sw | (pos_k[None, :] < cfg.prefix_len)
+            vis = vis & sw
+        s = jnp.where(vis[:, None, None, :], s, masklib.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqm,bhmd->bhqd", p, v_all.astype(jnp.float32))
+    o = o.astype(x_t.dtype).transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
+    return o @ params["wo"], cache
+
+
+def _sla2_decode_paged(params: dict, cfg: AttentionConfig, q, cache,
+                       page_table, phys_w, t_new, active):
+    """_sla2_decode with per-slot lengths and page-table indirection: router
+    over per-page pooled keys -> sparse gather of the selected physical pages
+    + linear totals over the complement of complete blocks."""
+    sla2_p = params["sla2"]
+    b, h, _, dh = q.shape
+    hkv = cfg.num_kv_heads
+    n_rep = h // hkv
+    bk = cfg.block_k
+    t_n = page_table.shape[1]
+
+    # --- block stats for each row's current block (trash page if inactive) --
+    cur_blk = (t_new - 1) // bk
+    kblk = cache["k_pages"][phys_w].astype(jnp.float32)  # (B, Hkv, bk, Dh)
+    vblk = cache["v_pages"][phys_w].astype(jnp.float32)
+    in_blk = (cur_blk[:, None] * bk + jnp.arange(bk)[None, :]) \
+        < t_new[:, None]                                 # (B, bk)
+    w = in_blk.astype(jnp.float32)[:, None, :, None]
+    pooled_cur = (kblk * w).sum(-2) / jnp.maximum(w.sum(-2), 1.0)
+    cache["pooled_pages"] = cache["pooled_pages"].at[phys_w].set(
+        jnp.where(active[:, None, None], pooled_cur.astype(
+            cache["pooled_pages"].dtype), cache["pooled_pages"][phys_w]))
+    completed = (t_new % bk) == 0
+    kf_cur = phi(kblk) * w
+    h_cur = jnp.einsum("bhkd,bhke->bhde", kf_cur, vblk * w)
+    z_cur = kf_cur.sum(-2)
+    upd = (completed & active)[:, None]
+    cache["h_tot"] = cache["h_tot"] + jnp.where(upd[..., None, None], h_cur,
+                                                0.0)
+    cache["z_tot"] = cache["z_tot"] + jnp.where(upd[..., None], z_cur, 0.0)
+
+    # --- route: group-shared over the slot's logical blocks ---
+    rp = sla2_p.get("router", {})
+    qr = q[:, :, 0].astype(jnp.float32)                  # (B, H, Dh)
+    pk = cache["pooled_pages"][page_table].astype(jnp.float32)
+    pk = pk.transpose(0, 2, 1, 3)                        # (B, Hkv, T_n, Dh)
+    if rp:
+        qr = qr @ rp["proj_q"].astype(jnp.float32)
+        pk = pk @ rp["proj_k"].astype(jnp.float32)
+    qr_g = qr.reshape(b, hkv, n_rep, dh).mean(axis=2)
+    scores = jnp.einsum("bhd,bhtd->bht", qr_g, pk) / jnp.sqrt(dh)
+    blk_ids = jnp.arange(t_n)
+    allowed = blk_ids[None, None, :] <= cur_blk[:, None, None]
+    scores = jnp.where(allowed, scores, masklib.NEG_INF)
+    scores = jnp.where(blk_ids[None, None, :] == cur_blk[:, None, None],
+                       jnp.inf, scores)
+    k_sel = max(1, round(cfg.k_frac * t_n))
+    top_vals, idx = jax.lax.top_k(scores, k_sel)         # (B, Hkv, K_sel)
+    valid = top_vals > masklib.NEG_INF * 0.5
+
+    # --- sparse branch: page-table indirection, gather, flash ---
+    pt = jnp.broadcast_to(page_table[:, None, :], (b, hkv, t_n))
+    phys_sel = jnp.where(valid, jnp.take_along_axis(pt, idx, axis=2), 0)
+    k_sel_blocks = _gather_blocks(cache["k_pages"], phys_sel) \
+        .astype(jnp.float32)                             # (B,Hkv,K,bk,Dh)
+    v_sel_blocks = _gather_blocks(cache["v_pages"], phys_sel) \
+        .astype(jnp.float32)
+    q_g = q[:, :, 0].astype(jnp.float32).reshape(b, hkv, n_rep, dh)
+    s = jnp.einsum("bhgd,bhjkd->bhgjk", q_g, k_sel_blocks) / jnp.sqrt(dh)
+    pos = idx[..., None] * bk + jnp.arange(bk)[None, None, None, :]
+    vis = (pos < t_new[:, None, None, None]) & valid[..., None]
+    s = jnp.where(vis[:, :, None], s, masklib.NEG_INF)
+    p = jax.nn.softmax(s.reshape(b, hkv, n_rep, -1), axis=-1).reshape(s.shape)
+    o_s = jnp.einsum("bhgjk,bhjkd->bhgd", p, v_sel_blocks)
+
+    # --- linear branch: totals minus selected complete blocks ---
+    complete_bound = cur_blk + jnp.where(completed, 1, 0)
+    sel_complete = valid & (idx < complete_bound[:, None, None])
+    qfeat = phi(q[:, :, 0]).reshape(b, hkv, n_rep, dh)
+    kf_sel = phi(k_sel_blocks)
+    ls = jnp.einsum("bhgd,bhjkd->bhgjk", qfeat, kf_sel)
+    ls = ls * sel_complete[:, :, None, :, None].astype(jnp.float32)
+    sub_num = jnp.einsum("bhgjk,bhjkd->bhgd", ls, v_sel_blocks)
+    sub_den = ls.sum(axis=(-1, -2))
+    den_tot = jnp.einsum("bhgd,bhd->bhg", qfeat, cache["z_tot"])
+    num = jnp.einsum("bhgd,bhde->bhge", qfeat, cache["h_tot"]) - sub_num
+    den = (den_tot - sub_den)
+    den = jnp.where(den > 1e-4 * den_tot + 1e-12, den, 0.0)[..., None]
+    o_l = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+
+    # --- combine ---
+    a = jax.nn.sigmoid(sla2_p["alpha_logit"].astype(jnp.float32))
+    if a.shape[0] == 1 and h > 1:
+        a = jnp.broadcast_to(a, (h, a.shape[1]))
+    a_last = a[:, -1].reshape(1, hkv, n_rep, 1)
+    a_eff = jnp.where(den > 0, a_last, 1.0)
+    o = a_eff * o_s + (1.0 - a_eff) * o_l
+    return o.reshape(b, h, dh)[:, :, None, :]
+
+
 def _sla2_decode(params: dict, cfg: AttentionConfig, q, cache, t_new):
     """SLA2 decode: router over pooled block keys -> sparse flash over the
     K_sel selected blocks + linear state over the complement of complete

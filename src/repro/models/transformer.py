@@ -406,6 +406,116 @@ def _layer_decode(lp, cfg: ModelConfig, kind, x_t, lc):
     return x_t, lc
 
 
+# ---------------------------------------------------------------------------
+# Paged caches / chunked prefill / per-slot decode (continuous batching)
+# ---------------------------------------------------------------------------
+
+PAGED_KINDS = ("dense", "moe")
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Paged serving covers the attention layer kinds; recurrent-state mixers
+    (hybrid/mlstm/slstm) and MLA keep the static cache path."""
+    return all(k in PAGED_KINDS
+               for k in tuple(cfg.first_kinds) + tuple(cfg.layer_kinds))
+
+
+def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Block-paged KV pools, one per layer, sharing one page table (kept by
+    the engine).  Page size == cfg.block_k."""
+    if not supports_paged(cfg):
+        raise ValueError(f"paged serving unsupported for {cfg.layer_kinds}")
+    acfg = cfg.attention_config()
+    one_layer = lambda: {"attn": A.init_paged_cache(acfg, num_pages, batch,
+                                                    dtype)}
+    caches: dict[str, Any] = {}
+    if cfg.first_kinds:
+        caches["prefix_layers"] = [one_layer() for _ in cfg.first_kinds]
+    one = {f"l{i}": one_layer() for i in range(len(cfg.layer_kinds))}
+    caches["groups"] = jax.tree.map(
+        lambda a: jnp.tile(a[None], (cfg.n_groups,) + (1,) * a.ndim), one)
+    return caches
+
+
+def _layer_paged(lp, cfg: ModelConfig, kind, x, lc, attn_fn):
+    """Shared dense/moe block body around a paged attention call."""
+    h = L.rmsnorm(lp["ln1"], x)
+    y, c = attn_fn(lp["attn"], h, lc["attn"])
+    x = x + y
+    h2 = L.rmsnorm(lp["ln2"], x)
+    if kind.endswith("moe"):
+        y2, _ = MOE.moe_ffn(lp["moe"], h2, cfg.moe, ep_axis=cfg.ep_axis)
+        x = x + y2
+    else:
+        x = x + L.mlp(lp["mlp"], h2, activation=cfg.mlp_activation)
+    return x, {"attn": c}
+
+
+def _paged_stack(params, cfg: ModelConfig, x, caches, attn_fn):
+    """Run the layer stack (prefix layers + scanned groups) with ``attn_fn``
+    as the attention body; returns (final hidden, new caches)."""
+    caches = dict(caches)
+    if cfg.first_kinds:
+        new_pref = []
+        for i, kind in enumerate(cfg.first_kinds):
+            x, lc = _layer_paged(params["prefix_layers"][i], cfg, kind, x,
+                                 caches["prefix_layers"][i], attn_fn)
+            new_pref.append(lc)
+        caches["prefix_layers"] = new_pref
+
+    def body(x, pair):
+        gp, gc = pair
+        new_gc = {}
+        for i, kind in enumerate(cfg.layer_kinds):
+            x, lc = _layer_paged(gp[f"l{i}"], cfg, kind, x, gc[f"l{i}"],
+                                 attn_fn)
+            new_gc[f"l{i}"] = lc
+        return x, new_gc
+
+    x, new_groups = maps.scan(body, x, (params["groups"], caches["groups"]))
+    caches["groups"] = new_groups
+    return L.rmsnorm(params["final_norm"], x), caches
+
+
+def prefill_chunk(params: dict, cfg: ModelConfig, tokens, caches, *,
+                  page_row, offset, chunk_len, slot):
+    """Prefill one chunk of one slot's prompt (tokens (1, C), padded).
+    Returns (logits (1, V) at the last valid token, caches)."""
+    acfg = cfg.attention_config()
+    x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+
+    def attn_fn(lp, h, lc):
+        return A.chunk_prefill_paged(lp, acfg, h, lc, page_row=page_row,
+                                     offset=offset, chunk_len=chunk_len,
+                                     slot=slot)
+
+    x, caches = _paged_stack(params, cfg, x, caches, attn_fn)
+    last = jax.lax.dynamic_slice(x, (0, chunk_len - 1, 0),
+                                 (1, 1, x.shape[-1]))
+    return logits_from_hidden(params, cfg, last)[:, 0], caches
+
+
+def decode_paged(params: dict, cfg: ModelConfig, token_t, caches, *,
+                 page_table, lengths, active):
+    """One decode step for the whole slot batch with per-slot offsets.
+    token_t: (B,) int32; lengths: (B,) tokens already cached per slot;
+    active: (B,) bool.  Returns (logits (B, V), caches)."""
+    acfg = cfg.attention_config()
+    x = L.embed(params["embed"], token_t[:, None]).astype(cfg.param_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+
+    def attn_fn(lp, h, lc):
+        return A.decode_step_paged(lp, acfg, h, lc, page_table=page_table,
+                                   lengths=lengths, active=active)
+
+    x, caches = _paged_stack(params, cfg, x, caches, attn_fn)
+    return logits_from_hidden(params, cfg, x)[:, 0], caches
+
+
 def prefill(params: dict, cfg: ModelConfig, tokens, caches, *,
             inputs_embeds=None):
     """Run the prompt through the model, filling every cache.

@@ -1,1 +1,3 @@
-from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.engine import (EngineConfig, PageAllocator, Request,
+                                ServeEngine, StaticWaveEngine,
+                                generate_sequential, make_mixed_requests)

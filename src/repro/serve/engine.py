@@ -1,20 +1,34 @@
-"""Batched serving engine over the unified model API.
+"""Continuous-batching serving engine over a block-paged KV cache.
 
-Slot-based continuous batching: ``max_slots`` concurrent sequences share one
-batched cache.  Incoming requests fill free slots; each engine step decodes
-one token for every active slot; finished slots (EOS or budget) are freed
-and refilled from the queue *between* steps.  Prefill for a joining request
-runs per-slot (padded to the block size) and its KV is spliced into the
-batched cache by slot index.
+Requests join and leave mid-flight: every slot carries its own sequence
+offset, so a request admitted at engine step 400 decodes next to one that is
+3000 tokens deep.  KV lives in a pool of physical pages of ``block_k``
+tokens allocated from a free list — ``max_len`` memory is shared across
+slots instead of reserved per slot — and a host-side page table maps
+(slot, logical block) -> physical page (page 0 is a reserved trash page for
+masked writes).  Prefill is *chunked*: each engine step runs at most one
+``prefill_chunk``-token chunk of one joining prompt plus one decode step for
+every ongoing slot, so a long prompt interleaves with decode instead of
+stalling it.  Chunk attention is exact (dense over paged history + chunk);
+SLA2's sparse/linear split applies at decode where per-step cost matters.
 
-On CPU this runs small models end-to-end (examples/serve_lm.py); on TPU the
-same jitted step functions shard per distributed/sharding.cache_specs
-(sequence-sharded KV, flash-decoding style).
+Admission is conservative: a request is admitted only when the free list can
+cover every active slot's worst-case remaining pages, so decode never
+deadlocks on an empty pool (preemption/swapping is future work — see
+ROADMAP).  On CPU this serves small models end-to-end (examples/serve_lm.py);
+on TPU the same jitted step functions shard per
+distributed/sharding.cache_specs (page-axis sharded pools).
+
+``StaticWaveEngine`` keeps the old static generation-wave behaviour (all
+slots join at sequence start, drain before refill) both as the fallback for
+architectures without a paged path (recurrent mixers, MLA) and as the
+baseline the mixed-length benchmark in benchmarks/fig5_e2e_latency.py
+measures against.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,18 +48,282 @@ class Request:
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_slots: int = 4
-    max_len: int = 512
+    max_len: int = 512                 # per-slot logical capacity
+    page_size: Optional[int] = None    # defaults to model block_k
+    prefill_chunk: int = 64            # tokens prefetched per engine step
+    num_pages: Optional[int] = None    # pool size; default reserves worst case
     temperature: float = 0.0           # 0 => greedy
     seed: int = 0
 
 
+def _sample_tokens(logits: np.ndarray, temperature: float,
+                   rng: np.random.Generator) -> np.ndarray:
+    """Greedy (temperature <= 0) or Gumbel-max sampling over (B, V) logits."""
+    if temperature <= 0:
+        return np.argmax(logits, axis=-1).astype(np.int32)
+    z = rng.gumbel(size=logits.shape)
+    return np.argmax(logits / temperature + z, axis=-1).astype(np.int32)
+
+
+def make_mixed_requests(vocab_size: int, work, seed: int = 0,
+                        uid0: int = 0) -> list[Request]:
+    """Requests from a (prompt_len, max_new_tokens) work list — the shared
+    builder for the mixed-length demo/benchmark workloads."""
+    rng = np.random.default_rng(seed)
+    return [Request(uid=uid0 + i,
+                    prompt=rng.integers(1, vocab_size, n).astype(np.int32),
+                    max_new_tokens=m) for i, (n, m) in enumerate(work)]
+
+
+class PageAllocator:
+    """Free list over physical pages 1..num_pages-1 (0 is the trash page)."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("page pool exhausted")
+        return self._free.pop()
+
+    def free(self, pages) -> None:
+        for p in pages:
+            assert 0 < p < self.num_pages
+            self._free.append(int(p))
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    n_prompt: int
+    pos: int = 0                       # prompt tokens prefilled so far
+    budget: int = 0                    # decode tokens still to produce
+    last_token: int = 0
+    decoding: bool = False
+    n_pages: int = 0                   # physical pages currently mapped
+
+
 class ServeEngine:
+    """Mixed-length continuous batching over Model.prefill_chunk/decode_paged.
+
+    Host-side bookkeeping (slot table, page table, free list) stays in numpy;
+    the two jitted device functions have static shapes — (1, prefill_chunk)
+    for chunk prefill and (max_slots,) for the batched decode step — so the
+    engine compiles exactly twice regardless of workload mix.
+    """
+
+    def __init__(self, model, ecfg: EngineConfig):
+        if model.decode_paged is None:
+            raise ValueError(
+                f"{model.kind}/{getattr(model.cfg, 'layer_kinds', ())} has no "
+                "paged serving path; use StaticWaveEngine")
+        self.model = model
+        bk = getattr(model.cfg, "block_k", 64)
+        page = ecfg.page_size or bk
+        if page != bk:
+            # the attention-layer page pool is hard-wired to block_k tokens
+            # per page; any other granularity would silently misindex
+            raise ValueError(f"page_size must equal block_k ({bk})")
+        self.page_size = page
+        chunk = max(page, (ecfg.prefill_chunk // page) * page)
+        self.chunk = chunk
+        self.max_len = -(-ecfg.max_len // page) * page
+        self.max_pages = self.max_len // page
+        num_pages = ecfg.num_pages or ecfg.max_slots * self.max_pages + 1
+        self.cfg = ecfg
+        self.params = None
+        self.caches = None
+        self.allocator = PageAllocator(num_pages)
+        self._queue: list[Request] = []
+        self._slots: dict[int, _Slot] = {}          # slot -> state
+        self._prefill_order: list[int] = []         # FCFS chunked prefill
+        self._page_table = np.zeros((ecfg.max_slots, self.max_pages),
+                                    np.int32)
+        self._lengths = np.zeros((ecfg.max_slots,), np.int32)
+        self._rng = np.random.default_rng(ecfg.seed)
+        self.completed: list[Request] = []
+        # jitted step fns are cached on the model so engine restarts (and
+        # tests spinning up many engines) share compilations; jit retraces
+        # per (chunk, max_slots, pool) shape as needed.
+        if not hasattr(model, "_paged_step_fns"):
+            model._paged_step_fns = (
+                jax.jit(lambda p, b, c: model.prefill_chunk(p, b, c)),
+                jax.jit(lambda p, b, c: model.decode_paged(p, b, c)))
+        self._prefill_fn, self._decode_fn = model._paged_step_fns
+
+    # ------------------------------------------------------------------
+    def load(self, params):
+        self.params = params
+        self.caches = self.model.init_paged_caches(
+            self.cfg.max_slots, self.allocator.num_pages)
+
+    def submit(self, req: Request):
+        n = len(req.prompt)
+        if n == 0:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if n + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: {n}+{req.max_new_tokens} tokens exceed "
+                f"max_len {self.max_len}")
+        if self._worst_pages(n, req.max_new_tokens) \
+                > self.allocator.num_pages - 1:
+            raise ValueError(
+                f"request {req.uid}: needs more pages than the pool holds")
+        req.output = []
+        self._queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _worst_pages(self, n_prompt: int, max_new: int) -> int:
+        return min(self.max_pages,
+                   -(-(n_prompt + max_new) // self.page_size))
+
+    def _outstanding_pages(self) -> int:
+        return sum(self._worst_pages(s.n_prompt, s.req.max_new_tokens)
+                   - s.n_pages for s in self._slots.values())
+
+    def _map_page(self, slot: int, logical: int):
+        if self._page_table[slot, logical] == 0:
+            self._page_table[slot, logical] = self.allocator.alloc()
+            self._slots[slot].n_pages += 1
+
+    def _admit(self):
+        free = [s for s in range(self.cfg.max_slots) if s not in self._slots]
+        for slot in free:
+            if not self._queue:
+                break
+            req = self._queue[0]
+            need = self._worst_pages(len(req.prompt), req.max_new_tokens)
+            if self.allocator.available - self._outstanding_pages() < need:
+                break                       # pool can't cover it yet (FCFS)
+            self._queue.pop(0)
+            self._slots[slot] = _Slot(req=req, n_prompt=len(req.prompt))
+            self._lengths[slot] = 0
+            self._prefill_order.append(slot)
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        return _sample_tokens(logits, self.cfg.temperature, self._rng)
+
+    # ------------------------------------------------------------------
+    def _prefill_step(self):
+        """Run ONE chunk of the oldest joining prompt (if any)."""
+        if not self._prefill_order:
+            return
+        slot = self._prefill_order[0]
+        s = self._slots[slot]
+        n_chunk = min(self.chunk, s.n_prompt - s.pos)
+        for lg in range(s.pos // self.page_size,
+                        (s.pos + n_chunk - 1) // self.page_size + 1):
+            self._map_page(slot, lg)
+        tokens = np.zeros((1, self.chunk), np.int32)
+        tokens[0, :n_chunk] = s.req.prompt[s.pos:s.pos + n_chunk]
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "page_row": jnp.asarray(self._page_table[slot]),
+            "offset": jnp.asarray(s.pos, jnp.int32),
+            "chunk_len": jnp.asarray(n_chunk, jnp.int32),
+            "slot": jnp.asarray(slot, jnp.int32),
+        }
+        logits, self.caches = self._prefill_fn(self.params, batch, self.caches)
+        s.pos += n_chunk
+        self._lengths[slot] = s.pos
+        if s.pos == s.n_prompt:             # prompt done: first token
+            self._prefill_order.pop(0)
+            tok = int(self._sample(np.asarray(logits))[0])
+            s.req.output.append(tok)
+            s.last_token = tok
+            s.budget = s.req.max_new_tokens - 1
+            s.decoding = True
+            if s.budget <= 0 or (s.req.eos_id is not None
+                                 and tok == s.req.eos_id):
+                self._finish(slot)
+
+    def _decode_step(self):
+        """One token for every decoding slot."""
+        dec = [s for s, st in self._slots.items() if st.decoding]
+        if not dec:
+            return
+        tokens = np.zeros((self.cfg.max_slots,), np.int32)
+        active = np.zeros((self.cfg.max_slots,), bool)
+        for slot in dec:
+            st = self._slots[slot]
+            if self._lengths[slot] % self.page_size == 0:
+                self._map_page(slot, int(self._lengths[slot]) // self.page_size)
+            tokens[slot] = st.last_token
+            active[slot] = True
+        batch = {
+            "token": jnp.asarray(tokens),
+            "page_table": jnp.asarray(self._page_table),
+            "lengths": jnp.asarray(self._lengths),
+            "active": jnp.asarray(active),
+        }
+        logits, self.caches = self._decode_fn(self.params, batch, self.caches)
+        tok = self._sample(np.asarray(logits))
+        for slot in dec:
+            st = self._slots[slot]
+            self._lengths[slot] += 1        # input token entered the cache
+            t = int(tok[slot])
+            st.req.output.append(t)
+            st.last_token = t
+            st.budget -= 1
+            if st.budget <= 0 or (st.req.eos_id is not None
+                                  and t == st.req.eos_id):
+                self._finish(slot)
+
+    def _finish(self, slot: int):
+        self.allocator.free(self._page_table[slot][
+            self._page_table[slot] > 0])
+        self._page_table[slot] = 0
+        self._lengths[slot] = 0
+        self.completed.append(self._slots.pop(slot).req)
+        if slot in self._prefill_order:
+            self._prefill_order.remove(slot)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine step: admit, one prefill chunk, one decode wave.
+        Returns the number of occupied slots."""
+        self._admit()
+        self._prefill_step()
+        self._decode_step()
+        return len(self._slots)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self._queue:
+                break
+        return self.completed
+
+
+# ===========================================================================
+# Static generation-wave engine (legacy path / benchmark baseline)
+# ===========================================================================
+
+def _static_fns(model):
+    """Jitted prefill/decode for the static cache path, cached on the model
+    (prefill re-traces per prompt length)."""
+    if not hasattr(model, "_static_step_fns"):
+        model._static_step_fns = (
+            jax.jit(lambda p, b, c: model.prefill(p, b, c)),
+            jax.jit(lambda p, b, c: model.decode(p, b, c)))
+    return model._static_step_fns
+
+
+class StaticWaveEngine:
     """Static-shape batched decode over Model.prefill/Model.decode.
 
-    For simplicity and jit-friendliness, prefill runs one joining request at
-    a time with batch == max_slots (inactive slots carry zeros); the decode
-    step always runs the full slot batch.  Slot bookkeeping is host-side.
-    """
+    All slots share one cache with a single sequence offset, so requests can
+    only join together at sequence start: the engine admits a wave when every
+    slot is idle, pads each prompt (LEFT, with token 0 — the pad tokens stay
+    visible to attention, so outputs depend on wave composition) to a common
+    length, and drains the wave before admitting again.  A long prompt
+    therefore stalls its whole wave — the regime ServeEngine's per-slot
+    offsets remove.  Still used for model families without a paged cache
+    path (recurrent mixers, MLA)."""
 
     def __init__(self, model, ecfg: EngineConfig):
         self.model = model
@@ -56,8 +334,9 @@ class ServeEngine:
         self._tokens = np.zeros((ecfg.max_slots,), np.int32)
         self._budget = np.zeros((ecfg.max_slots,), np.int32)
         self.caches = None
-        self._decode = jax.jit(
-            lambda p, b, c: model.decode(p, b, c))
+        self._rng = np.random.default_rng(ecfg.seed)
+        self.completed: list[Request] = []
+        self._prefill, self._decode = _static_fns(model)
 
     # ------------------------------------------------------------------
     def load(self, params):
@@ -65,45 +344,61 @@ class ServeEngine:
         self.caches = None
 
     def submit(self, req: Request):
+        n = len(req.prompt)
+        bq = getattr(self.model.cfg, "block_q", 32)
+        n_pad = max(bq, -(-n // bq) * bq)
+        if n == 0:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if n_pad + req.max_new_tokens > self.cfg.max_len:
+            raise ValueError(
+                f"request {req.uid}: padded prompt {n_pad} + "
+                f"{req.max_new_tokens} new tokens exceed max_len "
+                f"{self.cfg.max_len}")
         req.output = []
         self._queue.append(req)
 
-    def _free_slots(self):
-        return [s for s in range(self.cfg.max_slots)
-                if s not in self._active]
-
     def _admit(self):
-        """Prefill queued requests into free slots."""
-        for slot in self._free_slots():
-            if not self._queue:
+        """Admit a wave: joint prefill of up to max_slots queued requests,
+        padded to one shared length (wave semantics: only when idle).  The
+        wave is cut FCFS where the SHARED padding would push any member's
+        decode past max_len (a short prompt next to a long one starts its
+        decode at the long prompt's padded length)."""
+        if self._active or not self._queue:
+            return
+        bq = getattr(self.model.cfg, "block_q", 32)
+        pad = lambda n: max(bq, -(-n // bq) * bq)
+        wave: list[Request] = []
+        n_pad = 0
+        while self._queue and len(wave) < self.cfg.max_slots:
+            cand = self._queue[0]
+            cand_pad = max(n_pad, pad(len(cand.prompt)))
+            if any(cand_pad + r.max_new_tokens > self.cfg.max_len
+                   for r in wave + [cand]):
                 break
-            req = self._queue.pop(0)
-            n = len(req.prompt)
-            bq = getattr(self.model.cfg, "block_q", 32)
-            n_pad = max(bq, ((n + bq - 1) // bq) * bq)
-            prompt = np.zeros((self.cfg.max_slots, n_pad), np.int32)
-            prompt[slot, -n:] = req.prompt      # left-pad with token 0
-            if self.caches is None or not self._active:
-                self.caches = self.model.init_caches(
-                    self.cfg.max_slots, self.cfg.max_len)
-            # NOTE: per-slot prefill with a shared-length cache; slots join
-            # at sequence start only (static batching within a generation
-            # wave). Mixed-length continuous joining needs per-slot offsets,
-            # tracked as future work in DESIGN.md.
-            logits, self.caches = self.model.prefill(
-                self.params, {"tokens": jnp.asarray(prompt)}, self.caches)
-            tok = self._sample(np.asarray(logits))
-            self._tokens[slot] = tok[slot]
+            n_pad = cand_pad
+            wave.append(self._queue.pop(0))
+        # submit() guarantees each request fits alone, so wave is non-empty
+        prompt = np.zeros((self.cfg.max_slots, n_pad), np.int32)
+        for slot, req in enumerate(wave):
+            prompt[slot, -len(req.prompt):] = req.prompt   # left-pad with 0
+        self.caches = self.model.init_caches(
+            self.cfg.max_slots, self.cfg.max_len)
+        logits, self.caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompt)}, self.caches)
+        tok = self._sample(np.asarray(logits))
+        for slot, req in enumerate(wave):
+            t = int(tok[slot])
+            req.output.append(t)
+            if req.max_new_tokens <= 1 or (req.eos_id is not None
+                                           and t == req.eos_id):
+                self.completed.append(req)     # done at the first token
+                continue
+            self._tokens[slot] = t
             self._budget[slot] = req.max_new_tokens - 1
-            req.output.append(int(tok[slot]))
             self._active[slot] = req
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:
-        if self.cfg.temperature <= 0:
-            return np.argmax(logits, axis=-1).astype(np.int32)
-        z = np.random.default_rng(self.cfg.seed).gumbel(size=logits.shape)
-        return np.argmax(logits / self.cfg.temperature + z,
-                         axis=-1).astype(np.int32)
+        return _sample_tokens(logits, self.cfg.temperature, self._rng)
 
     # ------------------------------------------------------------------
     def step(self) -> int:
@@ -125,15 +420,33 @@ class ServeEngine:
             else:
                 self._tokens[slot] = t
         for slot in done_slots:
-            del self._active[slot]
+            self.completed.append(self._active.pop(slot))
         return len(self._active)
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
-        """Drain the queue; returns completed requests."""
-        done: list[Request] = []
-        seen = set()
         for _ in range(max_steps):
-            n = self.step()
-            if n == 0 and not self._queue:
+            if self.step() == 0 and not self._queue:
                 break
-        return done
+        return self.completed
+
+
+# ===========================================================================
+# Reference decode (regression oracle)
+# ===========================================================================
+
+def generate_sequential(model, params, prompt: np.ndarray, *,
+                        max_new_tokens: int, max_len: int,
+                        eos_id: Optional[int] = None) -> list[int]:
+    """Unbatched greedy decode through the plain (non-paged) cache path:
+    one model.prefill over the whole prompt, then model.decode one token at
+    a time.  The continuous engine must match this token for token."""
+    prefill, decode = _static_fns(model)
+    caches = model.init_caches(1, max_len)
+    logits, caches = prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, caches)
+    out = [int(np.argmax(np.asarray(logits)[0]))]
+    while len(out) < max_new_tokens and out[-1] != eos_id:
+        logits, caches = decode(
+            params, {"token": jnp.asarray([out[-1]], jnp.int32)}, caches)
+        out.append(int(np.argmax(np.asarray(logits)[0])))
+    return out

@@ -1,0 +1,43 @@
+"""Shared fixtures: session-scoped model/param construction.
+
+Building a smoke model and initialising its params is pure (no mutable
+state leaks between tests), so the heavyweight pieces — param init and the
+jit caches that accumulate on the model's closures — are shared across the
+whole session instead of being rebuilt per test module.
+"""
+import os
+
+import jax
+import pytest
+
+# Persistent XLA compilation cache: the suite is compile-bound on CPU, and
+# most of it is identical between runs.  Cold runs pay full price; the
+# edit-test loop and cached CI runs skip recompiling unchanged graphs.
+_CACHE = os.path.join(os.path.dirname(__file__), os.pardir, ".jax_cache")
+jax.config.update("jax_compilation_cache_dir", os.path.abspath(_CACHE))
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+
+from repro.configs import get_smoke_config          # noqa: E402
+from repro.models.api import build_model            # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def qwen3_smoke():
+    """(cfg, model) for the qwen3 smoke config — dense GQA x SLA2."""
+    cfg = get_smoke_config("qwen3_14b")
+    return cfg, build_model(cfg)
+
+
+@pytest.fixture(scope="session")
+def qwen3_params(qwen3_smoke):
+    _, model = qwen3_smoke
+    return model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="session")
+def full_attn_smoke():
+    """(cfg, model, params) for a dense-softmax (mechanism='full') smoke
+    model — the reference for serving-identity tests."""
+    cfg = get_smoke_config("qwen3_14b", mechanism="full")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))

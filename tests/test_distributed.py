@@ -85,6 +85,31 @@ def test_cache_specs_handle_stacked_layers():
     assert k2[3] == ("data", "model") and k2[1] is None
 
 
+def test_cache_specs_shard_paged_pools():
+    """Paged KV pools (no batch dim) shard the physical-page axis over all
+    mesh axes; per-slot linear totals follow the batch ladder."""
+    from unittest import mock
+    mesh = mock.Mock()
+    mesh.axis_names = ("data", "model")
+    mesh.shape = {"data": 4, "model": 2}
+    cache = {"groups": {"l0": {"attn": {
+        "k_pages": jax.ShapeDtypeStruct((3, 64, 4, 16, 8), jnp.bfloat16),
+        "v_pages": jax.ShapeDtypeStruct((3, 64, 4, 16, 8), jnp.bfloat16),
+        "pooled_pages": jax.ShapeDtypeStruct((3, 64, 4, 8), jnp.float32),
+        "h_tot": jax.ShapeDtypeStruct((3, 8, 4, 8, 8), jnp.float32),
+    }}}}
+    specs = shardlib.cache_specs(cache, mesh)["groups"]["l0"]["attn"]
+    for name in ("k_pages", "v_pages", "pooled_pages"):
+        assert specs[name][0] is None, name          # layer-stack axis
+        assert specs[name][1] == ("data", "model"), name  # page axis
+        assert all(s is None for s in specs[name][2:]), name
+    assert specs["h_tot"][1] == "data"               # per-slot batch axis
+    # an odd page count that no axis divides falls back to replication
+    cache2 = {"k_pages": jax.ShapeDtypeStruct((7, 4, 16, 8), jnp.bfloat16)}
+    k2 = shardlib.cache_specs(cache2, mesh)["k_pages"]
+    assert all(s is None for s in k2)
+
+
 def test_cost_and_memory_analysis_are_per_device(mesh2d):
     """Calibration for launch/roofline.py: on an SPMD module both
     cost_analysis flops and memory_analysis sizes are per-partition."""

@@ -19,12 +19,12 @@ from repro.train import (TrainConfig, Trainer, TrainerConfig,
 from repro.train.trainer import run_with_restarts
 
 
-@pytest.fixture(scope="module")
-def small_model():
-    cfg = get_smoke_config("qwen3_14b")
-    return cfg, build_model(cfg)
+@pytest.fixture(scope="session")
+def small_model(qwen3_smoke):
+    return qwen3_smoke
 
 
+@pytest.mark.slow
 def test_trainer_crash_restart_resumes_deterministically(small_model):
     """A crash mid-run restarts from the checkpoint and the final state is
     IDENTICAL to an uninterrupted run (pure-function data pipeline)."""
@@ -87,6 +87,7 @@ def test_checkpointer_async_roundtrip():
         np.testing.assert_allclose(np.asarray(got["w"]), 3.0)
 
 
+@pytest.mark.slow
 def test_two_stage_training_improves_over_heuristic():
     """Stage-1 (router+alpha fit) must beat the SLA-style heuristic
     initialisation on hard-Top-k MSE."""
@@ -109,6 +110,7 @@ def test_two_stage_training_improves_over_heuristic():
     assert pk["after"] < pk["before"] * 0.7
 
 
+@pytest.mark.slow
 def test_grad_compression_ef_converges(small_model):
     """EF-int8 compressed training reaches a loss close to uncompressed."""
     cfg, model = small_model
@@ -126,10 +128,13 @@ def test_grad_compression_ef_converges(small_model):
     assert abs(losses["int8_ef"] - losses["none"]) < 0.15 * losses["none"]
 
 
-def test_serving_engine_completes_requests(small_model):
+def test_serving_engine_completes_requests(small_model, qwen3_params):
     cfg, model = small_model
-    eng = ServeEngine(model, EngineConfig(max_slots=2, max_len=128))
-    eng.load(model.init(jax.random.PRNGKey(0)))
+    # shapes match tests/test_serving.py so the jitted step fns (cached on
+    # the session-scoped model) are reused, not recompiled
+    eng = ServeEngine(model, EngineConfig(max_slots=3, max_len=192,
+                                          prefill_chunk=32))
+    eng.load(qwen3_params)
     reqs = [Request(uid=i, prompt=np.arange(1, 7, dtype=np.int32),
                     max_new_tokens=5) for i in range(3)]
     for r in reqs:

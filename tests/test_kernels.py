@@ -23,11 +23,12 @@ def route(q, k, bq, bk, k_frac, causal):
 
 
 SHAPES = [
-    # (bh, n, d, bq, bk, k_frac)
+    # (bh, n, d, bq, bk, k_frac); the paper-tile 512-token shape is
+    # interpret-mode-slow and runs in the slow tier
     (2, 256, 64, 32, 16, 0.3),
     (1, 256, 128, 64, 32, 0.2),
     (3, 128, 32, 16, 16, 0.5),
-    (1, 512, 64, 128, 64, 0.1),
+    pytest.param((1, 512, 64, 128, 64, 0.1), marks=pytest.mark.slow),
 ]
 
 
@@ -149,7 +150,7 @@ def test_sort_pairs_monotonic_and_complete():
 
 def test_full_op_kernel_vs_ref_paths():
     from repro.core.sla2 import SLA2Config, init_sla2_params, sla2_attention
-    B, H, N, D = 2, 2, 256, 64
+    B, H, N, D = 2, 2, 128, 64
     bq, bk = 32, 16
     q, k, v = [jax.random.normal(jax.random.PRNGKey(i), (B, H, N, D)) * 0.5
                for i in range(3)]
@@ -171,7 +172,7 @@ def test_gather_impl_matches_ref_and_kernel(causal):
     exactly at fp32; the fused single-pass gather variant agrees with the
     two-pass gather."""
     from repro.core.sla2 import SLA2Config, init_sla2_params, sla2_attention
-    B, H, N, D = 2, 2, 256, 64
+    B, H, N, D = 2, 2, 128, 64
     bq, bk = 32, 16
     q, k, v = [jax.random.normal(jax.random.PRNGKey(i), (B, H, N, D)) * 0.5
                for i in range(3)]
