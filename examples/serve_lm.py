@@ -53,8 +53,14 @@ def main():
     params = out["state"]["params"]
 
     print("\n== continuous batching (paged KV, per-slot offsets) ==")
+    # the default 'auto' paged path decodes through the fused Pallas
+    # page-table kernel on TPU and the jnp gather reference on CPU; pass
+    # paged_impl='fused'/'gather' in EngineConfig to force either
     ecfg = EngineConfig(max_slots=4, max_len=256, prefill_chunk=32)
     eng = ServeEngine(model, ecfg)
+    from repro.models.attention import resolve_paged_impl
+    print("paged attention path: "
+          f"{resolve_paged_impl(eng.model.cfg.attention_config())}")
     eng.load(params)
     reqs = make_requests(cfg)
     toks, dt = drive(eng, reqs)

@@ -1,3 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""SLA2 Pallas kernels: training fwd/bwd (sla2_fwd / sla2_bwd, wrapped by
+ops.sparse_attention_op) and the fused paged serving kernels
+(sla2_decode_paged).  Shared tile-quant / interpret helpers live in ops.
+
+No eager re-exports: callers import the entry points from their modules
+(the repo keeps kernel imports lazy so core/model imports stay light)."""

@@ -25,10 +25,57 @@ from repro.core import sla2 as sla2lib
 from repro.core import router as routerlib
 from repro.core.block_sparse import linear_branch  # complement-trick O_l
 from repro.core.quant import smooth_k
-from repro.kernels.sla2_bwd import sparse_flash_bwd
-from repro.kernels.sla2_fwd import sparse_flash_fwd
 
 _EPS = 1e-12
+
+# ---------------------------------------------------------------------------
+# Shared kernel utilities
+# ---------------------------------------------------------------------------
+# These are used *inside* Pallas kernel bodies (sla2_fwd / sla2_bwd /
+# sla2_decode_paged).  The kernel modules import them from here, so this
+# module must not import the kernel entry points at module scope — those
+# imports live inside the functions that need them.
+
+NEG_INF = -1e30
+INT8_MAX = 127.0
+FP8_MAX = 448.0
+
+
+def quantize_tile(x, bits: str):
+    """Per-tile symmetric quantization; returns (codes, scale)."""
+    ax = jnp.max(jnp.abs(x))
+    if bits == "int8":
+        s = jnp.maximum(ax / INT8_MAX, 1e-8)
+        q = jnp.clip(jnp.round(x / s), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+        return q, s
+    if bits == "fp8":
+        s = jnp.maximum(ax / FP8_MAX, 1e-12)
+        return (x / s).astype(jnp.float8_e4m3fn), s
+    raise ValueError(bits)
+
+
+def qdot(a, a_s, b, b_s, *, transpose_b: bool):
+    """Low-bit matmul with fp32 dequantized result."""
+    if transpose_b:
+        dim_nums = (((1,), (1,)), ((), ()))
+    else:
+        dim_nums = (((1,), (0,)), ((), ()))
+    if a.dtype == jnp.int8:
+        out = jax.lax.dot_general(a, b, dim_nums,
+                                  preferred_element_type=jnp.int32)
+        return out.astype(jnp.float32) * (a_s * b_s)
+    out = jax.lax.dot_general(a.astype(jnp.float32), b.astype(jnp.float32),
+                              dim_nums, preferred_element_type=jnp.float32)
+    return out * (a_s * b_s)
+
+
+def default_interpret(interpret: bool | None = None) -> bool:
+    """Resolve a kernel's ``interpret`` argument: every Pallas entry point
+    falls back to interpret mode off-TPU (CPU CI, tests, smoke benches) and
+    compiled mode on TPU, unless the caller forces a choice."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
 
 
 # ---------------------------------------------------------------------------
@@ -51,6 +98,7 @@ def sparse_attention_op(q, k, v, idx, valid,
 
 def _sparse_fwd_impl(q, k, v, idx, valid, block_q, block_k, causal,
                      quant_bits, prefix_len):
+    from repro.kernels.sla2_fwd import sparse_flash_fwd
     k_used = smooth_k(k) if quant_bits != "none" else k
     o, lse = sparse_flash_fwd(
         q, k_used, v, idx, valid.astype(jnp.int32),
@@ -68,6 +116,7 @@ def _sparse_vjp_fwd(q, k, v, idx, valid, block_q, block_k, causal,
 
 def _sparse_vjp_bwd(block_q, block_k, causal, quant_bits, prefix_len, res,
                     cts):
+    from repro.kernels.sla2_bwd import sparse_flash_bwd
     q, k_used, v, idx, valid, o, lse = res
     do, _ = cts  # no gradient path through LSE (aux output)
     dq, dk, dv = sparse_flash_bwd(

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.ops import NEG_INF, default_interpret
 
 
 # ---------------------------------------------------------------------------
@@ -177,8 +177,7 @@ def sparse_flash_bwd(q, k, v, idx, valid, o, lse, do, *, block_q: int,
     Always full precision (QAT backward); `lse`/`o` come from the (possibly
     low-bit) forward.  `k` must be the same (smoothed) tensor the forward saw.
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = default_interpret(interpret)
     bh, n_q, d = q.shape
     n_kv = k.shape[1]
     t_m, t_n = n_q // block_q, n_kv // block_k

@@ -1,0 +1,388 @@
+"""Fused paged-attention Pallas decode kernel for SLA2 serving.
+
+Design (mirrors ``sla2_fwd.py``'s scalar-prefetch structure, applied to the
+serving page pool):
+
+  * The continuous-batching engine keeps K/V in a shared pool of physical
+    pages ``(P, Hkv, bk, Dh)``; a host-side page table maps each slot's
+    logical blocks to physical pages.  The jnp reference decode
+    (``models/attention._sla2_decode_paged``) materialises copies twice per
+    step — ``_gather_blocks`` builds a ``(B, Hkv, K_sel, bk, Dh)`` copy of
+    every routed page before the softmax/einsum chain — so HBM traffic is
+    ~3x the bytes actually needed (gather write + re-read, then PV re-read).
+
+  * This kernel reads the routed pages DIRECTLY from the pool: the physical
+    page ids selected by the router arrive as a
+    ``pltpu.PrefetchScalarGridSpec`` scalar-prefetch operand, and the K/V
+    BlockSpec index_maps resolve logical->physical through them, so each
+    selected page is DMA'd exactly once and unselected pages are never
+    touched.  Grid = ``(B * Hkv, K_sel)``: one program row per (slot,
+    kv-head), iterating over that row's routed pages.
+
+  * GQA: the kv head's whole query group (``n_rep`` query heads) rides in
+    one ``(n_rep, Dh)`` q tile, so the QK^T / PV matmuls batch the group on
+    the MXU and the routed pages are fetched once per KV head, not once per
+    query head.
+
+  * Online softmax state (m, l, acc) lives in VMEM scratch across the
+    innermost ``jj`` axis (same recurrence as ``sla2_fwd._fwd_kernel``).
+
+  * The LINEAR branch rides the same memory pass: SLA2 decode evaluates
+    O_l over the complement of the selected blocks via the complement trick
+    (running totals h_tot/z_tot minus the selected complete blocks), and the
+    subtraction term needs exactly the K/V tiles the sparse branch already
+    has in VMEM — phi(q)·phi(k_jk)·v_jk is accumulated into scratch
+    alongside the softmax state, instead of a second gather + einsum chain.
+
+  * The alpha-sigmoid combine (Eq. 13, last-block alpha at decode) is fused
+    into the finalize step, so the kernel writes the *final* attention
+    output: one HBM traversal per decoded token end to end.
+
+  * QAT low-bit mode reuses the per-tile INT8/FP8 path of ``sla2_fwd``
+    (Q/K per-tile symmetric, P fixed-scale, V per-tile); the linear branch
+    stays fp32, per the paper's QAT design (only the sparse branch is
+    quantized).
+
+``paged_flash_prefill`` is the chunked-prefill counterpart: exact causal
+flash attention of one slot's chunk over its paged history, with the page
+table as the scalar-prefetch operand — replacing the ``_gather_pages``
+materialisation of a contiguous ``(B, maxP*bk, Dh)`` per-slot view.
+
+Both entry points run compiled on TPU and fall back to interpret mode on
+CPU (``ops.default_interpret``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ops import (INT8_MAX, NEG_INF, default_interpret,
+                               qdot as _qdot, quantize_tile as _quantize_tile)
+
+
+# ---------------------------------------------------------------------------
+# Fused decode: sparse flash + linear complement correction + alpha combine
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,  # SMEM
+                   q_ref, k_ref, v_ref, h_ref, z_ref, a_ref,           # in
+                   o_ref,                                              # out
+                   acc, m_i, l_i, lnum, lden,                          # VMEM
+                   *, block_k: int, k_sel: int, quant_bits: str,
+                   sm_scale: float):
+    g = pl.program_id(0)           # slot * Hkv + kv head
+    jj = pl.program_id(1)          # routed-page index
+
+    @pl.when(jj == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+        lnum[...] = jnp.zeros_like(lnum)
+        lden[...] = jnp.zeros_like(lden)
+
+    is_valid = valid_ref[g, jj] == 1
+    j = jlog_ref[g, jj]            # logical block id (for positions)
+    t = tnew_ref[g]                # slot length incl. the new token
+
+    @pl.when(is_valid)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)        # (n_rep, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)     # (bk, Dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        if quant_bits == "none":
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * sm_scale
+        else:
+            q_c, q_s = _quantize_tile(q, quant_bits)
+            k_c, k_s = _quantize_tile(k, quant_bits)
+            s = _qdot(q_c, q_s, k_c, k_s, transpose_b=True) * sm_scale
+
+        cols = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)[0]
+        vis = cols < t                           # ragged page tail
+        s = jnp.where(vis[None, :], s, NEG_INF)
+
+        m_prev = m_i[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(m_new > NEG_INF * 0.5, m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(s > NEG_INF * 0.5, p, 0.0)
+        corr = jnp.exp(jnp.where(m_prev > NEG_INF * 0.5, m_prev, m_safe)
+                       - m_safe)
+        l_i[...] = l_i[...] * corr + p.sum(axis=-1)
+        if quant_bits == "none":
+            o_tmp = jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        elif quant_bits == "int8":
+            p_c = jnp.round(p * INT8_MAX).astype(jnp.int8)
+            v_c, v_s = _quantize_tile(v, "int8")
+            o_tmp = _qdot(p_c, 1.0 / INT8_MAX, v_c, v_s, transpose_b=False)
+        else:  # fp8
+            p_c, p_s = _quantize_tile(p, "fp8")
+            v_c, v_s = _quantize_tile(v, "fp8")
+            o_tmp = _qdot(p_c, p_s, v_c, v_s, transpose_b=False)
+        acc[...] = acc[...] * corr[:, None] + o_tmp
+        m_i[...] = m_new
+
+        # linear-branch correction: this page is a selected COMPLETE block,
+        # so its phi(k).v / phi(k) mass must leave the complement totals.
+        # The tiles are already resident — no second gather.  fp32 always.
+        @pl.when(comp_ref[g, jj] == 1)
+        def _linear_sub():
+            qf = jax.nn.softmax(q, axis=-1)      # phi(q), (n_rep, Dh)
+            kf = jax.nn.softmax(k, axis=-1)      # phi(k), (bk, Dh)
+            ls = jax.lax.dot_general(
+                qf, kf, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)   # (n_rep, bk)
+            lnum[...] += jax.lax.dot_general(
+                ls, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            lden[...] += ls.sum(axis=-1)
+
+    @pl.when(jj == k_sel - 1)
+    def _finalize():
+        l_safe = jnp.maximum(l_i[...], 1e-20)
+        o_s = acc[...] / l_safe[:, None]
+        qf = jax.nn.softmax(q_ref[0].astype(jnp.float32), axis=-1)
+        den_tot = (qf * z_ref[0, 0][None, :]).sum(axis=-1)     # (n_rep,)
+        num = jax.lax.dot_general(
+            qf, h_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) - lnum[...]
+        den = den_tot - lden[...]
+        # relative empty-complement threshold (cancellation residuals != 0)
+        den = jnp.where(den > 1e-4 * den_tot + 1e-12, den, 0.0)
+        o_l = jnp.where(den[:, None] > 0,
+                        num / jnp.maximum(den[:, None], 1e-12), 0.0)
+        a = jax.nn.sigmoid(a_ref[0].astype(jnp.float32))       # (n_rep,)
+        a_eff = jnp.where(den > 0, a, 1.0)[:, None]
+        o_ref[0] = (a_eff * o_s + (1.0 - a_eff) * o_l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_k", "quant_bits", "interpret"))
+def sla2_decode_fused(q, k_pages, v_pages, phys, jlog, valid, complete,
+                      t_new, h_tot, z_tot, alpha, *, block_k: int,
+                      quant_bits: str = "none",
+                      interpret: bool | None = None):
+    """Fused SLA2 paged decode step.
+
+    q        : (B, Hkv, n_rep, Dh) — the new token's queries, grouped by
+               kv head (GQA group rides one MXU tile)
+    k_pages  : (P, Hkv, bk, Dh) shared physical page pool (bf16/f32)
+    v_pages  : (P, Hkv, bk, Dh)
+    phys     : (B, Hkv, K_sel) int32 routed PHYSICAL page ids (0 = trash
+               page for invalid entries; skipped, costs no extra traffic)
+    jlog     : (B, Hkv, K_sel) int32 routed LOGICAL block ids (positions)
+    valid    : (B, Hkv, K_sel) int32 {0,1}
+    complete : (B, Hkv, K_sel) int32 {0,1} — selected block is complete,
+               i.e. its state is inside h_tot/z_tot and must be subtracted
+    t_new    : (B,) int32 per-slot token count INCLUDING the new token
+    h_tot    : (B, Hkv, Dh, Dh) f32 complement totals over complete blocks
+    z_tot    : (B, Hkv, Dh) f32
+    alpha    : (B, Hkv, n_rep) f32 alpha LOGITS (decode uses the last
+               query block's alpha; sigmoid is fused into the combine)
+    returns  : o (B, Hkv, n_rep, Dh) f32 — final combined attention output
+    """
+    interpret = default_interpret(interpret)
+    b, hkv, n_rep, dh = q.shape
+    k_sel = phys.shape[-1]
+    bk = block_k
+    g_tot = b * hkv
+    sm_scale = 1.0 / (dh ** 0.5)
+
+    flat = lambda x: x.reshape(g_tot, *x.shape[2:])
+    phys_f = flat(phys).astype(jnp.int32)
+    jlog_f = flat(jlog).astype(jnp.int32)
+    valid_f = flat(valid).astype(jnp.int32)
+    comp_f = flat(complete).astype(jnp.int32)
+    tnew_f = jnp.repeat(t_new.astype(jnp.int32), hkv)
+    q_f = flat(q)
+    h_f = flat(h_tot)
+    z_f = z_tot.reshape(g_tot, 1, dh)
+    a_f = flat(alpha)
+
+    grid = (g_tot, k_sel)
+    kernel = functools.partial(
+        _decode_kernel, block_k=bk, k_sel=k_sel, quant_bits=quant_bits,
+        sm_scale=sm_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_rep, dh),
+                         lambda g, jj, ph, jl, va, co, tn: (g, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda g, jj, ph, jl, va, co, tn:
+                         (ph[g, jj], g % hkv, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda g, jj, ph, jl, va, co, tn:
+                         (ph[g, jj], g % hkv, 0, 0)),
+            pl.BlockSpec((1, dh, dh),
+                         lambda g, jj, ph, jl, va, co, tn: (g, 0, 0)),
+            pl.BlockSpec((1, 1, dh),
+                         lambda g, jj, ph, jl, va, co, tn: (g, 0, 0)),
+            pl.BlockSpec((1, n_rep),
+                         lambda g, jj, ph, jl, va, co, tn: (g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_rep, dh),
+                         lambda g, jj, ph, jl, va, co, tn: (g, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_rep, dh), jnp.float32),   # acc
+            pltpu.VMEM((n_rep,), jnp.float32),      # m_i
+            pltpu.VMEM((n_rep,), jnp.float32),      # l_i
+            pltpu.VMEM((n_rep, dh), jnp.float32),   # lnum
+            pltpu.VMEM((n_rep,), jnp.float32),      # lden
+        ],
+    )
+    (o,) = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((g_tot, n_rep, dh), jnp.float32)],
+        interpret=interpret,
+        name=f"sla2_decode_paged_{quant_bits}",
+    )(phys_f, jlog_f, valid_f, comp_f, tnew_f,
+      q_f, k_pages, v_pages, h_f, z_f, a_f)
+    return o.reshape(b, hkv, n_rep, dh)
+
+
+# ---------------------------------------------------------------------------
+# Paged chunked-prefill flash (replaces the _gather_pages per-slot view)
+# ---------------------------------------------------------------------------
+
+def _prefill_kernel(phys_ref, vpg_ref, off_ref,                   # SMEM
+                    q_ref, k_ref, v_ref,                          # in
+                    o_ref,                                        # out
+                    acc, m_i, l_i,                                # VMEM
+                    *, block_k: int, max_p: int, chunk: int,
+                    prefix_len: int, sm_scale: float):
+    p = pl.program_id(1)           # logical page of this slot's history
+
+    @pl.when(p == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    @pl.when(vpg_ref[p] == 1)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)        # (n_rep * C, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)     # (bk, Dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        n_rows = q.shape[0]
+        # row r of the GQA-stacked q tile is chunk position r % chunk
+        rows = off_ref[0] + jax.lax.broadcasted_iota(
+            jnp.int32, (n_rows, block_k), 0) % chunk
+        cols = p * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (n_rows, block_k), 1)
+        vis = rows >= cols
+        if prefix_len:
+            vis = jnp.logical_or(vis, cols < prefix_len)
+        s = jnp.where(vis, s, NEG_INF)
+
+        m_prev = m_i[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(m_new > NEG_INF * 0.5, m_new, 0.0)
+        pr = jnp.exp(s - m_safe[:, None])
+        pr = jnp.where(s > NEG_INF * 0.5, pr, 0.0)
+        corr = jnp.exp(jnp.where(m_prev > NEG_INF * 0.5, m_prev, m_safe)
+                       - m_safe)
+        l_i[...] = l_i[...] * corr + pr.sum(axis=-1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+            pr, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_i[...] = m_new
+
+    @pl.when(p == max_p - 1)
+    def _finalize():
+        l_safe = jnp.maximum(l_i[...], 1e-20)
+        o_ref[0] = (acc[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_k", "n_rep", "prefix_len", "interpret"))
+def paged_flash_prefill(q, k_pages, v_pages, page_row, *, offset,
+                        block_k: int, n_rep: int, prefix_len: int = 0,
+                        interpret: bool | None = None):
+    """Causal flash attention of ONE slot's prefill chunk over its paged
+    history, reading K/V pages straight from the pool.
+
+    q        : (H, C, Dh) the chunk's queries (all query heads)
+    k_pages  : (P, Hkv, bk, Dh) shared page pool; Hkv = H // n_rep
+    v_pages  : (P, Hkv, bk, Dh)
+    page_row : (maxP,) int32 — the slot's page-table row (0 = unmapped;
+               unmapped pages are causally invisible so the trash page read
+               is masked)
+    offset   : scalar int32 — tokens of this slot already cached; the
+               chunk's queries sit at positions [offset, offset + C)
+    returns  : o (H, C, Dh) f32
+
+    Grid = (Hkv, maxP): program (h, p) streams logical page p of the slot
+    through the online softmax of kv head h, with the GQA group's n_rep
+    query heads stacked into one (n_rep*C, Dh) q tile — each page is
+    fetched once per KV head, not once per query head (same grouping as
+    the decode kernel).  The page table is the scalar-prefetch operand
+    resolving logical -> physical, so no contiguous per-slot K/V view is
+    ever materialised; pages beyond the chunk's last visible position are
+    skipped via the validity prefetch flags.
+    """
+    interpret = default_interpret(interpret)
+    h, c, dh = q.shape
+    hkv = h // n_rep
+    max_p = page_row.shape[0]
+    bk = block_k
+    sm_scale = 1.0 / (dh ** 0.5)
+
+    offset = jnp.asarray(offset, jnp.int32)
+    # pages whose first token could be visible to any query of the chunk
+    vpg = (jnp.arange(max_p, dtype=jnp.int32) * bk < offset + c)
+    vpg = vpg.astype(jnp.int32)
+    off_arr = offset.reshape(1)
+    q_g = q.reshape(hkv, n_rep * c, dh)      # group-stacked query tile
+
+    grid = (hkv, max_p)
+    kernel = functools.partial(
+        _prefill_kernel, block_k=bk, max_p=max_p, chunk=c,
+        prefix_len=prefix_len, sm_scale=sm_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_rep * c, dh),
+                         lambda hh, p, ph, vp, of: (hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda hh, p, ph, vp, of: (ph[p], hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda hh, p, ph, vp, of: (ph[p], hh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_rep * c, dh),
+                         lambda hh, p, ph, vp, of: (hh, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_rep * c, dh), jnp.float32),
+            pltpu.VMEM((n_rep * c,), jnp.float32),
+            pltpu.VMEM((n_rep * c,), jnp.float32),
+        ],
+    )
+    (o,) = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((hkv, n_rep * c, dh), jnp.float32)],
+        interpret=interpret,
+        name="sla2_prefill_paged",
+    )(page_row.astype(jnp.int32), vpg, off_arr, q_g, k_pages, v_pages)
+    return o.reshape(h, c, dh)

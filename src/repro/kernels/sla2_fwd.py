@@ -28,37 +28,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
-INT8_MAX = 127.0
-FP8_MAX = 448.0
-
-
-def _quantize_tile(x, bits: str):
-    """Per-tile symmetric quantization; returns (codes, scale)."""
-    ax = jnp.max(jnp.abs(x))
-    if bits == "int8":
-        s = jnp.maximum(ax / INT8_MAX, 1e-8)
-        q = jnp.clip(jnp.round(x / s), -INT8_MAX, INT8_MAX).astype(jnp.int8)
-        return q, s
-    if bits == "fp8":
-        s = jnp.maximum(ax / FP8_MAX, 1e-12)
-        return (x / s).astype(jnp.float8_e4m3fn), s
-    raise ValueError(bits)
-
-
-def _qdot(a, a_s, b, b_s, *, transpose_b: bool):
-    """Low-bit matmul with fp32 dequantized result."""
-    if transpose_b:
-        dim_nums = (((1,), (1,)), ((), ()))
-    else:
-        dim_nums = (((1,), (0,)), ((), ()))
-    if a.dtype == jnp.int8:
-        out = jax.lax.dot_general(a, b, dim_nums,
-                                  preferred_element_type=jnp.int32)
-        return out.astype(jnp.float32) * (a_s * b_s)
-    out = jax.lax.dot_general(a.astype(jnp.float32), b.astype(jnp.float32),
-                              dim_nums, preferred_element_type=jnp.float32)
-    return out * (a_s * b_s)
+from repro.kernels.ops import (FP8_MAX, INT8_MAX, NEG_INF,  # noqa: F401
+                               default_interpret, qdot as _qdot,
+                               quantize_tile as _quantize_tile)
 
 
 def _fwd_kernel(idx_ref, valid_ref,      # scalar prefetch
@@ -157,8 +129,7 @@ def sparse_flash_fwd(q, k, v, idx, valid, *, block_q: int, block_k: int,
     valid    : (BH, T_m, K_sel) int32 {0,1} padding flags
     returns  : o_s (BH, N_q, d), lse (BH, T_m, b_q) flattened to (BH, N_q)
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = default_interpret(interpret)
     bh, n_q, d = q.shape
     n_kv = k.shape[1]
     t_m = n_q // block_q

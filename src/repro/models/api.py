@@ -49,9 +49,18 @@ class Model:
     decode_inputs: Optional[Callable] = None
     # paged serving (continuous batching with per-slot offsets); None when
     # the architecture keeps the static cache path (recurrent mixers, MLA).
+    # The paged hot path is selected by cfg.paged_impl: 'fused' runs the
+    # Pallas page-table kernels (sla2_decode_paged), 'gather' the jnp
+    # reference; use with_overrides() to switch on a built model.
     init_paged_caches: Optional[Callable] = None
     prefill_chunk: Optional[Callable] = None
     decode_paged: Optional[Callable] = None
+
+    def with_overrides(self, **overrides) -> "Model":
+        """Rebuild this model with config fields replaced — e.g.
+        ``model.with_overrides(paged_impl='gather')`` for the serving
+        baseline, or ``decode_quant_bits='int8'`` for low-bit decode."""
+        return build_model(dataclasses.replace(self.cfg, **overrides))
 
     def abstract_params(self, key=None):
         k = jax.random.PRNGKey(0) if key is None else key

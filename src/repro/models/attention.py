@@ -49,6 +49,13 @@ class AttentionConfig:
     quant_bits: str = "int8"
     sla2_impl: str = "kernel"
     n_q_blocks: int = 32               # alpha table size at init
+    # paged serving: 'fused' = Pallas page-table kernels (decode + chunked
+    # prefill read K/V pages in place); 'gather' = jnp reference paths that
+    # materialise per-slot copies (kept as the parity oracle); 'auto' =
+    # fused on compiled backends, gather on CPU (where Pallas runs in
+    # interpret mode and the XLA gather path is the faster proxy)
+    paged_impl: str = "auto"
+    decode_quant_bits: str = "none"    # fused decode QAT tile path
 
     def router_config(self) -> RouterConfig:
         return RouterConfig(
@@ -294,6 +301,14 @@ def init_paged_cache(cfg: AttentionConfig, num_pages: int, batch: int,
     return cache
 
 
+def resolve_paged_impl(cfg: AttentionConfig) -> str:
+    """Resolve cfg.paged_impl: 'auto' picks the fused Pallas page-table
+    kernels on compiled backends and the jnp gather reference on CPU."""
+    if cfg.paged_impl != "auto":
+        return cfg.paged_impl
+    return "gather" if jax.default_backend() == "cpu" else "fused"
+
+
 def _gather_pages(pages, page_table):
     """pages (P, Hkv, bk, Dh), page_table (B, maxP) -> (B, Hkv, maxP*bk, Dh)
     contiguous per-slot view in logical order."""
@@ -346,24 +361,38 @@ def chunk_prefill_paged(params: dict, cfg: AttentionConfig, x: jax.Array,
         v_new[0].astype(cache["v_pages"].dtype))
 
     # --- exact attention: chunk queries over history + chunk ---
-    k_all = _repeat_kv(_gather_pages(cache["k_pages"], page_row[None]), n_rep)
-    v_all = _repeat_kv(_gather_pages(cache["v_pages"], page_row[None]), n_rep)
-    q_t = q.transpose(0, 2, 1, 3)                       # (1, H, C, Dh)
-    s = jnp.einsum("bhnd,bhmd->bhnm", q_t.astype(jnp.float32),
-                   k_all.astype(jnp.float32)) / jnp.sqrt(dh)
-    n_kv = k_all.shape[2]
-    vis = masklib.token_causal_mask(c, n_kv, offset, cfg.prefix_len)
-    if cfg.sliding_window is not None:
-        qi = jnp.arange(c) + offset
-        kj = jnp.arange(n_kv)
-        sw = kj[None, :] >= (qi[:, None] - cfg.sliding_window + 1)
-        if cfg.prefix_len:
-            sw = sw | (kj[None, :] < cfg.prefix_len)
-        vis = vis & sw
-    s = jnp.where(vis, s, masklib.NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhnm,bhmd->bhnd", p, v_all.astype(jnp.float32))
-    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(1, c, h * dh)
+    if resolve_paged_impl(cfg) == "fused" and cfg.sliding_window is None:
+        # page-table-aware flash: the kernel's index maps resolve logical ->
+        # physical through page_row, so K/V pages are read in place and the
+        # contiguous (1, maxP*bk, Dh) per-slot view is never materialised
+        from repro.kernels.sla2_decode_paged import paged_flash_prefill
+        o = paged_flash_prefill(
+            q.transpose(0, 2, 1, 3)[0], cache["k_pages"], cache["v_pages"],
+            page_row, offset=offset, block_k=bk, n_rep=n_rep,
+            prefix_len=cfg.prefix_len)
+        o = o.astype(x.dtype).transpose(1, 0, 2).reshape(1, c, h * dh)
+    else:
+        # gather fallback: sliding-window masks need the full per-slot view
+        k_all = _repeat_kv(_gather_pages(cache["k_pages"], page_row[None]),
+                           n_rep)
+        v_all = _repeat_kv(_gather_pages(cache["v_pages"], page_row[None]),
+                           n_rep)
+        q_t = q.transpose(0, 2, 1, 3)                   # (1, H, C, Dh)
+        s = jnp.einsum("bhnd,bhmd->bhnm", q_t.astype(jnp.float32),
+                       k_all.astype(jnp.float32)) / jnp.sqrt(dh)
+        n_kv = k_all.shape[2]
+        vis = masklib.token_causal_mask(c, n_kv, offset, cfg.prefix_len)
+        if cfg.sliding_window is not None:
+            qi = jnp.arange(c) + offset
+            kj = jnp.arange(n_kv)
+            sw = kj[None, :] >= (qi[:, None] - cfg.sliding_window + 1)
+            if cfg.prefix_len:
+                sw = sw | (kj[None, :] < cfg.prefix_len)
+            vis = vis & sw
+        s = jnp.where(vis, s, masklib.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhnm,bhmd->bhnd", p, v_all.astype(jnp.float32))
+        o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(1, c, h * dh)
 
     # --- SLA2 block states for the chunk's blocks ---
     if cfg.mechanism == "sla2":
@@ -446,8 +475,11 @@ def decode_step_paged(params: dict, cfg: AttentionConfig, x_t: jax.Array,
 def _sla2_decode_paged(params: dict, cfg: AttentionConfig, q, cache,
                        page_table, phys_w, t_new, active):
     """_sla2_decode with per-slot lengths and page-table indirection: router
-    over per-page pooled keys -> sparse gather of the selected physical pages
-    + linear totals over the complement of complete blocks."""
+    over per-page pooled keys, then either the fused Pallas paged-attention
+    kernel (``paged_impl='fused'``: selected pages are read straight from
+    the pool, sparse + linear-correction + alpha combine in one pass) or
+    the jnp gather reference (``'gather'``: materialises page copies; kept
+    as the parity oracle for the kernel)."""
     sla2_p = params["sla2"]
     b, h, _, dh = q.shape
     hkv = cfg.num_kv_heads
@@ -494,9 +526,29 @@ def _sla2_decode_paged(params: dict, cfg: AttentionConfig, q, cache,
     top_vals, idx = jax.lax.top_k(scores, k_sel)         # (B, Hkv, K_sel)
     valid = top_vals > masklib.NEG_INF * 0.5
 
-    # --- sparse branch: page-table indirection, gather, flash ---
     pt = jnp.broadcast_to(page_table[:, None, :], (b, hkv, t_n))
     phys_sel = jnp.where(valid, jnp.take_along_axis(pt, idx, axis=2), 0)
+    complete_bound = cur_blk + jnp.where(completed, 1, 0)
+    sel_complete = valid & (idx < complete_bound[:, None, None])
+
+    if resolve_paged_impl(cfg) == "fused":
+        # fused Pallas kernel: one HBM traversal of the selected pages does
+        # sparse flash + the linear complement subtraction + alpha combine
+        from repro.kernels.sla2_decode_paged import sla2_decode_fused
+        logit = sla2_p["alpha_logit"][:, -1].astype(jnp.float32)
+        if logit.shape[0] == 1 and h > 1:
+            logit = jnp.broadcast_to(logit, (h,))
+        alpha = jnp.broadcast_to(logit.reshape(1, hkv, n_rep),
+                                 (b, hkv, n_rep))
+        o = sla2_decode_fused(
+            q[:, :, 0].reshape(b, hkv, n_rep, dh),
+            cache["k_pages"], cache["v_pages"], phys_sel, idx,
+            valid.astype(jnp.int32), sel_complete.astype(jnp.int32),
+            t_new, cache["h_tot"], cache["z_tot"], alpha,
+            block_k=bk, quant_bits=cfg.decode_quant_bits)
+        return o.reshape(b, h, dh)[:, :, None, :]
+
+    # --- jnp gather reference: page-table indirection, gather, flash ---
     k_sel_blocks = _gather_blocks(cache["k_pages"], phys_sel) \
         .astype(jnp.float32)                             # (B,Hkv,K,bk,Dh)
     v_sel_blocks = _gather_blocks(cache["v_pages"], phys_sel) \
@@ -510,8 +562,6 @@ def _sla2_decode_paged(params: dict, cfg: AttentionConfig, q, cache,
     o_s = jnp.einsum("bhgjk,bhjkd->bhgd", p, v_sel_blocks)
 
     # --- linear branch: totals minus selected complete blocks ---
-    complete_bound = cur_blk + jnp.where(completed, 1, 0)
-    sel_complete = valid & (idx < complete_bound[:, None, None])
     qfeat = phi(q[:, :, 0]).reshape(b, hkv, n_rep, dh)
     kf_sel = phi(k_sel_blocks)
     ls = jnp.einsum("bhgd,bhjkd->bhgjk", qfeat, kf_sel)

@@ -72,6 +72,12 @@ class ModelConfig:
     sla2_impl: str = "gather"
     q_chunk: int = 16
     fuse_branches: bool = False
+    # paged serving: 'fused' Pallas page-table kernels vs 'gather' jnp
+    # reference (parity oracle); 'auto' = fused on compiled backends,
+    # gather on CPU.  decode_quant_bits enables the QAT tile path inside
+    # the fused decode kernel ('none' | 'int8' | 'fp8')
+    paged_impl: str = "auto"
+    decode_quant_bits: str = "none"
     # sub-configs
     moe: Optional[MOE.MoEConfig] = None
     mla: Optional[MLA.MLAConfig] = None
@@ -107,7 +113,9 @@ class ModelConfig:
             use_rope=self.use_rope, block_q=self.block_q,
             block_k=self.block_k, k_frac=self.k_frac,
             quant_bits=self.quant_bits, sla2_impl=self.sla2_impl,
-            n_q_blocks=max(1, self.max_target_len // self.block_q))
+            n_q_blocks=max(1, self.max_target_len // self.block_q),
+            paged_impl=self.paged_impl,
+            decode_quant_bits=self.decode_quant_bits)
 
     def sla2_config(self):
         cfg = self.attention_config().sla2_config()

@@ -54,6 +54,12 @@ class EngineConfig:
     num_pages: Optional[int] = None    # pool size; default reserves worst case
     temperature: float = 0.0           # 0 => greedy
     seed: int = 0
+    # override the model's paged attention path: 'fused' (Pallas page-table
+    # kernels) | 'gather' (jnp reference) | 'auto' (fused on compiled
+    # backends, gather on CPU); None keeps the model config
+    paged_impl: Optional[str] = None
+    # override the fused decode kernel's QAT tile path ('none'|'int8'|'fp8')
+    decode_quant_bits: Optional[str] = None
 
 
 def _sample_tokens(logits: np.ndarray, temperature: float,
@@ -122,6 +128,14 @@ class ServeEngine:
             raise ValueError(
                 f"{model.kind}/{getattr(model.cfg, 'layer_kinds', ())} has no "
                 "paged serving path; use StaticWaveEngine")
+        overrides = {
+            k: v for k, v in (("paged_impl", ecfg.paged_impl),
+                              ("decode_quant_bits", ecfg.decode_quant_bits))
+            if v is not None and v != getattr(model.cfg, k, None)}
+        if overrides:
+            # rebuild so the jitted step fns close over the requested paged
+            # attention path (fused Pallas kernels vs gather reference)
+            model = model.with_overrides(**overrides)
         self.model = model
         bk = getattr(model.cfg, "block_k", 64)
         page = ecfg.page_size or bk

@@ -1,0 +1,56 @@
+"""Small paged-attention state builders shared by tests and benchmarks.
+
+``make_paged_attention_state`` drives the REAL chunked-prefill path
+(``models/attention.chunk_prefill_paged``) to populate a multi-slot page
+pool with ragged per-slot lengths — the canonical fixture for fused-vs-
+gather parity checks (tests/test_parity.py) and the interpret-mode kernel
+smoke in benchmarks/fig6_paged_decode.py, so both always exercise the same
+state layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+
+
+def make_paged_attention_state(hkv: int = 2, lengths=(37, 16, 70), *,
+                               num_heads: int = 4, d_model: int = 64,
+                               head_dim: int = 16, max_p: int = 8,
+                               seed: int = 0):
+    """Build (cfg, params, cache, page_table, x_t) for one SLA2 attention
+    layer: per-slot prompts of ``lengths`` tokens prefilled chunk by chunk
+    into a shared pool (trash page 0, pages allocated densely per slot),
+    plus a random decode-step input ``x_t`` of shape (B, 1, d_model)."""
+    cfg = A.AttentionConfig(
+        d_model=d_model, num_heads=num_heads, num_kv_heads=hkv,
+        head_dim=head_dim, mechanism="sla2", block_q=32, block_k=16,
+        k_frac=0.25, n_q_blocks=8)
+    params = A.init_attention(jax.random.PRNGKey(seed), cfg)
+    b = len(lengths)
+    pt = np.zeros((b, max_p), np.int32)
+    alloc = 1
+    for s, n in enumerate(lengths):
+        for lg in range(n // cfg.block_k + 1):
+            pt[s, lg] = alloc
+            alloc += 1
+    cache = A.init_paged_cache(cfg, alloc + 2, b, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (b, 96, d_model)) * 0.3
+    for s, n in enumerate(lengths):
+        off = 0
+        while off < n:
+            c = min(32, n - off)
+            xi = jnp.zeros((1, 32, d_model)).at[:, :c].set(
+                x[s, off:off + c][None])
+            _, cache = A.chunk_prefill_paged(
+                params, cfg, xi, cache, page_row=jnp.asarray(pt[s]),
+                offset=jnp.asarray(off, jnp.int32),
+                chunk_len=jnp.asarray(c, jnp.int32),
+                slot=jnp.asarray(s, jnp.int32))
+            off += c
+    x_t = jax.random.normal(jax.random.PRNGKey(seed + 2),
+                            (b, 1, d_model)) * 0.3
+    return cfg, params, cache, jnp.asarray(pt), x_t
