@@ -220,8 +220,11 @@ def run(smoke: bool = False) -> dict:
     if not smoke:
         payload["engine_measured_cpu"] = engine_throughput()
     save_result("fig6_paged_decode", payload)
-    with open(TOP_LEVEL_JSON, "w") as f:
-        json.dump(payload, f, indent=1)
+    if not smoke:
+        # only full runs refresh the cross-PR trajectory artifact — smoke
+        # runs skip engine_measured_cpu and would drop it from the file
+        with open(TOP_LEVEL_JSON, "w") as f:
+            json.dump(payload, f, indent=1)
     print(markdown_table(rows, ["ctx", "batch", "fused_us", "gather_us",
                                 "static_us", "fused_vs_gather_x",
                                 "fused_vs_static_x"]))

@@ -1,0 +1,201 @@
+"""Figure 7 (beyond paper): serving under page-pool overcommit — the
+preemption/page-swapping scheduler vs conservative worst-case admission.
+
+The SLA2 paper buys ~97% attention sparsity; the serving layer only
+converts that into throughput if the KV page pool stays saturated.
+Conservative admission reserves every active request's WORST-CASE pages up
+front, so a pool sized below aggregate worst-case demand serializes
+admission and idles both pool and batch slots.  The optimistic scheduler
+(serve/engine.Scheduler) admits against pages actually outstanding and
+preempts the youngest slot on exhaustion — swap-out to the host SwapPool,
+recompute-from-prompt when swap is full — so the same pool keeps more
+slots decoding per step.
+
+MEASURED (CPU proxy, gather path — same methodology as fig6's engine
+section): a decode-heavy mixed workload from
+``serve.scenario.overcommit_workload`` with the pool sized at 2x / 4x
+overcommit, served three ways:
+
+  * optimistic_swap      — the new default scheduler
+  * optimistic_recompute — swap pool disabled (swap_pages=0): preemption
+                           teacher-forces the generated tokens back through
+                           the decode path
+  * conservative         — the legacy worst-case reservation baseline
+
+PRIMARY metric (and the acceptance gate): tokens per engine STEP.  Every
+engine step is one fixed-shape decode dispatch (+ at most one prefill
+chunk), so steps-to-drain is the deterministic, machine-independent
+measure of how well each policy keeps the batch full — wall-clock tok/s
+and p50/p99 request latency (submit -> completion, queueing included) are
+reported alongside but are noisy on a shared 2-core container.
+
+Outputs are cross-checked token-exact between all three policies on every
+run (the benchmark doubles as a regression gate for the scheduler).
+
+Acceptance: optimistic tokens/step >= conservative at every overcommit
+factor, with preemptions actually exercised.  Results go to
+results/benchmarks/fig7_preemption.json AND the top-level
+BENCH_preemption.json tracked across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import markdown_table, save_result
+
+TOP_LEVEL_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                              "BENCH_preemption.json")
+
+POLICIES = {
+    "optimistic_swap": {"admission": "optimistic"},
+    "optimistic_recompute": {"admission": "optimistic", "swap_pages": 0},
+    "conservative": {"admission": "conservative"},
+}
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def serve_workload(model, params, vocab_size, work, *, num_pages,
+                   max_slots, policy_kw, seed=0):
+    """One timed pass of ``work`` through ServeEngine; returns metrics and
+    the output token lists (for cross-policy exactness checks)."""
+    from repro.serve import EngineConfig, ServeEngine, make_mixed_requests
+
+    eng = ServeEngine(model, EngineConfig(
+        max_slots=max_slots, max_len=256, prefill_chunk=32,
+        num_pages=num_pages, paged_impl="gather", **policy_kw))
+    eng.load(params)
+    reqs = make_mixed_requests(vocab_size, work, seed=seed)
+    steps = 0
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    while steps < 50_000:
+        # check BEFORE stepping so the trailing no-op call (nothing active,
+        # nothing queued) doesn't inflate the tokens/step denominator
+        if not eng._slots and not eng._queue:
+            break
+        eng.step()
+        steps += 1
+    dt = time.perf_counter() - t0
+    assert len(eng.completed) == len(reqs), "workload did not drain"
+    lat = [r.t_finish - r.t_submit for r in reqs]
+    toks = sum(len(r.output) for r in reqs)
+    return {
+        "steps": steps,
+        "tok_per_step": round(toks / steps, 3),
+        "tok_per_s": round(toks / dt, 2),
+        "seconds": round(dt, 3),
+        "p50_latency_s": round(_percentile(lat, 50), 4),
+        "p99_latency_s": round(_percentile(lat, 99), 4),
+        "preemptions": eng.stats["preemptions"],
+        "swap_outs": eng.stats["swap_outs"],
+        "recomputes": eng.stats["recomputes"],
+    }, {r.uid: list(r.output) for r in reqs}
+
+
+def run(smoke: bool = False) -> dict:
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.api import build_model
+    from repro.serve.scenario import overcommit_workload
+
+    cfg = get_smoke_config("qwen3_14b", n_layers=4, d_model=128, d_ff=256,
+                           num_heads=4, num_kv_heads=2, head_dim=32,
+                           vocab_size=512)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_slots = 4
+    n_requests = 8 if smoke else 16
+    factors = (2.0,) if smoke else (2.0, 4.0)
+    repeats = 1 if smoke else 3             # wall clock: median of repeats
+
+    rows, detail = [], {}
+    for oc in factors:
+        work, num_pages = overcommit_workload(
+            max_slots=max_slots, page_size=cfg.block_k, overcommit=oc,
+            n_requests=n_requests, seed=7)
+        # warm-up at THIS factor's pool size: the decode/prefill/swap
+        # graphs retrace per num_pages, so warming at any other pool size
+        # would leave compile time inside the first timed run's latencies
+        serve_workload(model, params, cfg.vocab_size, work,
+                       num_pages=num_pages, max_slots=max_slots,
+                       policy_kw=POLICIES["optimistic_swap"])
+        outs = {}
+        row = {"overcommit_x": oc, "usable_pages": num_pages - 1,
+               "n_requests": n_requests}
+        for name, kw in POLICIES.items():
+            runs = []
+            for _ in range(repeats):
+                m, outs[name] = serve_workload(
+                    model, params, cfg.vocab_size, work,
+                    num_pages=num_pages, max_slots=max_slots, policy_kw=kw)
+                runs.append(m)
+            m = dict(runs[0])               # steps/counters: deterministic
+            # every wall-clock metric takes the median across repeats
+            for key, nd in (("tok_per_s", 2), ("seconds", 3),
+                            ("p50_latency_s", 4), ("p99_latency_s", 4)):
+                m[key] = round(float(np.median([r[key] for r in runs])), nd)
+            detail[f"{name}_oc{oc}"] = m
+            row[f"{name}_tok_step"] = m["tok_per_step"]
+            row[f"{name}_tok_s"] = m["tok_per_s"]
+            row[f"{name}_p99_s"] = m["p99_latency_s"]
+        # regression gate: all three policies must emit identical tokens
+        for name in ("optimistic_recompute", "conservative"):
+            assert outs[name] == outs["optimistic_swap"], \
+                f"{name} diverged from optimistic_swap at {oc}x"
+        row["optimistic_vs_conservative_x"] = round(
+            row["optimistic_swap_tok_step"] / row["conservative_tok_step"],
+            2)
+        rows.append(row)
+
+    payload = {
+        "note": "CPU proxy, gather path; tokens/step (one fixed-shape "
+                "decode dispatch per step) is the deterministic signal — "
+                "wall clock on a shared container is informational",
+        "geometry": {"page_tokens": cfg.block_k, "max_slots": max_slots},
+        "measured": rows,
+        "detail": detail,
+        "acceptance_optimistic_beats_conservative": all(
+            r["optimistic_swap_tok_step"] >= r["conservative_tok_step"]
+            for r in rows),
+        "preemptions_exercised": all(
+            detail[f"optimistic_swap_oc{oc}"]["preemptions"] > 0
+            for oc in factors),
+    }
+    save_result("fig7_preemption", payload)
+    if not smoke:
+        # only full runs refresh the cross-PR trajectory artifact — smoke
+        # runs (CI, docs checks) must not clobber it with partial data
+        with open(TOP_LEVEL_JSON, "w") as f:
+            json.dump(payload, f, indent=1)
+    print(markdown_table(rows, ["overcommit_x", "usable_pages",
+                                "optimistic_swap_tok_step",
+                                "optimistic_recompute_tok_step",
+                                "conservative_tok_step",
+                                "optimistic_swap_tok_s",
+                                "conservative_tok_s",
+                                "optimistic_swap_p99_s",
+                                "conservative_p99_s",
+                                "optimistic_vs_conservative_x"]))
+    print(f"\nacceptance (optimistic tokens/step >= conservative): "
+          f"{payload['acceptance_optimistic_beats_conservative']}; "
+          f"preemptions exercised: {payload['preemptions_exercised']}")
+    assert payload["acceptance_optimistic_beats_conservative"]
+    assert payload["preemptions_exercised"]
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload, 2x overcommit only (CI fast job)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

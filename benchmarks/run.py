@@ -16,16 +16,18 @@ def main():
     args = ap.parse_args()
 
     from benchmarks import (fig4_kernel_speed, fig5_e2e_latency,
-                            fig6_paged_decode, table1_efficiency,
-                            table2_ablations)
+                            fig6_paged_decode, fig7_preemption,
+                            table1_efficiency, table2_ablations)
     suites = {
         "table1": table1_efficiency.run,
         "table2": table2_ablations.run,
         "fig4": fig4_kernel_speed.run,
         "fig5": fig5_e2e_latency.run,
-        # fig6 also refreshes the top-level BENCH_paged_decode.json that
-        # tracks the paged-decode perf trajectory across PRs
+        # fig6/fig7 also refresh the top-level BENCH_paged_decode.json /
+        # BENCH_preemption.json that track the serving perf trajectory
+        # across PRs
         "fig6": fig6_paged_decode.run,
+        "fig7": fig7_preemption.run,
     }
     failures = 0
     for name, fn in suites.items():

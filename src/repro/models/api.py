@@ -55,6 +55,10 @@ class Model:
     init_paged_caches: Optional[Callable] = None
     prefill_chunk: Optional[Callable] = None
     decode_paged: Optional[Callable] = None
+    # page-granular slot extract/insert for the preemption scheduler's
+    # swap-out/swap-in path (serve/engine.SwapPool)
+    swap_out: Optional[Callable] = None
+    swap_in: Optional[Callable] = None
 
     def with_overrides(self, **overrides) -> "Model":
         """Rebuild this model with config fields replaced — e.g.
@@ -86,6 +90,10 @@ def _lm_model(cfg: T.ModelConfig) -> Model:
             decode_paged=lambda p, b, c: T.decode_paged(
                 p, cfg, b["token"], c, page_table=b["page_table"],
                 lengths=b["lengths"], active=b["active"]),
+            swap_out=lambda c, page_row, slot: T.swap_out_slot(
+                cfg, c, page_row, slot),
+            swap_in=lambda c, page_row, slot, state: T.swap_in_slot(
+                cfg, c, page_row, slot, state),
         )
     return Model(
         kind="lm", cfg=cfg,

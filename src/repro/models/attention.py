@@ -301,6 +301,42 @@ def init_paged_cache(cfg: AttentionConfig, num_pages: int, batch: int,
     return cache
 
 
+# Page-granular swap helpers: the serving scheduler preempts a slot by
+# copying its state out of the device pool (to a host swap pool) and later
+# copying it back into freshly allocated pages.  A slot's state in one
+# attention layer is (a) its physical K/V pages (+ SLA2 per-page pooled
+# router keys), addressed by the slot's page-table row, and (b) its per-slot
+# SLA2 linear-branch totals (h_tot, z_tot), addressed by the slot id.
+# ``page_row`` may be padded with 0 (the trash page): extracting page 0
+# copies garbage that is never read, and re-inserting at page 0 only
+# rewrites the trash page — both harmless, so callers can keep a static
+# (max_pages,) shape and the extract/insert functions jit-compile once.
+
+_PAGE_KEYS = ("k_pages", "v_pages", "pooled_pages")
+_SLOT_KEYS = ("h_tot", "z_tot")
+
+
+def extract_paged_state(cache: dict, page_row, slot, lead: int = 0) -> dict:
+    """Copy one slot's pages and per-slot states out of a layer cache.
+    ``lead`` leading axes (e.g. the scanned group axis) are preserved."""
+    ix = (slice(None),) * lead
+    st = {k: cache[k][ix + (page_row,)] for k in _PAGE_KEYS if k in cache}
+    st.update({k: cache[k][ix + (slot,)] for k in _SLOT_KEYS if k in cache})
+    return st
+
+
+def insert_paged_state(cache: dict, page_row, slot, state: dict,
+                       lead: int = 0) -> dict:
+    """Write a previously extracted slot state back into a layer cache at a
+    (possibly different) page row / slot id."""
+    ix = (slice(None),) * lead
+    new = dict(cache)
+    for k, v in state.items():
+        tgt = ix + ((page_row,) if k in _PAGE_KEYS else (slot,))
+        new[k] = cache[k].at[tgt].set(jnp.asarray(v, cache[k].dtype))
+    return new
+
+
 def resolve_paged_impl(cfg: AttentionConfig) -> str:
     """Resolve cfg.paged_impl: 'auto' picks the fused Pallas page-table
     kernels on compiled backends and the jnp gather reference on CPU."""

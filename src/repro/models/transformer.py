@@ -446,6 +446,39 @@ def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int,
     return caches
 
 
+def swap_out_slot(cfg: ModelConfig, caches: dict, page_row, slot) -> dict:
+    """Extract one slot's full paged state across every layer: its K/V (+
+    pooled-key) pages at ``page_row`` and its SLA2 linear totals at ``slot``.
+    The result pytree is what the serving SwapPool keeps on the host."""
+    out: dict[str, Any] = {}
+    if cfg.first_kinds:
+        out["prefix_layers"] = [
+            {"attn": A.extract_paged_state(lc["attn"], page_row, slot)}
+            for lc in caches["prefix_layers"]]
+    out["groups"] = {
+        k: {"attn": A.extract_paged_state(v["attn"], page_row, slot, lead=1)}
+        for k, v in caches["groups"].items()}
+    return out
+
+
+def swap_in_slot(cfg: ModelConfig, caches: dict, page_row, slot,
+                 state: dict) -> dict:
+    """Write a swapped-out slot state back into the pools at a fresh page
+    row / slot id (the physical placement may differ from swap-out)."""
+    caches = dict(caches)
+    if cfg.first_kinds:
+        caches["prefix_layers"] = [
+            {"attn": A.insert_paged_state(lc["attn"], page_row, slot,
+                                          st["attn"])}
+            for lc, st in zip(caches["prefix_layers"],
+                              state["prefix_layers"])]
+    caches["groups"] = {
+        k: {"attn": A.insert_paged_state(
+            v["attn"], page_row, slot, state["groups"][k]["attn"], lead=1)}
+        for k, v in caches["groups"].items()}
+    return caches
+
+
 def _layer_paged(lp, cfg: ModelConfig, kind, x, lc, attn_fn):
     """Shared dense/moe block body around a paged attention call."""
     h = L.rmsnorm(lp["ln1"], x)

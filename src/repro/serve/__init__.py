@@ -1,3 +1,4 @@
 from repro.serve.engine import (EngineConfig, PageAllocator, Request,
-                                ServeEngine, StaticWaveEngine,
-                                generate_sequential, make_mixed_requests)
+                                Scheduler, ServeEngine, StaticWaveEngine,
+                                SwapPool, generate_sequential,
+                                make_mixed_requests)

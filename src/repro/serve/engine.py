@@ -12,11 +12,18 @@ every ongoing slot, so a long prompt interleaves with decode instead of
 stalling it.  Chunk attention is exact (dense over paged history + chunk);
 SLA2's sparse/linear split applies at decode where per-step cost matters.
 
-Admission is conservative: a request is admitted only when the free list can
-cover every active slot's worst-case remaining pages, so decode never
-deadlocks on an empty pool (preemption/swapping is future work — see
-ROADMAP).  On CPU this serves small models end-to-end (examples/serve_lm.py);
-on TPU the same jitted step functions shard per
+Admission is optimistic (vLLM-style): requests are admitted against the
+pages *actually* outstanding, pages are allocated lazily as sequences grow,
+and on pool exhaustion the ``Scheduler`` preempts the youngest slot
+(preempt-last, FCFS priority): its pages are either swapped to the host
+``SwapPool`` (page-granular numpy mirror, plus the SLA2 per-slot linear
+totals so the linear branch resumes exactly) or, when swap space is also
+full, dropped and recomputed from the prompt + tokens generated so far.
+Either way a resumed request continues token-identically.  The legacy
+worst-case reservation policy is kept as ``admission='conservative'`` (the
+benchmark baseline in benchmarks/fig7_preemption.py).  See docs/serving.md
+for the full state machine.  On CPU this serves small models end-to-end
+(examples/serve_lm.py); on TPU the same jitted step functions shard per
 distributed/sharding.cache_specs (page-axis sharded pools).
 
 ``StaticWaveEngine`` keeps the old static generation-wave behaviour (all
@@ -28,7 +35,8 @@ measures against.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import time
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +51,10 @@ class Request:
     eos_id: Optional[int] = None
     # filled by the engine
     output: Optional[list] = None
+    arrival: int = -1                  # FCFS priority (kept across preemption)
+    n_preempt: int = 0                 # times this request was preempted
+    t_submit: Optional[float] = None   # wall clock at submit / completion —
+    t_finish: Optional[float] = None   # the benchmark latency probes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +72,14 @@ class EngineConfig:
     paged_impl: Optional[str] = None
     # override the fused decode kernel's QAT tile path ('none'|'int8'|'fp8')
     decode_quant_bits: Optional[str] = None
+    # 'optimistic' admits against actual outstanding pages and preempts the
+    # youngest slot on pool exhaustion (swap to host, else recompute);
+    # 'conservative' keeps the legacy worst-case page reservation (never
+    # preempts — the fig7 benchmark baseline)
+    admission: str = "optimistic"
+    # host swap-pool capacity in pages; None mirrors the device pool size,
+    # 0 disables swapping (preemption always recomputes from the prompt)
+    swap_pages: Optional[int] = None
 
 
 def _sample_tokens(logits: np.ndarray, temperature: float,
@@ -106,21 +126,153 @@ class PageAllocator:
 @dataclasses.dataclass
 class _Slot:
     req: Request
-    n_prompt: int
-    pos: int = 0                       # prompt tokens prefilled so far
+    tokens: np.ndarray                 # prompt tokens to prefill
+    pos: int = 0                       # tokens prefilled so far
     budget: int = 0                    # decode tokens still to produce
     last_token: int = 0
     decoding: bool = False
     n_pages: int = 0                   # physical pages currently mapped
+    # recompute-resume: already-sampled tokens to teacher-force through the
+    # decode path (sampling is suppressed until the list drains).  Replaying
+    # generated tokens through DECODE — not through chunked prefill — makes
+    # the rebuilt cache bit-identical to the one the preemption dropped,
+    # since it repeats the exact original computation.
+    replay: Optional[list] = None
+
+
+@dataclasses.dataclass
+class _ResumeState:
+    """Where a preempted request left off (side table in the Scheduler).
+    The evicted ``_Slot`` rides along verbatim — already reset for replay
+    in recompute mode, untouched in swap mode — so resume reuses it
+    instead of copying fields in and out."""
+    mode: str                          # 'swap' | 'recompute'
+    slot: _Slot
+    length: int = 0                    # swap-only: tokens in the saved pages
+
+
+# The jitted swap-out graph extracts pages with a static (max_pages,)-padded
+# page row, so the raw state carries trash-page copies for the padding rows.
+# Host-side, those rows are trimmed before the state enters the SwapPool (so
+# capacity accounting matches the memory actually held) and re-padded with
+# zeros on swap-in (the padded rows only ever write the trash page).  Page
+# axes are located name-by-position-from-the-end, matching the leaf layout
+# of models/attention.extract_paged_state regardless of leading (e.g. group)
+# axes: k/v pages are (..., P, Hkv, bk, Dh), pooled keys (..., P, Hkv, Dh).
+_PAGE_AXIS_FROM_END = {"k_pages": 4, "v_pages": 4, "pooled_pages": 3}
+
+
+def _map_page_leaves(state, fn):
+    if isinstance(state, dict):
+        return {k: fn(k, v) if k in _PAGE_AXIS_FROM_END
+                else _map_page_leaves(v, fn) for k, v in state.items()}
+    if isinstance(state, list):
+        return [_map_page_leaves(v, fn) for v in state]
+    return state
+
+
+def _trim_swap_state(state, n_pages: int):
+    def trim(name, arr):
+        axis = arr.ndim - _PAGE_AXIS_FROM_END[name]
+        return arr[(slice(None),) * axis + (slice(0, n_pages),)]
+    return _map_page_leaves(state, trim)
+
+
+def _pad_swap_state(state, max_pages: int):
+    def pad(name, arr):
+        axis = arr.ndim - _PAGE_AXIS_FROM_END[name]
+        n = max_pages - arr.shape[axis]
+        if n == 0:
+            return arr
+        shape = arr.shape[:axis] + (n,) + arr.shape[axis + 1:]
+        return np.concatenate([arr, np.zeros(shape, arr.dtype)], axis=axis)
+    return _map_page_leaves(state, pad)
+
+
+class SwapPool:
+    """Host-memory swap space for preempted slots, page-granular.
+
+    Holds numpy mirrors of a slot's device state — its K/V pages (+ SLA2
+    per-page pooled router keys) for every layer, plus the per-slot linear
+    totals (h_tot, z_tot) — capacity-accounted in pages.  ``can_hold`` gates
+    the scheduler's swap-vs-recompute decision; a request whose pages don't
+    fit falls back to recompute-from-prompt."""
+
+    def __init__(self, capacity_pages: int):
+        self.capacity = max(0, int(capacity_pages))
+        self.used = 0
+        self._store: dict[int, tuple[int, Any]] = {}   # arrival -> (n, state)
+
+    @property
+    def n_swapped(self) -> int:
+        return len(self._store)
+
+    def can_hold(self, n_pages: int) -> bool:
+        return self.used + n_pages <= self.capacity
+
+    def put(self, key: int, n_pages: int, state) -> None:
+        assert key not in self._store and self.can_hold(n_pages)
+        self._store[key] = (n_pages, state)
+        self.used += n_pages
+
+    def pop(self, key: int):
+        n_pages, state = self._store.pop(key)
+        self.used -= n_pages
+        return state
+
+
+class Scheduler:
+    """FCFS wait queue + preempt-last priority bookkeeping.
+
+    Requests keep their original arrival order across preemption: a
+    preempted request re-enters the queue sorted by arrival, so it resumes
+    before anything that arrived after it (preempt-last / resume-first).
+    Resume state rides in a side table keyed by arrival id (engine-unique,
+    unlike user-chosen uids)."""
+
+    def __init__(self):
+        self.waiting: list[Request] = []
+        self._resume: dict[int, _ResumeState] = {}
+        self._arrivals = 0
+
+    def enqueue(self, req: Request) -> None:
+        req.arrival = self._arrivals
+        self._arrivals += 1
+        self.waiting.append(req)
+
+    def requeue(self, req: Request, resume: _ResumeState) -> None:
+        self._resume[req.arrival] = resume
+        i = 0
+        while i < len(self.waiting) and self.waiting[i].arrival < req.arrival:
+            i += 1
+        self.waiting.insert(i, req)
+
+    def head(self) -> Optional[Request]:
+        return self.waiting[0] if self.waiting else None
+
+    def pop_head(self) -> Request:
+        return self.waiting.pop(0)
+
+    def peek_resume(self, req: Request) -> Optional[_ResumeState]:
+        return self._resume.get(req.arrival)
+
+    def take_resume(self, req: Request) -> Optional[_ResumeState]:
+        return self._resume.pop(req.arrival, None)
+
+    def victim(self, slots: dict[int, _Slot]) -> int:
+        """Preempt-last: the active slot with the newest arrival."""
+        return max(slots, key=lambda s: slots[s].req.arrival)
 
 
 class ServeEngine:
     """Mixed-length continuous batching over Model.prefill_chunk/decode_paged.
 
-    Host-side bookkeeping (slot table, page table, free list) stays in numpy;
-    the two jitted device functions have static shapes — (1, prefill_chunk)
-    for chunk prefill and (max_slots,) for the batched decode step — so the
-    engine compiles exactly twice regardless of workload mix.
+    Host-side bookkeeping (slot table, page table, free list, scheduler,
+    swap pool) stays in numpy; the jitted device functions have static
+    shapes — (1, prefill_chunk) for chunk prefill, (max_slots,) for the
+    batched decode step, and (max_pages,)-padded page rows for swap-out/in
+    — so the engine compiles a fixed handful of graphs regardless of
+    workload mix or preemption pattern.
     """
 
     def __init__(self, model, ecfg: EngineConfig):
@@ -134,8 +286,18 @@ class ServeEngine:
             if v is not None and v != getattr(model.cfg, k, None)}
         if overrides:
             # rebuild so the jitted step fns close over the requested paged
-            # attention path (fused Pallas kernels vs gather reference)
-            model = model.with_overrides(**overrides)
+            # attention path (fused Pallas kernels vs gather reference) —
+            # memoized on the original model so engines constructed with
+            # the same overrides share one rebuilt model and therefore one
+            # set of jitted step/swap fns (a fresh rebuild per engine would
+            # silently recompile everything each time)
+            if not hasattr(model, "_override_models"):
+                model._override_models = {}
+            key = tuple(sorted(overrides.items()))
+            if key not in model._override_models:
+                model._override_models[key] = model.with_overrides(
+                    **overrides)
+            model = model._override_models[key]
         self.model = model
         bk = getattr(model.cfg, "block_k", 64)
         page = ecfg.page_size or bk
@@ -152,8 +314,15 @@ class ServeEngine:
         self.cfg = ecfg
         self.params = None
         self.caches = None
+        if ecfg.admission not in ("optimistic", "conservative"):
+            raise ValueError(f"unknown admission policy {ecfg.admission!r}")
         self.allocator = PageAllocator(num_pages)
-        self._queue: list[Request] = []
+        self.scheduler = Scheduler()
+        swap_cap = (num_pages - 1 if ecfg.swap_pages is None
+                    else ecfg.swap_pages)
+        self.swap = SwapPool(swap_cap)
+        self.stats = {"preemptions": 0, "swap_outs": 0, "swap_ins": 0,
+                      "recomputes": 0}
         self._slots: dict[int, _Slot] = {}          # slot -> state
         self._prefill_order: list[int] = []         # FCFS chunked prefill
         self._page_table = np.zeros((ecfg.max_slots, self.max_pages),
@@ -169,8 +338,21 @@ class ServeEngine:
                 jax.jit(lambda p, b, c: model.prefill_chunk(p, b, c)),
                 jax.jit(lambda p, b, c: model.decode_paged(p, b, c)))
         self._prefill_fn, self._decode_fn = model._paged_step_fns
+        if model.swap_out is not None:
+            if not hasattr(model, "_swap_fns"):
+                model._swap_fns = (jax.jit(model.swap_out),
+                                   jax.jit(model.swap_in))
+            self._swap_out_fn, self._swap_in_fn = model._swap_fns
+        else:
+            self._swap_out_fn = self._swap_in_fn = None
 
     # ------------------------------------------------------------------
+    @property
+    def _queue(self) -> list[Request]:
+        """The scheduler's wait queue (read-only view — external callers
+        poll its truthiness to know whether work remains)."""
+        return self.scheduler.waiting
+
     def load(self, params):
         self.params = params
         self.caches = self.model.init_paged_caches(
@@ -189,7 +371,8 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.uid}: needs more pages than the pool holds")
         req.output = []
-        self._queue.append(req)
+        req.t_submit = time.perf_counter()
+        self.scheduler.enqueue(req)
 
     # ------------------------------------------------------------------
     def _worst_pages(self, n_prompt: int, max_new: int) -> int:
@@ -197,27 +380,135 @@ class ServeEngine:
                    -(-(n_prompt + max_new) // self.page_size))
 
     def _outstanding_pages(self) -> int:
-        return sum(self._worst_pages(s.n_prompt, s.req.max_new_tokens)
+        return sum(self._worst_pages(len(s.tokens), s.req.max_new_tokens)
                    - s.n_pages for s in self._slots.values())
 
-    def _map_page(self, slot: int, logical: int):
-        if self._page_table[slot, logical] == 0:
-            self._page_table[slot, logical] = self.allocator.alloc()
-            self._slots[slot].n_pages += 1
+    def _pages_needed_now(self, req: Request,
+                          resume: Optional[_ResumeState]) -> int:
+        """Pages a request needs to make progress right after admission —
+        the optimistic-admission gate (vs the conservative worst case)."""
+        if resume is not None and resume.mode == "swap":
+            s = resume.slot
+            if s.decoding:
+                boundary = resume.length % self.page_size == 0
+                return s.n_pages + (1 if boundary else 0)
+            # mid-prefill: the saved pages may already cover part of the
+            # next chunk (self-preemption mid-mapping), so take the max of
+            # saved pages and total pages the resumed chunk reaches —
+            # summing the two would double-count and could demand more
+            # pages than the pool holds (permanent admission deadlock)
+            nxt = min(self.chunk, len(s.tokens) - s.pos)
+            return max(s.n_pages,
+                       -(-(s.pos + nxt) // self.page_size))
+        tokens = req.prompt if resume is None else resume.slot.tokens
+        return -(-min(self.chunk, len(tokens)) // self.page_size)
+
+    def _ensure_page(self, slot: int, logical: int) -> bool:
+        """Map (slot, logical) -> a physical page, preempting the youngest
+        slot while the pool is exhausted.  Returns False if ``slot`` itself
+        was the youngest and got preempted (caller must drop it)."""
+        if self._page_table[slot, logical] != 0:
+            return True
+        while self.allocator.available == 0:
+            victim = self.scheduler.victim(self._slots)
+            self._preempt(victim)
+            if victim == slot:
+                return False
+        self._page_table[slot, logical] = self.allocator.alloc()
+        self._slots[slot].n_pages += 1
+        return True
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a slot: swap its pages + linear totals to the host pool if
+        they fit, else drop them and schedule recompute-from-prompt.  The
+        request re-enters the wait queue at its original priority."""
+        s = self._slots.pop(slot)
+        if slot in self._prefill_order:
+            self._prefill_order.remove(slot)
+        row = self._page_table[slot].copy()
+        self.stats["preemptions"] += 1
+        s.req.n_preempt += 1
+        if (self._swap_out_fn is not None and s.n_pages > 0
+                and self.swap.can_hold(s.n_pages)):
+            state = jax.device_get(self._swap_out_fn(
+                self.caches, jnp.asarray(row), jnp.asarray(slot, jnp.int32)))
+            self.swap.put(s.req.arrival, s.n_pages,
+                          _trim_swap_state(state, s.n_pages))
+            self.stats["swap_outs"] += 1
+            resume = _ResumeState(mode="swap", slot=s,
+                                  length=int(self._lengths[slot]))
+        else:
+            if s.n_pages > 0:
+                # a zero-page victim is a pure de-admission — nothing was
+                # computed yet, so nothing is recomputed
+                self.stats["recomputes"] += 1
+            if s.decoding:
+                # drop everything: re-prefill the prompt (same chunking as
+                # the original pass), then teacher-force every generated
+                # token back through the decode path — bit-identical to the
+                # dropped cache because it repeats the original computation
+                s.replay = list(s.req.output)
+                s.decoding = False
+            s.pos = 0
+            s.n_pages = 0
+            resume = _ResumeState(mode="recompute", slot=s)
+        self.allocator.free(row[row > 0])
+        self._page_table[slot] = 0
+        self._lengths[slot] = 0
+        self.scheduler.requeue(s.req, resume)
+
+    def _swap_in(self, slot: int, req: Request,
+                 resume: _ResumeState) -> None:
+        """Restore a swapped-out request into ``slot``: allocate fresh pages
+        for its logical blocks, copy the saved pages + linear totals back,
+        and continue exactly where it stopped (decode or chunked prefill)."""
+        s = resume.slot
+        state = _pad_swap_state(self.swap.pop(req.arrival), self.max_pages)
+        row = np.zeros((self.max_pages,), np.int32)
+        for lg in range(s.n_pages):
+            row[lg] = self.allocator.alloc()
+        self.caches = self._swap_in_fn(
+            self.caches, jnp.asarray(row), jnp.asarray(slot, jnp.int32),
+            state)
+        self.stats["swap_ins"] += 1
+        self._page_table[slot] = row
+        self._lengths[slot] = resume.length
+        self._slots[slot] = s
+        if not s.decoding:
+            self._prefill_order.append(slot)
+
+    def _start_slot(self, slot: int, req: Request,
+                    resume: Optional[_ResumeState]) -> None:
+        """Fresh prefill (or recompute replay) into an empty slot."""
+        s = (_Slot(req=req, tokens=np.asarray(req.prompt, np.int32))
+             if resume is None else resume.slot)
+        self._slots[slot] = s
+        self._lengths[slot] = 0
+        self._prefill_order.append(slot)
 
     def _admit(self):
         free = [s for s in range(self.cfg.max_slots) if s not in self._slots]
+        conservative = self.cfg.admission == "conservative"
         for slot in free:
-            if not self._queue:
+            req = self.scheduler.head()
+            if req is None:
                 break
-            req = self._queue[0]
-            need = self._worst_pages(len(req.prompt), req.max_new_tokens)
-            if self.allocator.available - self._outstanding_pages() < need:
-                break                       # pool can't cover it yet (FCFS)
-            self._queue.pop(0)
-            self._slots[slot] = _Slot(req=req, n_prompt=len(req.prompt))
-            self._lengths[slot] = 0
-            self._prefill_order.append(slot)
+            if conservative:
+                need = self._worst_pages(len(req.prompt), req.max_new_tokens)
+                if self.allocator.available - self._outstanding_pages() \
+                        < need:
+                    break                   # pool can't cover it yet (FCFS)
+            else:
+                resume = self.scheduler.peek_resume(req)
+                if self.allocator.available \
+                        < self._pages_needed_now(req, resume):
+                    break                   # not enough to progress (FCFS)
+            self.scheduler.pop_head()
+            resume = self.scheduler.take_resume(req)
+            if resume is not None and resume.mode == "swap":
+                self._swap_in(slot, req, resume)
+            else:
+                self._start_slot(slot, req, resume)
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:
         return _sample_tokens(logits, self.cfg.temperature, self._rng)
@@ -229,12 +520,13 @@ class ServeEngine:
             return
         slot = self._prefill_order[0]
         s = self._slots[slot]
-        n_chunk = min(self.chunk, s.n_prompt - s.pos)
+        n_chunk = min(self.chunk, len(s.tokens) - s.pos)
         for lg in range(s.pos // self.page_size,
                         (s.pos + n_chunk - 1) // self.page_size + 1):
-            self._map_page(slot, lg)
+            if not self._ensure_page(slot, lg):
+                return                      # self-preempted; resumes later
         tokens = np.zeros((1, self.chunk), np.int32)
-        tokens[0, :n_chunk] = s.req.prompt[s.pos:s.pos + n_chunk]
+        tokens[0, :n_chunk] = s.tokens[s.pos:s.pos + n_chunk]
         batch = {
             "tokens": jnp.asarray(tokens),
             "page_row": jnp.asarray(self._page_table[slot]),
@@ -245,8 +537,15 @@ class ServeEngine:
         logits, self.caches = self._prefill_fn(self.params, batch, self.caches)
         s.pos += n_chunk
         self._lengths[slot] = s.pos
-        if s.pos == s.n_prompt:             # prompt done: first token
+        if s.pos == len(s.tokens):          # prompt done: first token
             self._prefill_order.pop(0)
+            if s.replay:
+                # recompute-resume: everything after the prompt was already
+                # sampled before preemption; start teacher-forcing it back
+                # through the decode path (budget was saved at preemption)
+                s.last_token = s.replay.pop(0)
+                s.decoding = True
+                return
             tok = int(self._sample(np.asarray(logits))[0])
             s.req.output.append(tok)
             s.last_token = tok
@@ -257,17 +556,26 @@ class ServeEngine:
                 self._finish(slot)
 
     def _decode_step(self):
-        """One token for every decoding slot."""
-        dec = [s for s, st in self._slots.items() if st.decoding]
-        if not dec:
+        """One token for every decoding slot.  Page demand is served oldest
+        slot first, so pool exhaustion preempts the youngest slots (which
+        drop out of this step and resume via the scheduler)."""
+        dec = sorted((s for s, st in self._slots.items() if st.decoding),
+                     key=lambda s: self._slots[s].req.arrival)
+        ready = []
+        for slot in dec:
+            if slot not in self._slots:     # preempted by an older slot
+                continue
+            if self._lengths[slot] % self.page_size == 0 and \
+                    not self._ensure_page(
+                        slot, int(self._lengths[slot]) // self.page_size):
+                continue                    # self-preempted
+            ready.append(slot)
+        if not ready:
             return
         tokens = np.zeros((self.cfg.max_slots,), np.int32)
         active = np.zeros((self.cfg.max_slots,), bool)
-        for slot in dec:
-            st = self._slots[slot]
-            if self._lengths[slot] % self.page_size == 0:
-                self._map_page(slot, int(self._lengths[slot]) // self.page_size)
-            tokens[slot] = st.last_token
+        for slot in ready:
+            tokens[slot] = self._slots[slot].last_token
             active[slot] = True
         batch = {
             "token": jnp.asarray(tokens),
@@ -277,9 +585,14 @@ class ServeEngine:
         }
         logits, self.caches = self._decode_fn(self.params, batch, self.caches)
         tok = self._sample(np.asarray(logits))
-        for slot in dec:
+        for slot in ready:
             st = self._slots[slot]
             self._lengths[slot] += 1        # input token entered the cache
+            if st.replay:
+                # recompute catch-up: the sampled token is discarded — the
+                # real one was sampled before preemption and is next in line
+                st.last_token = st.replay.pop(0)
+                continue
             t = int(tok[slot])
             st.req.output.append(t)
             st.last_token = t
@@ -293,7 +606,9 @@ class ServeEngine:
             self._page_table[slot] > 0])
         self._page_table[slot] = 0
         self._lengths[slot] = 0
-        self.completed.append(self._slots.pop(slot).req)
+        req = self._slots.pop(slot).req
+        req.t_finish = time.perf_counter()
+        self.completed.append(req)
         if slot in self._prefill_order:
             self._prefill_order.remove(slot)
 

@@ -6,6 +6,11 @@ pool with ragged per-slot lengths — the canonical fixture for fused-vs-
 gather parity checks (tests/test_parity.py) and the interpret-mode kernel
 smoke in benchmarks/fig6_paged_decode.py, so both always exercise the same
 state layout.
+
+``overcommit_workload`` builds the forced-preemption serving scenario for
+benchmarks/fig7_preemption.py and the scheduler tests: a mixed-length
+(prompt, max_new) work list plus a page-pool size deliberately below the
+workload's worst-case concurrent page demand by an ``overcommit`` factor.
 """
 from __future__ import annotations
 
@@ -14,6 +19,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import attention as A
+
+
+def overcommit_workload(*, max_slots: int, page_size: int,
+                        overcommit: float = 2.0, n_requests: int = 12,
+                        seed: int = 0) -> tuple[list, int]:
+    """A mixed-length work list whose concurrent worst-case page demand
+    exceeds the returned pool size by ~``overcommit``x.
+
+    Returns ``(work, num_pages)`` where ``work`` is a list of
+    (prompt_len, max_new_tokens) pairs (feed to ``make_mixed_requests``)
+    and ``num_pages`` sizes the engine pool (including the trash page) so
+    that ``max_slots`` concurrent requests need ~overcommit x the usable
+    pages — guaranteeing the optimistic scheduler preempts while the
+    conservative baseline serializes admission."""
+    rng = np.random.default_rng(seed)
+    work = []
+    for _ in range(n_requests):
+        # decode-heavy mix: sub-page prompts, 2-4 pages of decode — page
+        # demand grows lazily during decode, which is exactly the regime
+        # where conservative worst-case reservation idles the pool hardest
+        n_prompt = int(rng.integers(6, page_size))
+        max_new = int(rng.integers(2, 5)) * page_size
+        work.append((n_prompt, max_new))
+    pages_per = [-(-(n + m) // page_size) for n, m in work]
+    # worst concurrent demand: the max_slots hungriest requests at once
+    demand = sum(sorted(pages_per, reverse=True)[:max_slots])
+    usable = max(max(pages_per), int(round(demand / overcommit)))
+    return work, usable + 1
 
 
 def make_paged_attention_state(hkv: int = 2, lengths=(37, 16, 70), *,

@@ -1,8 +1,9 @@
 """Serving regression tests: the continuous-batching engine (paged KV,
 per-slot offsets, chunked prefill) must be *invisible* in the outputs —
 token-for-token identical to sequential unbatched decode — while requests
-of different lengths join and leave mid-flight."""
-import jax
+of different lengths join and leave mid-flight.  The serve harness lives
+in conftest (``serve_mixed`` / ``make_prompts``, shared with
+tests/test_preemption.py)."""
 import numpy as np
 import pytest
 
@@ -11,32 +12,6 @@ from repro.serve import (EngineConfig, PageAllocator, Request, ServeEngine,
 
 MAX_LEN = 192
 MAX_NEW = 8
-
-
-def _prompts(cfg, lengths, seed=0):
-    rng = np.random.default_rng(seed)
-    return [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
-            for n in lengths]
-
-
-def _run_mixed(model, params, prompts, *, max_slots=2, late_idx=None,
-               num_pages=None, max_new=MAX_NEW):
-    """Serve `prompts` with one optionally late-joining request."""
-    eng = ServeEngine(model, EngineConfig(
-        max_slots=max_slots, max_len=MAX_LEN, prefill_chunk=32,
-        num_pages=num_pages))
-    eng.load(params)
-    for i, p in enumerate(prompts):
-        if i != late_idx:
-            eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new))
-    if late_idx is not None:
-        for _ in range(3):                  # others are already decoding
-            eng.step()
-        eng.submit(Request(uid=late_idx, prompt=prompts[late_idx],
-                           max_new_tokens=max_new))
-    done = eng.run_to_completion(max_steps=2000)
-    assert sorted(r.uid for r in done) == list(range(len(prompts)))
-    return {r.uid: r.output for r in done}, eng
 
 
 def test_page_allocator_reuse_and_exhaustion():
@@ -49,27 +24,30 @@ def test_page_allocator_reuse_and_exhaustion():
     assert a.available == 2 and a.alloc() in (2, 4)
 
 
-def test_mixed_length_matches_sequential_decode(full_attn_smoke):
+def test_mixed_length_matches_sequential_decode(full_attn_smoke,
+                                                make_prompts, serve_mixed):
     """Mixed-length batch + late joiner + chunked prefill + page reuse must
     reproduce plain (non-paged, unbatched) prefill+decode token for token."""
     cfg, model, params = full_attn_smoke
-    prompts = _prompts(cfg, [5, 37, 90, 17])
+    prompts = make_prompts(cfg, [5, 37, 90, 17])
     ref = [generate_sequential(model, params, p, max_new_tokens=MAX_NEW,
                                max_len=MAX_LEN) for p in prompts]
-    out, eng = _run_mixed(model, params, prompts, late_idx=3, num_pages=25)
+    out, eng = serve_mixed(model, params, prompts, late_idx=3, max_slots=2,
+                           num_pages=25)
     for i in range(len(prompts)):
         assert out[i] == ref[i], f"request {i} diverged"
     # every page went back to the free list
     assert eng.allocator.available == eng.allocator.num_pages - 1
 
 
-def test_sla2_batching_is_output_invariant(qwen3_smoke, qwen3_params):
+def test_sla2_batching_is_output_invariant(qwen3_smoke, qwen3_params,
+                                           make_prompts, serve_mixed):
     """SLA2 decode (router + linear complement states): serving requests
     mixed in a multi-slot batch with a late joiner must equal serving them
     one at a time through a single-slot engine — including slot recycling
     of the per-slot linear totals."""
     cfg, model = qwen3_smoke
-    prompts = _prompts(cfg, [7, 45, 80, 21], seed=1)
+    prompts = make_prompts(cfg, [7, 45, 80, 21], seed=1)
     seq = {}
     eng = ServeEngine(model, EngineConfig(max_slots=1, max_len=MAX_LEN,
                                           prefill_chunk=32))
@@ -78,22 +56,27 @@ def test_sla2_batching_is_output_invariant(qwen3_smoke, qwen3_params):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=MAX_NEW))
         eng.run_to_completion(max_steps=2000)
     seq = {r.uid: r.output for r in eng.completed}
-    mix, _ = _run_mixed(model, qwen3_params, prompts, max_slots=3,
-                        late_idx=3)
+    mix, _ = serve_mixed(model, qwen3_params, prompts, max_slots=3,
+                         late_idx=3)
     for i in range(len(prompts)):
         assert mix[i] == seq[i], f"request {i} diverged under batching"
 
 
-def test_small_page_pool_defers_admission(full_attn_smoke):
-    """With a pool too small for all requests at once, admission waits for
-    pages to free instead of deadlocking; outputs stay exact."""
+def test_small_page_pool_defers_admission(full_attn_smoke, make_prompts,
+                                          serve_mixed):
+    """Conservative admission with a pool too small for all requests at
+    once waits for pages to free instead of deadlocking (never preempts);
+    outputs stay exact.  (The optimistic default on the same pool is
+    covered by tests/test_preemption.py.)"""
     cfg, model, params = full_attn_smoke
-    prompts = _prompts(cfg, [20, 30, 25, 40], seed=2)
+    prompts = make_prompts(cfg, [20, 30, 25, 40], seed=2)
     ref = [generate_sequential(model, params, p, max_new_tokens=MAX_NEW,
                                max_len=MAX_LEN) for p in prompts]
     # worst case per request is ceil((40+8)/16)=3 pages; pool of 7 usable
     # pages can hold at most two such requests concurrently
-    out, eng = _run_mixed(model, params, prompts, max_slots=4, num_pages=8)
+    out, eng = serve_mixed(model, params, prompts, max_slots=4, num_pages=8,
+                           admission="conservative")
+    assert eng.stats["preemptions"] == 0
     for i in range(len(prompts)):
         assert out[i] == ref[i]
     assert eng.allocator.available == 7
@@ -114,10 +97,10 @@ def test_engine_rejects_oversized_and_unsupported(qwen3_smoke, qwen3_params):
         ServeEngine(hybrid, EngineConfig())
 
 
-def test_eos_frees_slot_early(full_attn_smoke):
+def test_eos_frees_slot_early(full_attn_smoke, make_prompts):
     """An eos hit mid-decode releases the slot and its pages."""
     cfg, model, params = full_attn_smoke
-    p = _prompts(cfg, [12], seed=3)[0]
+    p = make_prompts(cfg, [12], seed=3)[0]
     ref = generate_sequential(model, params, p, max_new_tokens=24,
                               max_len=MAX_LEN)
     eos = ref[2]                            # force an early stop
@@ -147,12 +130,13 @@ def test_static_wave_engine_still_serves(qwen3_smoke, qwen3_params):
 
 
 def test_fused_and_gather_paged_paths_agree_in_engine(qwen3_smoke,
-                                                      qwen3_params):
+                                                      qwen3_params,
+                                                      make_prompts):
     """The fused Pallas paged kernels (decode + chunked prefill) and the jnp
     gather reference must serve token-identical outputs through ServeEngine,
     including a late joiner that lands on recycled slots/pages."""
     cfg, model = qwen3_smoke
-    prompts = _prompts(cfg, [7, 45, 80, 21], seed=4)
+    prompts = make_prompts(cfg, [7, 45, 80, 21], seed=4)
 
     def serve(impl):
         eng = ServeEngine(model, EngineConfig(
