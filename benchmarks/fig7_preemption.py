@@ -73,19 +73,15 @@ def serve_workload(model, params, vocab_size, work, *, num_pages,
         num_pages=num_pages, paged_impl="gather", **policy_kw))
     eng.load(params)
     reqs = make_mixed_requests(vocab_size, work, seed=seed)
-    steps = 0
     t0 = time.perf_counter()
     for r in reqs:
         eng.submit(r)
-    while steps < 50_000:
-        # check BEFORE stepping so the trailing no-op call (nothing active,
-        # nothing queued) doesn't inflate the tokens/step denominator
-        if not eng._slots and not eng._queue:
-            break
-        eng.step()
-        steps += 1
+    # stats['engine_steps'] counts only working steps, so the trailing
+    # no-op call doesn't inflate the tokens/step denominator
+    eng.run_to_completion(max_steps=50_000)
     dt = time.perf_counter() - t0
     assert len(eng.completed) == len(reqs), "workload did not drain"
+    steps = eng.stats["engine_steps"]
     lat = [r.t_finish - r.t_submit for r in reqs]
     toks = sum(len(r.output) for r in reqs)
     return {

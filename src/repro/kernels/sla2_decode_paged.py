@@ -43,6 +43,14 @@ serving page pool):
     stays fp32, per the paper's QAT design (only the sparse branch is
     quantized).
 
+``sla2_decode_verify`` extends the same grid from one query row per
+(slot, kv head) to ``W = draft_len + 1`` rows — the multi-token verify
+pass of self-speculative decoding (draft W-1 tokens with the linear
+branch, verify the whole window in one sparse paged pass).  Each window
+row rides its own routed pages / length / effective linear totals, so the
+position-level mask is simultaneously the causal intra-window mask; see
+docs/speculative.md.
+
 ``paged_flash_prefill`` is the chunked-prefill counterpart: exact causal
 flash attention of one slot's chunk over its paged history, with the page
 table as the scalar-prefetch operand — replacing the ``_gather_pages``
@@ -74,8 +82,17 @@ def _decode_kernel(phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,  # SMEM
                    acc, m_i, l_i, lnum, lden,                          # VMEM
                    *, block_k: int, k_sel: int, quant_bits: str,
                    sm_scale: float):
+    """Shared decode/verify kernel body over grid ``(B*Hkv, W, K_sel)``.
+
+    ``W`` is the query-window axis: single-token decode runs it at 1, the
+    speculative multi-token verify at ``draft_len + 1`` rows per slot.  Each
+    (g, w) program row owns its own routed pages, length ``t_new`` and
+    linear totals, so the per-position causal mask (``cols < t``) doubles as
+    the intra-window causal mask — window token w+1 sits at position t_w and
+    is invisible to row w's queries."""
     g = pl.program_id(0)           # slot * Hkv + kv head
-    jj = pl.program_id(1)          # routed-page index
+    w = pl.program_id(1)           # query row within the verify window
+    jj = pl.program_id(2)          # routed-page index
 
     @pl.when(jj == 0)
     def _init():
@@ -85,13 +102,13 @@ def _decode_kernel(phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,  # SMEM
         lnum[...] = jnp.zeros_like(lnum)
         lden[...] = jnp.zeros_like(lden)
 
-    is_valid = valid_ref[g, jj] == 1
-    j = jlog_ref[g, jj]            # logical block id (for positions)
-    t = tnew_ref[g]                # slot length incl. the new token
+    is_valid = valid_ref[g, w, jj] == 1
+    j = jlog_ref[g, w, jj]         # logical block id (for positions)
+    t = tnew_ref[g, w]             # row length incl. this window token
 
     @pl.when(is_valid)
     def _step():
-        q = q_ref[0].astype(jnp.float32)        # (n_rep, Dh)
+        q = q_ref[0, 0].astype(jnp.float32)     # (n_rep, Dh)
         k = k_ref[0, 0].astype(jnp.float32)     # (bk, Dh)
         v = v_ref[0, 0].astype(jnp.float32)
         if quant_bits == "none":
@@ -134,7 +151,7 @@ def _decode_kernel(phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,  # SMEM
         # linear-branch correction: this page is a selected COMPLETE block,
         # so its phi(k).v / phi(k) mass must leave the complement totals.
         # The tiles are already resident — no second gather.  fp32 always.
-        @pl.when(comp_ref[g, jj] == 1)
+        @pl.when(comp_ref[g, w, jj] == 1)
         def _linear_sub():
             qf = jax.nn.softmax(q, axis=-1)      # phi(q), (n_rep, Dh)
             kf = jax.nn.softmax(k, axis=-1)      # phi(k), (bk, Dh)
@@ -150,10 +167,10 @@ def _decode_kernel(phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,  # SMEM
     def _finalize():
         l_safe = jnp.maximum(l_i[...], 1e-20)
         o_s = acc[...] / l_safe[:, None]
-        qf = jax.nn.softmax(q_ref[0].astype(jnp.float32), axis=-1)
+        qf = jax.nn.softmax(q_ref[0, 0].astype(jnp.float32), axis=-1)
         den_tot = (qf * z_ref[0, 0][None, :]).sum(axis=-1)     # (n_rep,)
         num = jax.lax.dot_general(
-            qf, h_ref[0], (((1,), (0,)), ((), ())),
+            qf, h_ref[0, 0], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32) - lnum[...]
         den = den_tot - lden[...]
         # relative empty-complement threshold (cancellation residuals != 0)
@@ -162,7 +179,83 @@ def _decode_kernel(phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,  # SMEM
                         num / jnp.maximum(den[:, None], 1e-12), 0.0)
         a = jax.nn.sigmoid(a_ref[0].astype(jnp.float32))       # (n_rep,)
         a_eff = jnp.where(den > 0, a, 1.0)[:, None]
-        o_ref[0] = (a_eff * o_s + (1.0 - a_eff) * o_l).astype(o_ref.dtype)
+        o_ref[0, 0] = (a_eff * o_s + (1.0 - a_eff) * o_l).astype(o_ref.dtype)
+
+
+def _call_decode_kernel(q, k_pages, v_pages, phys, jlog, valid, complete,
+                        t_new, h_tot, z_tot, alpha, *, block_k: int,
+                        quant_bits: str, interpret: bool | None):
+    """Shared pallas_call wrapper for decode (W=1) and verify (W=k+1).
+
+    Window-shaped operands: q (B, Hkv, W, n_rep, Dh); phys/jlog/valid/
+    complete (B, Hkv, W, K_sel); t_new (B, W); h_tot (B, Hkv, W, Dh, Dh);
+    z_tot (B, Hkv, W, Dh); alpha (B, Hkv, n_rep) — alpha is shared across
+    the window (decode always uses the last query block's alpha).
+    Returns o (B, Hkv, W, n_rep, Dh) f32."""
+    interpret = default_interpret(interpret)
+    b, hkv, wdw, n_rep, dh = q.shape
+    k_sel = phys.shape[-1]
+    bk = block_k
+    g_tot = b * hkv
+    sm_scale = 1.0 / (dh ** 0.5)
+
+    flat = lambda x: x.reshape(g_tot, *x.shape[2:])
+    phys_f = flat(phys).astype(jnp.int32)
+    jlog_f = flat(jlog).astype(jnp.int32)
+    valid_f = flat(valid).astype(jnp.int32)
+    comp_f = flat(complete).astype(jnp.int32)
+    tnew_f = jnp.broadcast_to(t_new.astype(jnp.int32)[:, None],
+                              (b, hkv, wdw)).reshape(g_tot, wdw)
+    q_f = flat(q)
+    h_f = flat(h_tot)
+    z_f = flat(z_tot)
+    a_f = flat(alpha)
+
+    grid = (g_tot, wdw, k_sel)
+    kernel = functools.partial(
+        _decode_kernel, block_k=bk, k_sel=k_sel, quant_bits=quant_bits,
+        sm_scale=sm_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, n_rep, dh),
+                         lambda g, w, jj, ph, jl, va, co, tn: (g, w, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda g, w, jj, ph, jl, va, co, tn:
+                         (ph[g, w, jj], g % hkv, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda g, w, jj, ph, jl, va, co, tn:
+                         (ph[g, w, jj], g % hkv, 0, 0)),
+            pl.BlockSpec((1, 1, dh, dh),
+                         lambda g, w, jj, ph, jl, va, co, tn: (g, w, 0, 0)),
+            pl.BlockSpec((1, 1, dh),
+                         lambda g, w, jj, ph, jl, va, co, tn: (g, w, 0)),
+            pl.BlockSpec((1, n_rep),
+                         lambda g, w, jj, ph, jl, va, co, tn: (g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n_rep, dh),
+                         lambda g, w, jj, ph, jl, va, co, tn: (g, w, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_rep, dh), jnp.float32),   # acc
+            pltpu.VMEM((n_rep,), jnp.float32),      # m_i
+            pltpu.VMEM((n_rep,), jnp.float32),      # l_i
+            pltpu.VMEM((n_rep, dh), jnp.float32),   # lnum
+            pltpu.VMEM((n_rep,), jnp.float32),      # lden
+        ],
+    )
+    (o,) = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((g_tot, wdw, n_rep, dh),
+                                        jnp.float32)],
+        interpret=interpret,
+        name=f"sla2_decode_paged_{quant_bits}",
+    )(phys_f, jlog_f, valid_f, comp_f, tnew_f,
+      q_f, k_pages, v_pages, h_f, z_f, a_f)
+    return o.reshape(b, hkv, wdw, n_rep, dh)
 
 
 @functools.partial(
@@ -172,7 +265,7 @@ def sla2_decode_fused(q, k_pages, v_pages, phys, jlog, valid, complete,
                       t_new, h_tot, z_tot, alpha, *, block_k: int,
                       quant_bits: str = "none",
                       interpret: bool | None = None):
-    """Fused SLA2 paged decode step.
+    """Fused SLA2 paged decode step (the W=1 case of the verify grid).
 
     q        : (B, Hkv, n_rep, Dh) — the new token's queries, grouped by
                kv head (GQA group rides one MXU tile)
@@ -191,68 +284,50 @@ def sla2_decode_fused(q, k_pages, v_pages, phys, jlog, valid, complete,
                query block's alpha; sigmoid is fused into the combine)
     returns  : o (B, Hkv, n_rep, Dh) f32 — final combined attention output
     """
-    interpret = default_interpret(interpret)
-    b, hkv, n_rep, dh = q.shape
-    k_sel = phys.shape[-1]
-    bk = block_k
-    g_tot = b * hkv
-    sm_scale = 1.0 / (dh ** 0.5)
+    o = _call_decode_kernel(
+        q[:, :, None], k_pages, v_pages, phys[:, :, None], jlog[:, :, None],
+        valid[:, :, None], complete[:, :, None], t_new[:, None],
+        h_tot[:, :, None], z_tot[:, :, None], alpha,
+        block_k=block_k, quant_bits=quant_bits, interpret=interpret)
+    return o[:, :, 0]
 
-    flat = lambda x: x.reshape(g_tot, *x.shape[2:])
-    phys_f = flat(phys).astype(jnp.int32)
-    jlog_f = flat(jlog).astype(jnp.int32)
-    valid_f = flat(valid).astype(jnp.int32)
-    comp_f = flat(complete).astype(jnp.int32)
-    tnew_f = jnp.repeat(t_new.astype(jnp.int32), hkv)
-    q_f = flat(q)
-    h_f = flat(h_tot)
-    z_f = z_tot.reshape(g_tot, 1, dh)
-    a_f = flat(alpha)
 
-    grid = (g_tot, k_sel)
-    kernel = functools.partial(
-        _decode_kernel, block_k=bk, k_sel=k_sel, quant_bits=quant_bits,
-        sm_scale=sm_scale)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=5,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, n_rep, dh),
-                         lambda g, jj, ph, jl, va, co, tn: (g, 0, 0)),
-            pl.BlockSpec((1, 1, bk, dh),
-                         lambda g, jj, ph, jl, va, co, tn:
-                         (ph[g, jj], g % hkv, 0, 0)),
-            pl.BlockSpec((1, 1, bk, dh),
-                         lambda g, jj, ph, jl, va, co, tn:
-                         (ph[g, jj], g % hkv, 0, 0)),
-            pl.BlockSpec((1, dh, dh),
-                         lambda g, jj, ph, jl, va, co, tn: (g, 0, 0)),
-            pl.BlockSpec((1, 1, dh),
-                         lambda g, jj, ph, jl, va, co, tn: (g, 0, 0)),
-            pl.BlockSpec((1, n_rep),
-                         lambda g, jj, ph, jl, va, co, tn: (g, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, n_rep, dh),
-                         lambda g, jj, ph, jl, va, co, tn: (g, 0, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((n_rep, dh), jnp.float32),   # acc
-            pltpu.VMEM((n_rep,), jnp.float32),      # m_i
-            pltpu.VMEM((n_rep,), jnp.float32),      # l_i
-            pltpu.VMEM((n_rep, dh), jnp.float32),   # lnum
-            pltpu.VMEM((n_rep,), jnp.float32),      # lden
-        ],
-    )
-    (o,) = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((g_tot, n_rep, dh), jnp.float32)],
-        interpret=interpret,
-        name=f"sla2_decode_paged_{quant_bits}",
-    )(phys_f, jlog_f, valid_f, comp_f, tnew_f,
-      q_f, k_pages, v_pages, h_f, z_f, a_f)
-    return o.reshape(b, hkv, n_rep, dh)
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_k", "quant_bits", "interpret"))
+def sla2_decode_verify(q, k_pages, v_pages, phys, jlog, valid, complete,
+                       t_new, h_tot, z_tot, alpha, *, block_k: int,
+                       quant_bits: str = "none",
+                       interpret: bool | None = None):
+    """Fused multi-token SLA2 paged verify — the speculative-decoding
+    target pass over a draft window of W = draft_len + 1 tokens per slot.
+
+    Same scalar-prefetch page-table structure as ``sla2_decode_fused``,
+    with the grid extended from one query row per (slot, kv head) to W rows
+    — grid ``(B*Hkv, W, K_sel)``.  Each window row w carries its own routed
+    pages, its own length ``t_new[b, w]`` (the position-level mask
+    ``cols < t_new`` is therefore also the causal intra-window mask: window
+    token w+1 sits at position t_new[w] and is invisible to row w) and its
+    own *effective* linear totals — the caller accumulates the totals of
+    blocks that complete INSIDE the window into per-row h/z, since the
+    cache totals are only committed after host-side acceptance.
+
+    q        : (B, Hkv, W, n_rep, Dh) window queries per kv head
+    phys     : (B, Hkv, W, K_sel) int32 routed physical page ids per row
+    jlog     : (B, Hkv, W, K_sel) int32 routed logical block ids per row
+    valid    : (B, Hkv, W, K_sel) int32 {0,1}
+    complete : (B, Hkv, W, K_sel) int32 {0,1} — selected block complete AT
+               THIS ROW (inside the row's effective totals)
+    t_new    : (B, W) int32 per-row token count incl. the row's token
+    h_tot    : (B, Hkv, W, Dh, Dh) f32 per-row effective complement totals
+    z_tot    : (B, Hkv, W, Dh) f32
+    alpha    : (B, Hkv, n_rep) f32 alpha logits (shared across the window)
+    returns  : o (B, Hkv, W, n_rep, Dh) f32
+    """
+    return _call_decode_kernel(
+        q, k_pages, v_pages, phys, jlog, valid, complete, t_new,
+        h_tot, z_tot, alpha, block_k=block_k, quant_bits=quant_bits,
+        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,14 @@ class Model:
     # swap-out/swap-in path (serve/engine.SwapPool)
     swap_out: Optional[Callable] = None
     swap_in: Optional[Callable] = None
+    # speculative decoding (serve/speculative.py): multi-token verify over
+    # a draft window + deferred accepted-prefix commit, and the linear-
+    # branch drafter (draft_* are None unless the mechanism carries a
+    # linear branch, i.e. sla2)
+    decode_verify: Optional[Callable] = None
+    commit_window: Optional[Callable] = None
+    draft_init: Optional[Callable] = None
+    draft_step: Optional[Callable] = None
 
     def with_overrides(self, **overrides) -> "Model":
         """Rebuild this model with config fields replaced — e.g.
@@ -94,7 +102,22 @@ def _lm_model(cfg: T.ModelConfig) -> Model:
                 cfg, c, page_row, slot),
             swap_in=lambda c, page_row, slot, state: T.swap_in_slot(
                 cfg, c, page_row, slot, state),
+            decode_verify=lambda p, b, c: T.decode_verify(
+                p, cfg, b["tokens"], c, page_table=b["page_table"],
+                lengths=b["lengths"], active=b["active"],
+                window_len=b["window_len"]),
+            commit_window=lambda c, page_table, lengths, accepted, active,
+                window: T.commit_window(cfg, c, page_table, lengths,
+                                        accepted, active, window),
         )
+        if cfg.mechanism == "sla2":
+            paged.update(
+                draft_init=lambda c, b: T.draft_init(
+                    cfg, c, b["page_table"], b["lengths"], b["active"]),
+                draft_step=lambda p, b, st: T.draft_step(
+                    p, cfg, b["token"], st, positions=b["positions"],
+                    active=b["active"]),
+            )
     return Model(
         kind="lm", cfg=cfg,
         init=lambda key: T.init_model(key, cfg),

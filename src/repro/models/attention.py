@@ -620,6 +620,336 @@ def _sla2_decode_paged(params: dict, cfg: AttentionConfig, q, cache,
     return o.reshape(b, h, dh)[:, :, None, :]
 
 
+# ---------------------------------------------------------------------------
+# Multi-token verify window + linear-branch drafting (speculative decoding)
+# ---------------------------------------------------------------------------
+#
+# Self-speculative decoding reuses SLA2's own decomposition: the linear
+# branch (phi(k)·v running totals) drafts W-1 tokens without touching the
+# page pool, then ONE windowed verify pass runs the full sparse+linear
+# attention over all W rows at once.  The verify pass writes the window's
+# K/V into pages but commits NO block state — pooled router keys and the
+# linear totals are committed separately (``commit_paged_window``) once the
+# host has decided the accepted prefix, so a rejected suffix rolls back by
+# simply never being committed.  See docs/speculative.md.
+
+def window_span(window: int, block_k: int) -> int:
+    """Most logical blocks a ``window``-token run starting at any offset
+    can touch (bounds the static span loops in verify/commit)."""
+    return (window + block_k - 2) // block_k + 1
+
+
+def decode_window_paged(params: dict, cfg: AttentionConfig, x_w: jax.Array,
+                        cache: dict, *, page_table, lengths, active,
+                        window_len):
+    """Verify pass of speculative decoding: W query rows per slot, one call.
+
+    x_w: (B, W, d_model) window embeddings — row 0 is the last accepted
+    token, rows 1.. the draft tokens; lengths: (B,) tokens already cached
+    (row w lands at position lengths + w); active: (B,) bool;
+    window_len: (B,) int32 valid rows per slot — rows >= window_len write
+    to the trash page and produce garbage outputs the engine ignores.
+
+    Writes the whole window's K/V into the slot's pages but commits NO
+    SLA2 block state (pooled keys / linear totals): those follow host-side
+    acceptance via ``commit_paged_window``.  Rejected rows' K/V bytes sit
+    beyond the committed length — invisible to every masked read and
+    overwritten by the next window.  Returns (y (B, W, d_model), cache)."""
+    b, wdw, _ = x_w.shape
+    h, hkv, dh, bk = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                      cfg.block_k)
+    n_rep = h // hkv
+    max_p = page_table.shape[1]
+    tok_pos = lengths[:, None] + jnp.arange(wdw)        # (B, W)
+    q, k_new, v_new = _project_qkv(params, cfg, x_w, tok_pos)
+    q = q.transpose(0, 2, 1, 3)                         # (B, H, W, Dh)
+
+    valid_w = (jnp.arange(wdw)[None, :] < window_len[:, None]) \
+        & active[:, None]
+    logical = jnp.minimum(tok_pos // bk, max_p - 1)
+    phys_w = jnp.where(valid_w,
+                       jnp.take_along_axis(page_table, logical, 1), 0)
+    rows = tok_pos % bk
+    cache = dict(cache)
+    cache["k_pages"] = cache["k_pages"].at[phys_w, :, rows].set(
+        k_new.astype(cache["k_pages"].dtype))
+    cache["v_pages"] = cache["v_pages"].at[phys_w, :, rows].set(
+        v_new.astype(cache["v_pages"].dtype))
+    t_new = tok_pos + 1                                 # (B, W)
+
+    if cfg.mechanism == "sla2":
+        o = _sla2_decode_window(params, cfg, q, cache, page_table, t_new,
+                                lengths)
+        o = o.astype(x_w.dtype).reshape(b, wdw, h * dh)
+    else:
+        k_all = _repeat_kv(_gather_pages(cache["k_pages"], page_table),
+                           n_rep)
+        v_all = _repeat_kv(_gather_pages(cache["v_pages"], page_table),
+                           n_rep)
+        s = jnp.einsum("bhwd,bhmd->bhwm", q.astype(jnp.float32),
+                       k_all.astype(jnp.float32)) / jnp.sqrt(dh)
+        pos_k = jnp.arange(k_all.shape[2])
+        vis = pos_k[None, None, :] < t_new[:, :, None]  # (B, W, S)
+        if cfg.sliding_window is not None:
+            sw = pos_k[None, None, :] >= (t_new[:, :, None]
+                                          - cfg.sliding_window)
+            if cfg.prefix_len:
+                sw = sw | (pos_k[None, None, :] < cfg.prefix_len)
+            vis = vis & sw
+        s = jnp.where(vis[:, None], s, masklib.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhwm,bhmd->bhwd", p, v_all.astype(jnp.float32))
+        o = o.astype(x_w.dtype).transpose(0, 2, 1, 3).reshape(b, wdw,
+                                                              h * dh)
+    return o @ params["wo"], cache
+
+
+def _sla2_decode_window(params: dict, cfg: AttentionConfig, q, cache,
+                        page_table, t_new, lengths):
+    """Per-row SLA2 routing + sparse/linear attention over a W-token
+    window with all block state TRANSIENT (nothing committed to cache):
+
+      * pooled router keys for the blocks the window touches are computed
+        per row from page content masked to the row's length — the value
+        sequential decode would have had in ``pooled_pages`` at that step;
+      * each row's linear totals are the cache totals plus the (h, z) of
+        span blocks that complete EARLIER in the window, so the complement
+        trick subtracts routed complete blocks exactly as at decode;
+      * the position mask ``pos < t_new[row]`` doubles as the causal
+        intra-window mask (later window tokens sit at higher positions).
+
+    q: (B, H, W, Dh); t_new: (B, W).  Returns (B, W, Hkv, n_rep, Dh) f32."""
+    sla2_p = params["sla2"]
+    b, h, wdw, dh = q.shape
+    hkv = cfg.num_kv_heads
+    n_rep = h // hkv
+    bk = cfg.block_k
+    t_n = page_table.shape[1]
+    n_span = window_span(wdw, bk)
+
+    # --- transient stats for the blocks the window can touch ---
+    blk0 = lengths // bk
+    span_ids_raw = blk0[:, None] + jnp.arange(n_span)[None, :]  # (B, S)
+    genuine = span_ids_raw < t_n
+    span_ids = jnp.minimum(span_ids_raw, t_n - 1)
+    span_phys = jnp.take_along_axis(page_table, span_ids, 1)    # (B, S)
+    kblk = cache["k_pages"][span_phys].astype(jnp.float32)  # (B,S,Hkv,bk,Dh)
+    vblk = cache["v_pages"][span_phys].astype(jnp.float32)
+    pos_blk = span_ids[:, :, None] * bk + jnp.arange(bk)        # (B,S,bk)
+    msk = (pos_blk[:, None] < t_new[:, :, None, None]) \
+        .astype(jnp.float32)                                    # (B,W,S,bk)
+    pooled_ws = jnp.einsum("bwsk,bshkd->bwshd", msk, kblk) \
+        / jnp.maximum(msk.sum(-1), 1.0)[..., None, None]
+    # (h, z) of each span block over its FULL page — only ever used gated
+    # by per-row completeness, when all bk positions are visible/written
+    kf_span = phi(kblk)
+    h_span = jnp.einsum("bshkd,bshke->bshde", kf_span, vblk)
+    z_span = kf_span.sum(-2)                                    # (B,S,Hkv,Dh)
+    # span blocks complete at row w (span starts at lengths // bk, so none
+    # of them can already be inside the cache totals)
+    cmplt = (genuine[:, None]
+             & ((span_ids[:, None] + 1) * bk <= t_new[:, :, None])) \
+        .astype(jnp.float32)                                    # (B,W,S)
+    h_eff = cache["h_tot"][:, None] \
+        + jnp.einsum("bws,bshde->bwhde", cmplt, h_span)
+    z_eff = cache["z_tot"][:, None] \
+        + jnp.einsum("bws,bshd->bwhd", cmplt, z_span)
+
+    # --- route per row: group-shared, transient pooled keys for the span --
+    rp = sla2_p.get("router", {})
+    qr = q.astype(jnp.float32)                                  # (B,H,W,Dh)
+    pk = cache["pooled_pages"][page_table].astype(jnp.float32)
+    pk = pk.transpose(0, 2, 1, 3)                               # (B,Hkv,T,Dh)
+    pw = pooled_ws
+    if rp:
+        qr = qr @ rp["proj_q"].astype(jnp.float32)
+        pk = pk @ rp["proj_k"].astype(jnp.float32)
+        pw = pw @ rp["proj_k"].astype(jnp.float32)
+    qr_g = qr.reshape(b, hkv, n_rep, wdw, dh).mean(axis=2)      # (B,Hkv,W,Dh)
+    scores = jnp.einsum("bhwd,bhtd->bwht", qr_g, pk) / jnp.sqrt(dh)
+    s_span = jnp.einsum("bhwd,bwshd->bwhs", qr_g, pw) / jnp.sqrt(dh)
+    blk_ids = jnp.arange(t_n)
+    # the cache pooled keys of span blocks are stale (only committed after
+    # acceptance): overwrite their scores with the per-row transient ones
+    for s_i in range(n_span):
+        m = (blk_ids[None, None, None, :]
+             == span_ids[:, s_i, None, None, None]) \
+            & genuine[:, s_i, None, None, None]
+        scores = jnp.where(m, s_span[:, :, :, s_i:s_i + 1], scores)
+    cur_blk = (t_new - 1) // bk                                 # (B, W)
+    allowed = blk_ids[None, None, None, :] <= cur_blk[:, :, None, None]
+    scores = jnp.where(allowed, scores, masklib.NEG_INF)
+    scores = jnp.where(blk_ids[None, None, None, :]
+                       == cur_blk[:, :, None, None], jnp.inf, scores)
+    k_sel = max(1, round(cfg.k_frac * t_n))
+    top_vals, idx = jax.lax.top_k(scores, k_sel)                # (B,W,Hkv,K)
+    valid = top_vals > masklib.NEG_INF * 0.5
+    pt = jnp.broadcast_to(page_table[:, None, None, :], (b, wdw, hkv, t_n))
+    phys_sel = jnp.where(valid, jnp.take_along_axis(pt, idx, axis=3), 0)
+    completed = (t_new % bk) == 0
+    complete_bound = cur_blk + jnp.where(completed, 1, 0)
+    sel_complete = valid & (idx < complete_bound[:, :, None, None])
+
+    if resolve_paged_impl(cfg) == "fused":
+        # one Pallas pass over the routed pages for ALL window rows: the
+        # decode grid extended from 1 to W query rows per (slot, kv head)
+        from repro.kernels.sla2_decode_paged import sla2_decode_verify
+        logit = sla2_p["alpha_logit"][:, -1].astype(jnp.float32)
+        if logit.shape[0] == 1 and h > 1:
+            logit = jnp.broadcast_to(logit, (h,))
+        alpha = jnp.broadcast_to(logit.reshape(1, hkv, n_rep),
+                                 (b, hkv, n_rep))
+        to_k = lambda x: x.transpose(0, 2, 1, 3).astype(jnp.int32)
+        o = sla2_decode_verify(
+            q.reshape(b, hkv, n_rep, wdw, dh).transpose(0, 1, 3, 2, 4),
+            cache["k_pages"], cache["v_pages"],
+            to_k(phys_sel), to_k(idx), to_k(valid.astype(jnp.int32)),
+            to_k(sel_complete.astype(jnp.int32)), t_new,
+            h_eff.transpose(0, 2, 1, 3, 4), z_eff.transpose(0, 2, 1, 3),
+            alpha, block_k=bk, quant_bits=cfg.decode_quant_bits)
+        return o.transpose(0, 2, 1, 3, 4)       # (B, W, Hkv, n_rep, Dh)
+
+    # --- jnp gather reference (parity oracle for the verify kernel) ---
+    phys_f = phys_sel.reshape(b * wdw, hkv, k_sel)
+    k_sel_blocks = _gather_blocks(cache["k_pages"], phys_f).astype(
+        jnp.float32).reshape(b, wdw, hkv, k_sel, bk, dh)
+    v_sel_blocks = _gather_blocks(cache["v_pages"], phys_f).astype(
+        jnp.float32).reshape(b, wdw, hkv, k_sel, bk, dh)
+    q_g = q.astype(jnp.float32).reshape(b, hkv, n_rep, wdw, dh) \
+        .transpose(0, 3, 1, 2, 4)                               # (B,W,H,g,D)
+    s = jnp.einsum("bwhgd,bwhjkd->bwhgjk", q_g, k_sel_blocks) / jnp.sqrt(dh)
+    pos = idx[..., None] * bk + jnp.arange(bk)                  # (B,W,H,K,bk)
+    vis = (pos < t_new[:, :, None, None, None]) & valid[..., None]
+    s = jnp.where(vis[:, :, :, None], s, masklib.NEG_INF)
+    p = jax.nn.softmax(s.reshape(b, wdw, hkv, n_rep, -1),
+                       axis=-1).reshape(s.shape)
+    o_s = jnp.einsum("bwhgjk,bwhjkd->bwhgd", p, v_sel_blocks)
+
+    # --- linear branch: per-row effective totals minus selected blocks ---
+    qfeat = phi(q).reshape(b, hkv, n_rep, wdw, dh).transpose(0, 3, 1, 2, 4)
+    kf_sel = phi(k_sel_blocks)
+    ls = jnp.einsum("bwhgd,bwhjkd->bwhgjk", qfeat, kf_sel)
+    ls = ls * sel_complete[:, :, :, None, :, None].astype(jnp.float32)
+    sub_num = jnp.einsum("bwhgjk,bwhjkd->bwhgd", ls, v_sel_blocks)
+    sub_den = ls.sum(axis=(-1, -2))
+    den_tot = jnp.einsum("bwhgd,bwhd->bwhg", qfeat, z_eff)
+    num = jnp.einsum("bwhgd,bwhde->bwhge", qfeat, h_eff) - sub_num
+    den = den_tot - sub_den
+    den = jnp.where(den > 1e-4 * den_tot + 1e-12, den, 0.0)[..., None]
+    o_l = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+
+    a = jax.nn.sigmoid(sla2_p["alpha_logit"].astype(jnp.float32))
+    if a.shape[0] == 1 and h > 1:
+        a = jnp.broadcast_to(a, (h, a.shape[1]))
+    a_last = a[:, -1].reshape(1, 1, hkv, n_rep, 1)
+    a_eff = jnp.where(den > 0, a_last, 1.0)
+    return a_eff * o_s + (1.0 - a_eff) * o_l    # (B, W, Hkv, n_rep, Dh)
+
+
+def commit_paged_window(cfg: AttentionConfig, cache: dict, *, page_table,
+                        lengths, accepted, active, window: int) -> dict:
+    """Commit the ACCEPTED prefix of a verify window into the SLA2 block
+    state: rewrite the pooled router keys of every block the prefix
+    touches (masked to the new committed length) and fold newly completed
+    blocks into the per-slot linear totals.  K/V pages were already
+    written by the verify pass; mechanisms without block state (dense
+    attention) need no commit.
+
+    lengths: (B,) committed tokens BEFORE the window; accepted: (B,) rows
+    being committed (0 for slots that sat out the step); window: the
+    static window size W, bounding the blocks touched."""
+    if cfg.mechanism != "sla2":
+        return cache
+    bk = cfg.block_k
+    t_n = page_table.shape[1]
+    n_span = window_span(window, bk)
+    new_len = lengths + accepted
+    blk0 = lengths // bk
+    span_ids_raw = blk0[:, None] + jnp.arange(n_span)[None, :]  # (B, S)
+    genuine = span_ids_raw < t_n
+    span_ids = jnp.minimum(span_ids_raw, t_n - 1)
+    span_phys = jnp.take_along_axis(page_table, span_ids, 1)
+    kblk = cache["k_pages"][span_phys].astype(jnp.float32)  # (B,S,Hkv,bk,Dh)
+    vblk = cache["v_pages"][span_phys].astype(jnp.float32)
+    pos_blk = span_ids[:, :, None] * bk + jnp.arange(bk)        # (B,S,bk)
+    msk = (pos_blk < new_len[:, None, None]).astype(jnp.float32)
+    live = genuine & active[:, None] & (accepted > 0)[:, None]
+    has_tok = (msk.sum(-1) > 0) & live                          # (B,S)
+    pooled = jnp.einsum("bsk,bshkd->bshd", msk, kblk) \
+        / jnp.maximum(msk.sum(-1), 1.0)[..., None, None]
+    upd_phys = jnp.where(has_tok, span_phys, 0)
+    cache = dict(cache)
+    cache["pooled_pages"] = cache["pooled_pages"].at[upd_phys].set(
+        jnp.where(has_tok[..., None, None],
+                  pooled.astype(cache["pooled_pages"].dtype),
+                  cache["pooled_pages"][upd_phys]))
+    # blocks that completed inside the accepted prefix join the totals
+    newc = (live & ((span_ids + 1) * bk <= new_len[:, None])
+            & ((span_ids + 1) * bk > lengths[:, None])).astype(jnp.float32)
+    kf = phi(kblk)
+    cache["h_tot"] = cache["h_tot"] \
+        + jnp.einsum("bs,bshkd,bshke->bhde", newc, kf, vblk)
+    cache["z_tot"] = cache["z_tot"] \
+        + jnp.einsum("bs,bshkd->bhd", newc, kf)
+    return cache
+
+
+def linear_draft_state(cfg: AttentionConfig, cache: dict, *, page_table,
+                       lengths, active) -> dict:
+    """Speculative draft state for one attention layer: linear-branch
+    running totals over EVERYTHING cached so far — the committed complete-
+    block totals plus the current partial block's phi(k)·v mass read from
+    its page.  Kept separate from the cache, so rejecting a draft rolls
+    back by dropping the state.
+    Returns {"h": (B, Hkv, Dh, Dh), "z": (B, Hkv, Dh)} f32."""
+    if cfg.mechanism != "sla2":
+        raise ValueError("linear drafting requires mechanism='sla2'")
+    bk = cfg.block_k
+    t_n = page_table.shape[1]
+    blk0 = jnp.minimum(lengths // bk, t_n - 1)
+    phys = jnp.where(active,
+                     jnp.take_along_axis(page_table, blk0[:, None], 1)[:, 0],
+                     0)
+    kblk = cache["k_pages"][phys].astype(jnp.float32)   # (B, Hkv, bk, Dh)
+    vblk = cache["v_pages"][phys].astype(jnp.float32)
+    pos = blk0[:, None] * bk + jnp.arange(bk)           # (B, bk)
+    w = ((pos < lengths[:, None]) & active[:, None]) \
+        .astype(jnp.float32)[:, None, :, None]
+    kf = phi(kblk) * w
+    h = cache["h_tot"] + jnp.einsum("bhkd,bhke->bhde", kf, vblk * w)
+    z = cache["z_tot"] + kf.sum(-2)
+    return {"h": h, "z": z}
+
+
+def linear_draft_attention(params: dict, cfg: AttentionConfig,
+                           x_t: jax.Array, state: dict, *, positions,
+                           active):
+    """One draft-token decode through the LINEAR branch only — no page
+    reads, no routing: O(d^2) per token against the running totals.  The
+    new token's own phi(k)·v joins the state first, so the draft mimics
+    attention over the full prefix including self (at real decode the
+    sparse branch always covers the current block).
+    x_t: (B, 1, d_model); positions: (B,).  Returns (y, new state)."""
+    b = x_t.shape[0]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    n_rep = h // hkv
+    q, k_new, v_new = _project_qkv(params, cfg, x_t, positions[:, None])
+    kf = phi(k_new[:, 0])                               # (B, Hkv, Dh)
+    v0 = v_new[:, 0].astype(jnp.float32)
+    gate = active[:, None, None]
+    state = {
+        "h": state["h"] + jnp.where(
+            gate[..., None], jnp.einsum("bhd,bhe->bhde", kf, v0), 0.0),
+        "z": state["z"] + jnp.where(gate, kf, 0.0),
+    }
+    qfeat = phi(q[:, 0]).reshape(b, hkv, n_rep, dh)
+    num = jnp.einsum("bhgd,bhde->bhge", qfeat, state["h"])
+    den = jnp.einsum("bhgd,bhd->bhg", qfeat, state["z"])[..., None]
+    o = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+    o = o.reshape(b, 1, h * dh).astype(x_t.dtype)
+    return o @ params["wo"], state
+
+
 def _sla2_decode(params: dict, cfg: AttentionConfig, q, cache, t_new):
     """SLA2 decode: router over pooled block keys -> sparse flash over the
     K_sel selected blocks + linear state over the complement of complete

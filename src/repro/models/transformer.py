@@ -557,6 +557,85 @@ def decode_paged(params: dict, cfg: ModelConfig, token_t, caches, *,
     return logits_from_hidden(params, cfg, x)[:, 0], caches
 
 
+def decode_verify(params: dict, cfg: ModelConfig, tokens_w, caches, *,
+                  page_table, lengths, active, window_len):
+    """Speculative verify: decode a W-token window for the whole slot batch
+    in ONE pass.  tokens_w: (B, W) int32 — row 0 is the last accepted
+    token, rows 1.. the draft; window_len: (B,) valid rows per slot.
+    Returns (logits (B, W, V), caches).  K/V pages are written for the
+    whole window; SLA2 block-state commits are deferred to
+    ``commit_window`` once host-side acceptance is decided."""
+    acfg = cfg.attention_config()
+    x = L.embed(params["embed"], tokens_w).astype(cfg.param_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+
+    def attn_fn(lp, h, lc):
+        return A.decode_window_paged(lp, acfg, h, lc, page_table=page_table,
+                                     lengths=lengths, active=active,
+                                     window_len=window_len)
+
+    x, caches = _paged_stack(params, cfg, x, caches, attn_fn)
+    return logits_from_hidden(params, cfg, x), caches
+
+
+def commit_window(cfg: ModelConfig, caches, page_table, lengths, accepted,
+                  active, window: int):
+    """Commit the accepted prefix of a verify window into every layer's
+    SLA2 block state (pooled router keys + linear totals).  ``window`` is
+    the static window size the verify ran with."""
+    acfg = cfg.attention_config()
+
+    def upd(lc):
+        return {"attn": A.commit_paged_window(
+            acfg, lc["attn"], page_table=page_table, lengths=lengths,
+            accepted=accepted, active=active, window=window)}
+
+    caches = dict(caches)
+    if cfg.first_kinds:
+        caches["prefix_layers"] = [upd(lc) for lc in
+                                   caches["prefix_layers"]]
+    caches["groups"] = {k: jax.vmap(upd)(v)
+                        for k, v in caches["groups"].items()}
+    return caches
+
+
+def draft_init(cfg: ModelConfig, caches, page_table, lengths, active):
+    """Per-layer linear draft states (running phi(k)·v totals over the full
+    cached prefix) for the speculative drafter — one {"h", "z"} pytree per
+    attention layer, mirroring the cache layout."""
+    acfg = cfg.attention_config()
+
+    def f(lc):
+        return {"attn": A.linear_draft_state(
+            acfg, lc["attn"], page_table=page_table, lengths=lengths,
+            active=active)}
+
+    st: dict[str, Any] = {}
+    if cfg.first_kinds:
+        st["prefix_layers"] = [f(lc) for lc in caches["prefix_layers"]]
+    st["groups"] = {k: jax.vmap(f)(v) for k, v in caches["groups"].items()}
+    return st
+
+
+def draft_step(params: dict, cfg: ModelConfig, token_t, states, *,
+               positions, active):
+    """One linear-only draft decode step (no page reads — O(d^2)/token).
+    token_t: (B,) int32; positions: (B,) the draft token's position.
+    Returns (logits (B, V), states)."""
+    acfg = cfg.attention_config()
+    x = L.embed(params["embed"], token_t[:, None]).astype(cfg.param_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+
+    def attn_fn(lp, h, lc):
+        return A.linear_draft_attention(lp, acfg, h, lc,
+                                        positions=positions, active=active)
+
+    x, states = _paged_stack(params, cfg, x, states, attn_fn)
+    return logits_from_hidden(params, cfg, x)[:, 0], states
+
+
 def prefill(params: dict, cfg: ModelConfig, tokens, caches, *,
             inputs_embeds=None):
     """Run the prompt through the model, filling every cache.

@@ -1,4 +1,8 @@
+"""Serving package: continuous-batching engines, preemption scheduler and
+the self-speculative decoding helpers (drafting + rejection sampling)."""
 from repro.serve.engine import (EngineConfig, PageAllocator, Request,
                                 Scheduler, ServeEngine, StaticWaveEngine,
                                 SwapPool, generate_sequential,
                                 make_mixed_requests)
+from repro.serve.speculative import (LinearDrafter, greedy_accept,
+                                     rejection_sample)

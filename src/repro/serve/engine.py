@@ -7,10 +7,14 @@ tokens allocated from a free list — ``max_len`` memory is shared across
 slots instead of reserved per slot — and a host-side page table maps
 (slot, logical block) -> physical page (page 0 is a reserved trash page for
 masked writes).  Prefill is *chunked*: each engine step runs at most one
-``prefill_chunk``-token chunk of one joining prompt plus one decode step for
-every ongoing slot, so a long prompt interleaves with decode instead of
-stalling it.  Chunk attention is exact (dense over paged history + chunk);
-SLA2's sparse/linear split applies at decode where per-step cost matters.
+``prefill_chunk``-token chunk of one joining prompt plus one decode
+dispatch for every ongoing slot.  A decode dispatch advances each slot by
+one token, or by a whole draft window (1 to ``draft_len + 1`` tokens) when
+speculative decoding is on — the canonical definition of the step
+granularity lives in docs/serving.md#engine-step-granularity.  Long
+prompts therefore interleave with decode instead of stalling it.  Chunk
+attention is exact (dense over paged history + chunk); SLA2's
+sparse/linear split applies at decode where per-step cost matters.
 
 Admission is optimistic (vLLM-style): requests are admitted against the
 pages *actually* outstanding, pages are allocated lazily as sequences grow,
@@ -45,6 +49,8 @@ import numpy as np
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: a prompt, a decode budget and (engine-
+    filled) output/accounting fields that survive preemption."""
     uid: int
     prompt: np.ndarray                 # (n,) int32
     max_new_tokens: int = 32
@@ -59,6 +65,9 @@ class Request:
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Engine knobs shared by ServeEngine and StaticWaveEngine; field
+    comments below are the authoritative reference (docs/serving.md
+    walks through the serving-relevant ones)."""
     max_slots: int = 4
     max_len: int = 512                 # per-slot logical capacity
     page_size: Optional[int] = None    # defaults to model block_k
@@ -80,6 +89,14 @@ class EngineConfig:
     # host swap-pool capacity in pages; None mirrors the device pool size,
     # 0 disables swapping (preemption always recomputes from the prompt)
     swap_pages: Optional[int] = None
+    # speculative decoding: 'off' = every decode dispatch advances each
+    # slot by exactly one token; 'linear' = draft `draft_len` tokens per
+    # slot through the SLA2 linear branch (no page reads), then verify the
+    # whole window in ONE multi-token paged pass — a dispatch advances a
+    # slot by 1..draft_len+1 tokens (see docs/speculative.md; requires
+    # mechanism='sla2').  Greedy outputs stay token-identical to 'off'.
+    speculative: str = "off"
+    draft_len: int = 3
 
 
 def _sample_tokens(logits: np.ndarray, temperature: float,
@@ -110,14 +127,17 @@ class PageAllocator:
 
     @property
     def available(self) -> int:
+        """Pages currently free."""
         return len(self._free)
 
     def alloc(self) -> int:
+        """Pop one free physical page id; raises when the pool is dry."""
         if not self._free:
             raise RuntimeError("page pool exhausted")
         return self._free.pop()
 
     def free(self, pages) -> None:
+        """Return physical pages to the free list (never the trash page)."""
         for p in pages:
             assert 0 < p < self.num_pages
             self._free.append(int(p))
@@ -205,17 +225,22 @@ class SwapPool:
 
     @property
     def n_swapped(self) -> int:
+        """Requests currently held in swap."""
         return len(self._store)
 
     def can_hold(self, n_pages: int) -> bool:
+        """True when n_pages more pages fit in the configured capacity."""
         return self.used + n_pages <= self.capacity
 
     def put(self, key: int, n_pages: int, state) -> None:
+        """Store one slot's extracted state under the request's arrival
+        id, charging n_pages against capacity."""
         assert key not in self._store and self.can_hold(n_pages)
         self._store[key] = (n_pages, state)
         self.used += n_pages
 
     def pop(self, key: int):
+        """Remove and return a stored state, releasing its pages."""
         n_pages, state = self._store.pop(key)
         self.used -= n_pages
         return state
@@ -236,11 +261,14 @@ class Scheduler:
         self._arrivals = 0
 
     def enqueue(self, req: Request) -> None:
+        """Admit a NEW request to the wait queue, stamping its arrival."""
         req.arrival = self._arrivals
         self._arrivals += 1
         self.waiting.append(req)
 
     def requeue(self, req: Request, resume: _ResumeState) -> None:
+        """Re-queue a preempted request at its original arrival priority,
+        parking its resume state in the side table."""
         self._resume[req.arrival] = resume
         i = 0
         while i < len(self.waiting) and self.waiting[i].arrival < req.arrival:
@@ -248,15 +276,19 @@ class Scheduler:
         self.waiting.insert(i, req)
 
     def head(self) -> Optional[Request]:
+        """The next request to admit (FCFS), or None."""
         return self.waiting[0] if self.waiting else None
 
     def pop_head(self) -> Request:
+        """Remove and return the queue head."""
         return self.waiting.pop(0)
 
     def peek_resume(self, req: Request) -> Optional[_ResumeState]:
+        """Look at a request's parked resume state without claiming it."""
         return self._resume.get(req.arrival)
 
     def take_resume(self, req: Request) -> Optional[_ResumeState]:
+        """Claim (remove and return) a request's parked resume state."""
         return self._resume.pop(req.arrival, None)
 
     def victim(self, slots: dict[int, _Slot]) -> int:
@@ -322,7 +354,8 @@ class ServeEngine:
                     else ecfg.swap_pages)
         self.swap = SwapPool(swap_cap)
         self.stats = {"preemptions": 0, "swap_outs": 0, "swap_ins": 0,
-                      "recomputes": 0}
+                      "recomputes": 0, "spec_steps": 0, "spec_drafted": 0,
+                      "spec_accepted": 0, "engine_steps": 0}
         self._slots: dict[int, _Slot] = {}          # slot -> state
         self._prefill_order: list[int] = []         # FCFS chunked prefill
         self._page_table = np.zeros((ecfg.max_slots, self.max_pages),
@@ -345,6 +378,23 @@ class ServeEngine:
             self._swap_out_fn, self._swap_in_fn = model._swap_fns
         else:
             self._swap_out_fn = self._swap_in_fn = None
+        if ecfg.speculative not in ("off", "linear"):
+            raise ValueError(f"unknown speculative mode {ecfg.speculative!r}")
+        self._spec = ecfg.speculative == "linear"
+        if self._spec:
+            from repro.serve.speculative import LinearDrafter
+            if model.draft_init is None:
+                raise ValueError(
+                    "speculative='linear' requires an SLA2 attention stack "
+                    f"(got mechanism={model.cfg.mechanism!r})")
+            if ecfg.draft_len < 1:
+                raise ValueError("draft_len must be >= 1")
+            if not hasattr(model, "_spec_step_fns"):
+                model._spec_step_fns = (
+                    jax.jit(lambda p, b, c: model.decode_verify(p, b, c)),
+                    jax.jit(model.commit_window, static_argnums=(5,)))
+            self._verify_fn, self._commit_fn = model._spec_step_fns
+            self._drafter = LinearDrafter(model, ecfg.temperature)
 
     # ------------------------------------------------------------------
     @property
@@ -354,11 +404,13 @@ class ServeEngine:
         return self.scheduler.waiting
 
     def load(self, params):
+        """Install model params and allocate the paged cache pools."""
         self.params = params
         self.caches = self.model.init_paged_caches(
             self.cfg.max_slots, self.allocator.num_pages)
 
     def submit(self, req: Request):
+        """Validate and enqueue a request (it joins a slot at admission)."""
         n = len(req.prompt)
         if n == 0:
             raise ValueError(f"request {req.uid}: empty prompt")
@@ -390,6 +442,14 @@ class ServeEngine:
         if resume is not None and resume.mode == "swap":
             s = resume.slot
             if s.decoding:
+                if self._spec:
+                    # a verify step consumes pages for its whole draft
+                    # window up front, so admit only when the resumed
+                    # window can be mapped (the saved pages may already
+                    # cover part of it)
+                    wlen = self._window_len(s)
+                    blocks = (resume.length + wlen - 1) // self.page_size + 1
+                    return max(s.n_pages, blocks)
                 boundary = resume.length % self.page_size == 0
                 return s.n_pages + (1 if boundary else 0)
             # mid-prefill: the saved pages may already cover part of the
@@ -555,7 +615,166 @@ class ServeEngine:
                                  and tok == s.req.eos_id):
                 self._finish(slot)
 
+    def _emit(self, slot: int, tok: int) -> bool:
+        """Record one generated token for a slot; returns False once the
+        slot finished (budget exhausted or eos hit)."""
+        s = self._slots[slot]
+        s.req.output.append(tok)
+        s.last_token = tok
+        s.budget -= 1
+        if s.budget <= 0 or (s.req.eos_id is not None
+                             and tok == s.req.eos_id):
+            self._finish(slot)
+            return False
+        return True
+
+    def _window_len(self, s: _Slot) -> int:
+        """Valid rows of a slot's verify window this step: a verify emits
+        up to window_len tokens, so the window is capped by the remaining
+        budget — or, in replay mode, by the teacher-forced tokens left."""
+        w = self.cfg.draft_len + 1
+        if s.replay:
+            return min(w, 1 + len(s.replay))
+        return max(1, min(w, s.budget))
+
     def _decode_step(self):
+        """One decode dispatch for every decoding slot — a single token
+        per slot, or a whole draft window when speculative decoding is on
+        (see docs/serving.md#engine-step-granularity)."""
+        if self._spec:
+            return self._decode_step_speculative()
+        return self._decode_step_single()
+
+    def _draft(self, tokens0, active):
+        """Draft ``draft_len`` tokens per active slot through the linear
+        branch (numpy results; patched out by the forced-reject tests)."""
+        return self._drafter.propose(
+            self.params, self.caches,
+            page_table=self._page_table, lengths=self._lengths,
+            active=active, tokens0=tokens0, k=self.cfg.draft_len,
+            rng=self._rng)
+
+    def _decode_step_speculative(self):
+        """One multi-token decode dispatch: draft through the linear
+        branch, verify the window in one sparse paged pass, commit only
+        the accepted prefix (rejected rows are never committed — their
+        K/V bytes beyond the committed length are dead).  Page demand
+        covers each slot's whole window up front, served oldest first, so
+        pool exhaustion preempts youngest slots mid-draft — the window is
+        simply not verified and the preempted slot resumes from its last
+        COMMITTED state."""
+        from repro.serve import speculative as speclib
+
+        w = self.cfg.draft_len + 1
+        dec = sorted((s for s, st in self._slots.items() if st.decoding),
+                     key=lambda s: self._slots[s].req.arrival)
+        ready = []
+        for slot in dec:
+            if slot not in self._slots:     # preempted by an older slot
+                continue
+            s = self._slots[slot]
+            wlen = self._window_len(s)
+            pos0 = int(self._lengths[slot])
+            ok = True
+            for lg in range(pos0 // self.page_size,
+                            (pos0 + wlen - 1) // self.page_size + 1):
+                if not self._ensure_page(slot, lg):
+                    ok = False              # self-preempted mid-window
+                    break
+            if ok and slot in self._slots:
+                ready.append(slot)
+        ready = [s for s in ready if s in self._slots]
+        if not ready:
+            return
+        tokens = np.zeros((self.cfg.max_slots, w), np.int32)
+        wlens = np.zeros((self.cfg.max_slots,), np.int32)
+        active = np.zeros((self.cfg.max_slots,), bool)
+        draft_slots = []
+        for slot in ready:
+            s = self._slots[slot]
+            wlen = self._window_len(s)
+            tokens[slot, 0] = s.last_token
+            wlens[slot] = wlen
+            active[slot] = True
+            if s.replay:
+                tokens[slot, 1:wlen] = s.replay[:wlen - 1]
+            elif wlen > 1:
+                draft_slots.append(slot)
+        d_logits = None
+        if draft_slots:
+            d_toks, d_logits = self._draft(tokens[:, 0], active)
+            for slot in draft_slots:
+                k_i = int(wlens[slot]) - 1
+                tokens[slot, 1:1 + k_i] = d_toks[slot, :k_i]
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "page_table": jnp.asarray(self._page_table),
+            "lengths": jnp.asarray(self._lengths),
+            "active": jnp.asarray(active),
+            "window_len": jnp.asarray(wlens),
+        }
+        logits, self.caches = self._verify_fn(self.params, batch,
+                                              self.caches)
+        logits = np.asarray(logits)         # (B, W, V)
+
+        # --- host-side acceptance (greedy == plain decode, token-exact) --
+        accepted = np.zeros((self.cfg.max_slots,), np.int32)
+        plan = {}
+        self.stats["spec_steps"] += 1
+        for slot in ready:
+            s = self._slots[slot]
+            wlen = int(wlens[slot])
+            if s.replay:
+                # teacher-forced rows are correct by construction: cache
+                # the whole fed window (bit-identical recompute-resume)
+                plan[slot] = ("replay", wlen - 1)
+                accepted[slot] = wlen
+            else:
+                k_i = wlen - 1
+                emitted, n_acc = speclib.rejection_sample(
+                    tokens[slot, 1:1 + k_i],
+                    None if d_logits is None else d_logits[slot, :k_i],
+                    logits[slot, :k_i + 1],
+                    temperature=self.cfg.temperature, rng=self._rng)
+                plan[slot] = ("emit", emitted)
+                accepted[slot] = n_acc + 1
+                self.stats["spec_drafted"] += k_i
+                self.stats["spec_accepted"] += n_acc
+
+        # --- commit the accepted prefixes, then advance lengths ---
+        # snapshot the host arrays: the commit dispatch is ASYNC and
+        # jnp.asarray can alias numpy memory on CPU, while the lines right
+        # below (and the next step's bookkeeping) mutate page table and
+        # lengths — without the copies the in-flight commit may read the
+        # advanced values (a rarely-losing data race)
+        self.caches = self._commit_fn(
+            self.caches, jnp.asarray(self._page_table.copy()),
+            jnp.asarray(self._lengths.copy()), jnp.asarray(accepted),
+            jnp.asarray(active), w)
+        for slot in ready:
+            self._lengths[slot] += int(accepted[slot])
+
+        # --- apply emissions / replay bookkeeping ---
+        for slot in ready:
+            s = self._slots[slot]
+            kind, payload = plan[slot]
+            if kind == "replay":
+                m = payload
+                del s.replay[:m]
+                if s.replay:
+                    s.last_token = s.replay.pop(0)
+                else:
+                    # replay drained inside the window: the next REAL
+                    # token comes from the last teacher-forced row
+                    s.replay = None
+                    t = int(self._sample(logits[slot, m][None])[0])
+                    self._emit(slot, t)
+            else:
+                for t in payload:
+                    if not self._emit(slot, t):
+                        break
+
+    def _decode_step_single(self):
         """One token for every decoding slot.  Page demand is served oldest
         slot first, so pool exhaustion preempts the youngest slots (which
         drop out of this step and resume via the scheduler)."""
@@ -593,13 +812,7 @@ class ServeEngine:
                 # real one was sampled before preemption and is next in line
                 st.last_token = st.replay.pop(0)
                 continue
-            t = int(tok[slot])
-            st.req.output.append(t)
-            st.last_token = t
-            st.budget -= 1
-            if st.budget <= 0 or (st.req.eos_id is not None
-                                  and t == st.req.eos_id):
-                self._finish(slot)
+            self._emit(slot, int(tok[slot]))
 
     def _finish(self, slot: int):
         self.allocator.free(self._page_table[slot][
@@ -614,14 +827,21 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine step: admit, one prefill chunk, one decode wave.
-        Returns the number of occupied slots."""
+        """One engine step: admit, one prefill chunk, one decode dispatch
+        (single-token or speculative window — see
+        docs/serving.md#engine-step-granularity).  Returns the number of
+        occupied slots.  Steps that had work to do are counted in
+        ``stats['engine_steps']`` (trailing no-op calls are not) — the
+        benchmarks' deterministic throughput denominator."""
+        if self._slots or self._queue:
+            self.stats["engine_steps"] += 1
         self._admit()
         self._prefill_step()
         self._decode_step()
         return len(self._slots)
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        """Step until every submitted request drained (or max_steps)."""
         for _ in range(max_steps):
             if self.step() == 0 and not self._queue:
                 break
@@ -665,14 +885,17 @@ class StaticWaveEngine:
         self.caches = None
         self._rng = np.random.default_rng(ecfg.seed)
         self.completed: list[Request] = []
+        self.stats = {"engine_steps": 0}
         self._prefill, self._decode = _static_fns(model)
 
     # ------------------------------------------------------------------
     def load(self, params):
+        """Install model params (caches are rebuilt per wave)."""
         self.params = params
         self.caches = None
 
     def submit(self, req: Request):
+        """Validate and enqueue a request for the next generation wave."""
         n = len(req.prompt)
         bq = getattr(self.model.cfg, "block_q", 32)
         n_pad = max(bq, -(-n // bq) * bq)
@@ -731,7 +954,10 @@ class StaticWaveEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine step. Returns number of active slots."""
+        """One engine step. Returns number of active slots.  Working steps
+        are counted in ``stats['engine_steps']`` as in ServeEngine."""
+        if self._active or self._queue:
+            self.stats["engine_steps"] += 1
         self._admit()
         if not self._active:
             return 0
@@ -753,6 +979,7 @@ class StaticWaveEngine:
         return len(self._active)
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        """Step until every submitted request drained (or max_steps)."""
         for _ in range(max_steps):
             if self.step() == 0 and not self._queue:
                 break

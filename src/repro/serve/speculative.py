@@ -1,0 +1,162 @@
+"""Self-speculative decoding: linear-branch drafting + rejection sampling.
+
+SLA2's decomposition already contains a cheap approximation of full
+attention: the linear branch keeps running ``phi(k)·v`` totals per slot, so
+a forward pass that uses ONLY the linear branch needs no page-pool reads
+and costs O(d^2) per token per layer.  Self-speculative decoding exploits
+that: draft ``draft_len`` tokens through the linear branch (this module),
+then verify the whole window with the full sparse+linear attention in ONE
+multi-token paged pass (``Model.decode_verify`` over the
+``sla2_decode_verify`` kernel / its jnp gather oracle).
+
+The drafter seeds per-layer *speculative* totals from the committed cache
+state (complete-block totals + the current partial block read from its
+page) and advances a private copy token by token — the cache itself is
+never touched, so rejecting any part of a draft needs no rollback work:
+the speculative totals are simply dropped at the end of the engine step.
+Acceptance follows standard speculative rejection sampling
+(``rejection_sample``): greedy decoding reduces to exact argmax matching,
+which keeps speculative serving token-identical to plain decode.
+
+See docs/speculative.md for the full draft -> verify -> commit lifecycle
+and its interaction with the preemption scheduler.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def greedy_accept(draft: np.ndarray, target: np.ndarray) -> int:
+    """Length of the accepted draft prefix under greedy decoding: the
+    number of leading draft tokens equal to the target model's argmax at
+    their position.  draft: (k,) proposed tokens; target: (>=k,) greedy
+    target tokens per window row."""
+    n = 0
+    for d, t in zip(draft, target):
+        if int(d) != int(t):
+            break
+        n += 1
+    return n
+
+
+def _softmax(logits: np.ndarray, temperature: float) -> np.ndarray:
+    z = logits.astype(np.float64) / max(temperature, 1e-8)
+    z = z - z.max(axis=-1, keepdims=True)
+    e = np.exp(z)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def rejection_sample(draft_tokens, draft_logits, target_logits, *,
+                     temperature: float, rng: np.random.Generator):
+    """Speculative-decoding acceptance for one slot's verify window.
+
+    draft_tokens : (k,) tokens the draft proposed
+    draft_logits : (k, V) draft logits at each proposal (may be None when
+                   temperature <= 0 — greedy acceptance never reads them)
+    target_logits: (k+1, V) target logits; row i conditions on the prefix
+                   plus draft tokens < i, row k on the whole draft
+    Returns ``(emitted, n_accepted)``: the tokens to emit, ending with one
+    non-draft token — the resampled correction at the first rejection, or
+    the bonus token from the last target row when the whole draft accepts.
+
+    Greedy (temperature <= 0): accept while draft token == target argmax.
+    Sampled: accept d_i with prob min(1, p_i(d_i) / q_i(d_i)); on
+    rejection resample from normalize(max(p_i - q_i, 0)) — the classic
+    residual scheme, so emitted tokens are distributed exactly as
+    target-model sampling regardless of draft quality."""
+    k = len(draft_tokens)
+    if temperature <= 0:
+        tgt = np.argmax(target_logits, axis=-1)
+        n = greedy_accept(draft_tokens, tgt[:k])
+        return [int(t) for t in draft_tokens[:n]] + [int(tgt[n])], n
+    emitted = []
+    for i in range(k):
+        p = _softmax(target_logits[i], temperature)
+        q = _softmax(draft_logits[i], temperature)
+        d = int(draft_tokens[i])
+        if rng.random() < min(1.0, p[d] / max(q[d], 1e-20)):
+            emitted.append(d)
+            continue
+        res = np.maximum(p - q, 0.0)
+        tot = res.sum()
+        if tot <= 0.0:                  # p == q exactly: resample from p
+            res, tot = p, p.sum()
+        emitted.append(int(rng.choice(len(res), p=res / tot)))
+        return emitted, i
+    p = _softmax(target_logits[k], temperature)
+    emitted.append(int(rng.choice(len(p), p=p)))
+    return emitted, k
+
+
+class LinearDrafter:
+    """Batched linear-branch drafter over a ServeEngine's paged caches.
+
+    ``propose`` seeds per-layer speculative totals from the committed
+    cache (``Model.draft_init``) and rolls the model forward ``k`` tokens
+    through the linear branch only (``Model.draft_step``) — no page-pool
+    reads, no routing.  The whole loop is one jitted graph per draft
+    length, cached on the model so engines sharing a model share the
+    compilation.  The speculative totals never leave the graph: rejection
+    requires no rollback."""
+
+    def __init__(self, model, temperature: float = 0.0):
+        if model.draft_init is None:
+            raise ValueError(
+                f"{model.cfg.name}: linear drafting requires an SLA2 "
+                "attention stack (mechanism='sla2')")
+        self.model = model
+        self.temperature = float(temperature)
+        if not hasattr(model, "_draft_fns"):
+            model._draft_fns = {}
+        self._fns = model._draft_fns
+
+    def _build(self, k: int):
+        model, temp = self.model, self.temperature
+
+        def propose(params, caches, page_table, lengths, active, tokens0,
+                    gumbel):
+            st = model.draft_init(caches, {"page_table": page_table,
+                                           "lengths": lengths,
+                                           "active": active})
+            toks, logits_all = [], []
+            tok = tokens0
+            for i in range(k):
+                lg, st = model.draft_step(
+                    params, {"token": tok, "positions": lengths + i,
+                             "active": active}, st)
+                if temp > 0:
+                    nxt = jnp.argmax(lg / temp + gumbel[i], axis=-1)
+                else:
+                    nxt = jnp.argmax(lg, axis=-1)
+                tok = nxt.astype(jnp.int32)
+                toks.append(tok)
+                logits_all.append(lg)
+            return jnp.stack(toks, 1), jnp.stack(logits_all, 1)
+
+        return jax.jit(propose)
+
+    def propose(self, params, caches, *, page_table, lengths, active,
+                tokens0, k: int, rng: Optional[np.random.Generator] = None):
+        """Draft ``k`` tokens for every active slot, starting from each
+        slot's last accepted token.  Draft token i sits at position
+        ``lengths + i + 1`` (``tokens0`` itself at ``lengths``).  Returns
+        numpy ``(draft_tokens (B, k), draft_logits (B, k, V))``."""
+        key = (k, self.temperature)     # the graph bakes the temperature in
+        if key not in self._fns:
+            self._fns[key] = self._build(k)
+        fn = self._fns[key]
+        b = int(tokens0.shape[0])
+        if self.temperature > 0:
+            assert rng is not None, "sampled drafting needs the engine rng"
+            gumbel = jnp.asarray(
+                rng.gumbel(size=(k, b, self.model.cfg.vocab_size)))
+        else:
+            gumbel = jnp.zeros((k,))        # unused by the greedy graph
+        d_toks, d_logits = fn(
+            params, caches, jnp.asarray(page_table), jnp.asarray(lengths),
+            jnp.asarray(active), jnp.asarray(tokens0), gumbel)
+        return np.asarray(d_toks), np.asarray(d_logits)

@@ -1,7 +1,8 @@
 """Docs stay honest in tier-1: relative links resolve, python code blocks
-parse, and every `python -m <module>` entry point the docs name actually
-imports.  The CI docs job additionally EXECUTES the documented cheap
-commands (tools/check_docs.py --run)."""
+parse, every `python -m <module>` entry point the docs name actually
+imports, and the public serve/ + kernels/ surface carries docstrings.
+The CI docs job additionally EXECUTES the documented cheap commands
+(tools/check_docs.py --run)."""
 import os
 import sys
 
@@ -20,6 +21,13 @@ def test_doc_file_clean(path):
     errors = check_docs.check_links(path)
     e, commands = check_docs.check_code_blocks(path)
     errors += e
+    assert not errors, "\n".join(errors)
+
+
+def test_public_api_docstrings():
+    """Every public function/class/method in the user-facing packages
+    (serve/, kernels/) must carry a docstring."""
+    errors = check_docs.check_docstrings()
     assert not errors, "\n".join(errors)
 
 

@@ -151,6 +151,149 @@ def test_fused_decode_inactive_and_recycled_slot():
     np.testing.assert_allclose(outs2["fused"], outs2["gather"], atol=5e-5)
 
 
+def test_verify_kernel_matches_gather_window():
+    """The multi-token verify kernel (decode grid extended to W query rows
+    per slot, causal intra-window mask) == the jnp gather window oracle ==
+    W sequential single-token decodes, over ragged slot lengths."""
+    lengths = [37, 16, 70]
+    wdw = 4
+    cfg, params, cache, pt, _ = _paged_state(2, lengths)
+    # map pages for every block the windows reach
+    pt = np.asarray(pt)
+    nxt = int(pt.max()) + 1
+    for s, n in enumerate(lengths):
+        for lg in range(n // cfg.block_k,
+                        (n + wdw - 1) // cfg.block_k + 1):
+            if pt[s, lg] == 0:
+                pt[s, lg] = nxt
+                nxt += 1
+    grow = nxt + 1 - cache["k_pages"].shape[0]
+    if grow > 0:
+        for key in ("k_pages", "v_pages", "pooled_pages"):
+            pad = jnp.zeros((grow,) + cache[key].shape[1:],
+                            cache[key].dtype)
+            cache[key] = jnp.concatenate([cache[key], pad])
+    pt = jnp.asarray(pt)
+    x_w = jax.random.normal(jax.random.PRNGKey(3), (3, wdw, 64)) * 0.3
+    ln = jnp.asarray(lengths)
+    act = jnp.asarray([True] * 3)
+    wl = jnp.full((3,), wdw, jnp.int32)
+    outs = {}
+    for impl in ("fused", "gather"):
+        c = dataclasses.replace(cfg, paged_impl=impl)
+        y, _ = A.decode_window_paged(params, c, x_w, dict(cache),
+                                     page_table=pt, lengths=ln, active=act,
+                                     window_len=wl)
+        outs[impl] = np.asarray(y, np.float32)
+    np.testing.assert_allclose(outs["fused"], outs["gather"], atol=5e-5)
+    # sequential oracle: W single-token decodes (which commit as they go)
+    c_seq = dict(cache)
+    seq = []
+    gcfg = dataclasses.replace(cfg, paged_impl="gather")
+    for w in range(wdw):
+        y, c_seq = A.decode_step_paged(params, gcfg, x_w[:, w:w + 1],
+                                       c_seq, page_table=pt,
+                                       lengths=ln + w, active=act)
+        seq.append(np.asarray(y, np.float32)[:, 0])
+    np.testing.assert_allclose(outs["gather"], np.stack(seq, 1), atol=5e-5)
+
+
+def test_dense_window_matches_sequential_decode():
+    """The dense (mechanism='full') branch of decode_window_paged — used by
+    Model.decode_verify on non-SLA2 stacks — equals W sequential dense
+    single-token decodes over the same pages."""
+    wdw, b, d_model, n = 3, 2, 64, 24
+    cfg = A.AttentionConfig(d_model=d_model, num_heads=4, num_kv_heads=2,
+                            head_dim=16, mechanism="full", block_k=16)
+    params = A.init_attention(jax.random.PRNGKey(0), cfg)
+    cache = A.init_paged_cache(cfg, 8, b, dtype=jnp.float32)
+    pt = jnp.asarray([[1, 2, 0, 0], [3, 4, 0, 0]], jnp.int32)
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (b, 32, d_model)) * 0.3
+    for s in range(b):
+        _, cache = A.chunk_prefill_paged(
+            params, cfg, x0[s:s + 1], cache, page_row=pt[s],
+            offset=jnp.asarray(0, jnp.int32),
+            chunk_len=jnp.asarray(n, jnp.int32),
+            slot=jnp.asarray(s, jnp.int32))
+    x_w = jax.random.normal(jax.random.PRNGKey(2), (b, wdw, d_model)) * 0.3
+    ln = jnp.full((b,), n, jnp.int32)
+    act = jnp.asarray([True] * b)
+    y_w, _ = A.decode_window_paged(params, cfg, x_w, dict(cache),
+                                   page_table=pt, lengths=ln, active=act,
+                                   window_len=jnp.full((b,), wdw,
+                                                       jnp.int32))
+    c_seq = dict(cache)
+    seq = []
+    for w in range(wdw):
+        y, c_seq = A.decode_step_paged(params, cfg, x_w[:, w:w + 1],
+                                       c_seq, page_table=pt,
+                                       lengths=ln + w, active=act)
+        seq.append(np.asarray(y, np.float32)[:, 0])
+    np.testing.assert_allclose(np.asarray(y_w, np.float32),
+                               np.stack(seq, 1), atol=5e-5)
+
+
+def test_commit_window_matches_sequential_state():
+    """Committing the full window reproduces the sequential decode's block
+    state (pooled router keys + linear totals); committing a PREFIX then
+    decoding the next token equals never having speculated at all."""
+    lengths = [21, 40]
+    wdw = 3
+    cfg, params, cache, pt, _ = _paged_state(2, tuple(lengths))
+    pt = np.asarray(pt)
+    nxt = int(pt.max()) + 1
+    for s, n in enumerate(lengths):
+        for lg in range(n // cfg.block_k,
+                        (n + wdw - 1) // cfg.block_k + 1):
+            if pt[s, lg] == 0:
+                pt[s, lg] = nxt
+                nxt += 1
+    grow = nxt + 1 - cache["k_pages"].shape[0]
+    if grow > 0:
+        for key in ("k_pages", "v_pages", "pooled_pages"):
+            pad = jnp.zeros((grow,) + cache[key].shape[1:],
+                            cache[key].dtype)
+            cache[key] = jnp.concatenate([cache[key], pad])
+    pt = jnp.asarray(pt)
+    x_w = jax.random.normal(jax.random.PRNGKey(8), (2, wdw, 64)) * 0.3
+    ln = jnp.asarray(lengths)
+    act = jnp.asarray([True, True])
+    gcfg = dataclasses.replace(cfg, paged_impl="gather")
+    # window + full commit vs sequential loop
+    _, c_win = A.decode_window_paged(params, gcfg, x_w, dict(cache),
+                                     page_table=pt, lengths=ln, active=act,
+                                     window_len=jnp.full((2,), wdw,
+                                                         jnp.int32))
+    c_full = A.commit_paged_window(cfg, c_win, page_table=pt, lengths=ln,
+                                   accepted=jnp.full((2,), wdw, jnp.int32),
+                                   active=act, window=wdw)
+    c_seq = dict(cache)
+    for w in range(wdw):
+        _, c_seq = A.decode_step_paged(params, gcfg, x_w[:, w:w + 1],
+                                       c_seq, page_table=pt,
+                                       lengths=ln + w, active=act)
+    for key in ("pooled_pages", "h_tot", "z_tot", "k_pages", "v_pages"):
+        np.testing.assert_allclose(np.asarray(c_full[key], np.float32),
+                                   np.asarray(c_seq[key], np.float32),
+                                   atol=1e-5, err_msg=key)
+    # partial accept (rollback): commit 1 row, continue with a fresh token
+    c_part = A.commit_paged_window(cfg, c_win, page_table=pt, lengths=ln,
+                                   accepted=jnp.ones((2,), jnp.int32),
+                                   active=act, window=wdw)
+    c_ref = dict(cache)
+    _, c_ref = A.decode_step_paged(params, gcfg, x_w[:, :1], c_ref,
+                                   page_table=pt, lengths=ln, active=act)
+    x_n = jax.random.normal(jax.random.PRNGKey(9), (2, 1, 64)) * 0.3
+    y_part, _ = A.decode_step_paged(params, gcfg, x_n, c_part,
+                                    page_table=pt, lengths=ln + 1,
+                                    active=act)
+    y_ref, _ = A.decode_step_paged(params, gcfg, x_n, c_ref,
+                                   page_table=pt, lengths=ln + 1,
+                                   active=act)
+    np.testing.assert_allclose(np.asarray(y_part), np.asarray(y_ref),
+                               atol=5e-5)
+
+
 def test_fused_chunk_prefill_matches_gather():
     """The page-table flash prefill (no per-slot K/V view materialised)
     matches the dense gather chunk attention on the valid chunk rows."""

@@ -1,0 +1,211 @@
+"""Speculative-decoding regression tests: greedy self-speculative serving
+(linear-branch drafting + multi-token paged verify) must be *invisible* in
+the outputs — token-identical to non-speculative ``ServeEngine`` decode —
+across the fused and gather paged paths, under forced all-reject drafts,
+forced preemption mid-draft (swap AND recompute-replay) and late joiners.
+The acceptance/rejection-sampling math has its own units here; the
+verify-kernel vs gather-oracle parity lives in tests/test_parity.py."""
+import numpy as np
+import pytest
+
+from repro.serve import (EngineConfig, Request, ServeEngine, greedy_accept,
+                         rejection_sample)
+
+MAX_LEN = 192
+MAX_NEW = 8
+
+
+def _serve_spec(model, params, prompts, *, late_idx=None, max_new=MAX_NEW,
+                **ecfg_kw):
+    eng = ServeEngine(model, EngineConfig(
+        max_len=MAX_LEN, prefill_chunk=32, **ecfg_kw))
+    eng.load(params)
+    for i, p in enumerate(prompts):
+        if i != late_idx:
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new))
+    if late_idx is not None:
+        for _ in range(3):
+            eng.step()
+        eng.submit(Request(uid=late_idx, prompt=prompts[late_idx],
+                           max_new_tokens=max_new))
+    done = eng.run_to_completion(max_steps=4000)
+    assert sorted(r.uid for r in done) == list(range(len(prompts)))
+    return {r.uid: r.output for r in done}, eng
+
+
+def test_speculative_matches_plain_decode_across_impls(qwen3_smoke,
+                                                       qwen3_params,
+                                                       make_prompts):
+    """Greedy speculative serving (with a late joiner) emits exactly the
+    tokens of non-speculative serving, on both the fused Pallas verify
+    kernel and the jnp gather oracle — and actually accepts drafts."""
+    cfg, model = qwen3_smoke
+    prompts = make_prompts(cfg, [7, 45, 80, 21], seed=11)
+    ref, _ = _serve_spec(model, qwen3_params, prompts, late_idx=3,
+                         max_slots=3, speculative="off")
+    for impl in ("gather", "fused"):
+        out, eng = _serve_spec(model, qwen3_params, prompts, late_idx=3,
+                               max_slots=3, speculative="linear",
+                               draft_len=3, paged_impl=impl)
+        for i in range(len(prompts)):
+            assert out[i] == ref[i], f"request {i} diverged ({impl})"
+        assert eng.stats["spec_steps"] > 0
+        assert eng.stats["spec_accepted"] > 0, \
+            "drafts never accepted — drafting is broken, not just slow"
+
+
+def test_forced_all_reject_still_exact(qwen3_smoke, qwen3_params,
+                                       make_prompts, monkeypatch):
+    """Drafts that NEVER match force a full rollback every verify step:
+    outputs must still be token-identical, with zero accepted drafts and
+    every verify advancing exactly one token (the non-spec rate)."""
+    cfg, model = qwen3_smoke
+    prompts = make_prompts(cfg, [7, 45, 21], seed=12)
+    ref, _ = _serve_spec(model, qwen3_params, prompts, max_slots=3,
+                         speculative="off")
+    bad = max(t for out in ref.values() for t in out) + 1   # never emitted
+    assert bad < cfg.vocab_size
+
+    def wrong_draft(self, tokens0, active):
+        k = self.cfg.draft_len
+        toks = np.full((self.cfg.max_slots, k), bad, np.int32)
+        logits = np.zeros((self.cfg.max_slots, k, cfg.vocab_size),
+                          np.float32)
+        return toks, logits
+
+    monkeypatch.setattr(ServeEngine, "_draft", wrong_draft)
+    out, eng = _serve_spec(model, qwen3_params, prompts, max_slots=3,
+                           speculative="linear", draft_len=3)
+    assert eng.stats["spec_accepted"] == 0
+    assert eng.stats["spec_drafted"] > 0
+    for i in range(len(prompts)):
+        assert out[i] == ref[i], f"request {i} diverged under all-reject"
+
+
+def test_speculative_preemption_swap_exact(qwen3_smoke, qwen3_params,
+                                           make_prompts):
+    """Pool sized below demand: slots are preempted MID-DRAFT (the window's
+    pages are reclaimed, the uncommitted window discarded) and swap-resumed
+    — outputs stay identical to non-speculative serving on both paths."""
+    cfg, model = qwen3_smoke
+    prompts = make_prompts(cfg, [20, 35, 28, 40], seed=13)
+    ref, _ = _serve_spec(model, qwen3_params, prompts, late_idx=3,
+                         max_slots=3, speculative="off", num_pages=8)
+    for impl in ("gather", "fused"):
+        out, eng = _serve_spec(model, qwen3_params, prompts, late_idx=3,
+                               max_slots=3, speculative="linear",
+                               draft_len=3, num_pages=8, paged_impl=impl)
+        assert eng.stats["preemptions"] > 0 and eng.stats["swap_outs"] > 0
+        for i in range(len(prompts)):
+            assert out[i] == ref[i], \
+                f"request {i} diverged across preemption ({impl})"
+        assert eng.allocator.available == eng.allocator.num_pages - 1
+        assert eng.swap.used == 0
+
+
+def test_speculative_recompute_replay_rides_window(qwen3_smoke,
+                                                   qwen3_params,
+                                                   make_prompts):
+    """swap_pages=0 forces recompute-from-prompt: the teacher-forced replay
+    is fed through the verify window (every fed row force-accepted), so the
+    rebuilt cache repeats the original computation and outputs stay
+    token-identical."""
+    cfg, model = qwen3_smoke
+    prompts = make_prompts(cfg, [20, 35, 28, 40], seed=14)
+    ref, _ = _serve_spec(model, qwen3_params, prompts, late_idx=3,
+                         max_slots=3, speculative="off", num_pages=8,
+                         swap_pages=0)
+    out, eng = _serve_spec(model, qwen3_params, prompts, late_idx=3,
+                           max_slots=3, speculative="linear", draft_len=3,
+                           num_pages=8, swap_pages=0)
+    assert eng.stats["recomputes"] > 0 and eng.stats["swap_outs"] == 0
+    for i in range(len(prompts)):
+        assert out[i] == ref[i], f"request {i} diverged after recompute"
+
+
+def test_speculative_requires_linear_branch(full_attn_smoke):
+    """mechanism='full' has no linear branch to draft with: the engine must
+    refuse speculative='linear' instead of silently serving garbage."""
+    cfg, model, params = full_attn_smoke
+    with pytest.raises(ValueError):
+        ServeEngine(model, EngineConfig(speculative="linear"))
+    with pytest.raises(ValueError):
+        ServeEngine(model, EngineConfig(speculative="nonsense"))
+
+
+def test_sampled_speculative_serves(qwen3_smoke, qwen3_params,
+                                    make_prompts):
+    """temperature>0 wires the Gumbel-sampled draft graph and the
+    min(1, p/q) rejection path through the engine: must drain, emit valid
+    tokens and actually accept drafts (p == q-ish for a shared model)."""
+    cfg, model = qwen3_smoke
+    prompts = make_prompts(cfg, [9, 33], seed=15)
+    out, eng = _serve_spec(model, qwen3_params, prompts, max_slots=2,
+                           max_new=10, speculative="linear", draft_len=3,
+                           temperature=0.8)
+    assert all(len(out[i]) == 10 for i in range(2))
+    assert all(0 <= t < cfg.vocab_size for o in out.values() for t in o)
+    assert eng.stats["spec_accepted"] > 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance / rejection-sampling units (no model needed)
+# ---------------------------------------------------------------------------
+
+def test_greedy_accept_prefix():
+    assert greedy_accept(np.array([3, 5, 7]), np.array([3, 5, 7, 9])) == 3
+    assert greedy_accept(np.array([3, 5, 7]), np.array([3, 4, 7])) == 1
+    assert greedy_accept(np.array([2]), np.array([9, 9])) == 0
+    assert greedy_accept(np.array([], np.int32), np.array([4])) == 0
+
+
+def test_rejection_sample_greedy_matches_argmax():
+    """temperature<=0: the emitted sequence is the accepted draft prefix
+    plus the target argmax correction/bonus — the token-identity core."""
+    rng = np.random.default_rng(0)
+    v = 16
+    tgt = np.zeros((4, v), np.float32)
+    for i, t in enumerate((3, 5, 7, 9)):
+        tgt[i, t] = 10.0
+    emitted, n = rejection_sample(np.array([3, 5, 2]), None, tgt,
+                                  temperature=0.0, rng=rng)
+    assert n == 2 and emitted == [3, 5, 7]      # 2 accepted + correction
+    emitted, n = rejection_sample(np.array([3, 5, 7]), None, tgt,
+                                  temperature=0.0, rng=rng)
+    assert n == 3 and emitted == [3, 5, 7, 9]   # all accepted + bonus
+
+
+def test_rejection_sample_extremes():
+    """p == q accepts every draft token; a draft token with zero target
+    mass is always rejected and resampled from the residual."""
+    rng = np.random.default_rng(1)
+    v, k = 8, 3
+    logits = np.log(np.full((k + 1, v), 1.0 / v))
+    draft = np.array([1, 2, 3])
+    emitted, n = rejection_sample(draft, logits[:k], logits,
+                                  temperature=1.0, rng=rng)
+    assert n == k and emitted[:k] == [1, 2, 3]
+    # target puts ~zero mass on token 0, draft is certain of it
+    tgt = np.full((k + 1, v), 5.0)
+    tgt[:, 0] = -1e9
+    drl = np.full((k, v), -1e9)
+    drl[:, 0] = 5.0
+    emitted, n = rejection_sample(np.array([0, 0, 0]), drl, tgt,
+                                  temperature=1.0, rng=rng)
+    assert n == 0 and len(emitted) == 1 and emitted[0] != 0
+
+
+def test_window_len_caps_by_budget_and_replay(qwen3_smoke, qwen3_params):
+    """A slot with 1 budget token left degrades to plain one-token decode;
+    replay windows never outrun the teacher-forcing queue."""
+    from repro.serve.engine import _Slot
+
+    cfg, model = qwen3_smoke
+    eng = ServeEngine(model, EngineConfig(speculative="linear", draft_len=3))
+    mk = lambda **kw: _Slot(req=Request(uid=0, prompt=np.ones(4, np.int32)),
+                            tokens=np.ones(4, np.int32), **kw)
+    assert eng._window_len(mk(budget=1)) == 1
+    assert eng._window_len(mk(budget=2)) == 2
+    assert eng._window_len(mk(budget=99)) == 4
+    assert eng._window_len(mk(budget=99, replay=[7])) == 2
+    assert eng._window_len(mk(budget=99, replay=[7] * 10)) == 4

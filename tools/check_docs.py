@@ -1,14 +1,17 @@
 """Docs checker: keep README.md and docs/*.md honest.
 
-Three layers of checking (first two are cheap and also run in tier-1 via
-tests/test_docs.py; the third runs in the CI docs job):
+Four layers of checking (the first three are cheap and also run in tier-1
+via tests/test_docs.py; the fourth runs in the CI docs job):
 
   1. LINK LINT — every relative markdown link target must exist on disk
      (anchors and external http(s)/mailto links are skipped).
   2. CODE BLOCKS — every ```python fenced block must be valid syntax
      (compile()); every `python -m <module>` referenced in a ```bash
      block must resolve to an importable module (the entry point exists).
-  3. --run — actually execute the cheap commands the docs promise: every
+  3. DOCSTRINGS — every public module-level function, class and public
+     method in the user-facing packages (src/repro/serve, src/repro/
+     kernels) must carry a docstring (ast-based, no imports needed).
+  4. --run — actually execute the cheap commands the docs promise: every
      command line in a bash block matching the RUNNABLE allowlist
      (pytest --collect-only, benchmark --smoke) is run from the repo root
      with PYTHONPATH=src and must exit 0.
@@ -91,6 +94,39 @@ def check_code_blocks(path: str) -> tuple[list[str], list[str]]:
     return errors, commands
 
 
+# user-facing packages whose public surface must be documented
+DOCSTRING_DIRS = (os.path.join("src", "repro", "serve"),
+                  os.path.join("src", "repro", "kernels"))
+
+
+def check_docstrings() -> list[str]:
+    """Flag public functions/classes/methods in DOCSTRING_DIRS that carry
+    no docstring (dunder and underscore-private names are exempt)."""
+    import ast
+    errors = []
+    for d in DOCSTRING_DIRS:
+        for path in sorted(glob.glob(os.path.join(REPO, d, "*.py"))):
+            rel = os.path.relpath(path, REPO)
+            tree = ast.parse(open(path).read())
+            defs = []
+            for node in tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    defs.append((node.name, node))
+                elif isinstance(node, ast.ClassDef):
+                    defs.append((node.name, node))
+                    defs += [(f"{node.name}.{sub.name}", sub)
+                             for sub in node.body
+                             if isinstance(sub, (ast.FunctionDef,
+                                                 ast.AsyncFunctionDef))]
+            for qual, node in defs:
+                if any(part.startswith("_") for part in qual.split(".")):
+                    continue
+                if not ast.get_docstring(node):
+                    errors.append(f"{rel}: public `{qual}` missing a "
+                                  "docstring")
+    return errors
+
+
 def run_commands(commands: list[str]) -> list[str]:
     errors = []
     env = dict(os.environ)
@@ -131,6 +167,7 @@ def main() -> int:
         e, c = check_code_blocks(path)
         errors += e
         commands += c
+    errors += check_docstrings()
     if args.run:
         if not commands:
             errors.append("no runnable documented commands found — the "
