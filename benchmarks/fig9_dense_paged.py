@@ -1,0 +1,309 @@
+"""Figure 9 (beyond paper): DENSE paged decode on the fused kernel path —
+`dense_decode_fused` vs the `_gather_pages` reference, plus the
+sliding-window fused prefill and n-gram speculative serving that ride the
+same generalisation of the paged kernel family.
+
+Three sections, same methodology split as fig6 (no TPU in this container,
+so compiled-kernel wall-clock is out):
+
+  (1) MODELED: v5e roofline of one dense (mechanism='full') decode step on
+      the qwen3-14b serving geometry.  Dense decode reads EVERY mapped
+      page of the slot each step, so the story is again bytes moved:
+        * fused  — the Pallas kernel streams each mapped K/V page from
+                   the pool exactly once (the page-table row itself is the
+                   scalar-prefetch operand);
+        * gather — the jnp reference materialises a contiguous
+                   (B, Hkv, maxP*bk, Dh) per-slot copy (read + write) and
+                   the softmax/PV chain re-reads it: ~3x the page bytes.
+      A second table models a sliding-window layer (window W): the fused
+      kernel's validity flags skip pages wholly below the window start, so
+      bytes scale with W, not ctx — the gather path still materialises the
+      full view before masking.
+  (2) MEASURED KERNEL SMOKE (interpret mode, tiny shapes): dense fused
+      decode vs gather parity (causal + sliding window) and sliding-window
+      fused prefill vs the dense oracle.  This is the CI guard that the
+      shipped kernels run and agree; interpret-mode times are NOT
+      comparable.
+  (3) MEASURED ENGINE (CPU proxy, skipped with --smoke): tokens/sec of a
+      mixed-length dense workload through ServeEngine vs StaticWaveEngine,
+      plus n-gram speculative serving (speculative='ngram') on a
+      repetition-friendly workload — engine decode dispatches vs plain
+      decode, token-exactness asserted.
+
+Results go to results/benchmarks/fig9_dense_paged.json AND (full runs
+only) to the top-level BENCH_dense_paged.json trajectory artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import markdown_table, save_result
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+# qwen3-14b serving geometry (dense attention)
+LAYERS, HKV, N_REP, DH = 40, 8, 5, 128
+BK = 64                                    # tokens per page
+BF16 = 2
+SW = 4096                                  # modeled sliding-window size
+
+BATCHES = (1, 4, 8, 16, 32)
+CONTEXTS = (8192, 32768, 131072)
+
+TOP_LEVEL_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                              "BENCH_dense_paged.json")
+
+
+def modeled_step(batch: int, ctx: int, method: str,
+                 window: int | None = None) -> float:
+    """Roofline seconds for ONE dense decode step over all layers on one
+    v5e.  Dense decode is bandwidth-bound: the methods differ in bytes
+    moved.  The 3x page-bytes charge for 'gather' (copy write + compute
+    re-reads on top of the pool read) is the same modeling assumption as
+    fig6 — an input of the model, not a measurement (see kernel_smoke for
+    what IS measured).  With ``window`` set, the fused kernel only reads
+    the pages overlapping the window (validity prefetch flags); the
+    gather reference still materialises the whole per-slot view."""
+    h = HKV * N_REP
+    read_tokens = ctx if window is None else min(ctx, (window // BK + 1) * BK)
+    page_bytes = batch * HKV * read_tokens * DH * BF16 * 2       # K + V
+    flops = batch * h * read_tokens * DH * 4
+    if method == "fused":
+        bytes_ = page_bytes
+    elif method == "gather":
+        full_bytes = batch * HKV * ctx * DH * BF16 * 2
+        bytes_ = 2 * full_bytes + page_bytes    # copy write + re-read + use
+    else:
+        raise ValueError(method)
+    t = max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW)
+    return LAYERS * t
+
+
+def modeled_table(window: int | None = None) -> list[dict]:
+    """Roofline rows for every (ctx, batch); ``window`` models the
+    sliding-window layer variant."""
+    rows = []
+    for ctx in CONTEXTS:
+        for batch in BATCHES:
+            ts = {m: modeled_step(batch, ctx, m, window)
+                  for m in ("fused", "gather")}
+            rows.append({
+                "ctx": ctx, "batch": batch,
+                "fused_us": round(ts["fused"] * 1e6, 1),
+                "gather_us": round(ts["gather"] * 1e6, 1),
+                "fused_tok_s": round(batch / ts["fused"]),
+                "gather_tok_s": round(batch / ts["gather"]),
+                "fused_vs_gather_x": round(ts["gather"] / ts["fused"], 2),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# measured: interpret-mode kernel smoke (parity + wall time)
+# ---------------------------------------------------------------------------
+
+def kernel_smoke() -> dict:
+    """Run the dense fused decode kernel and the sliding-window fused
+    prefill (interpret mode) against their gather references on real
+    chunk-prefilled state; assert parity and record wall times."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    from repro.models import attention as A
+    from repro.serve.scenario import make_paged_attention_state
+
+    lengths = [37, 16, 70]
+    out = {}
+
+    def decode_pair(sliding_window):
+        cfg, params, cache, pt, x_t = make_paged_attention_state(
+            mechanism="full", sliding_window=sliding_window)
+        res = {}
+        for impl in ("fused", "gather"):
+            c = dataclasses.replace(cfg, paged_impl=impl)
+            fn = jax.jit(lambda xt, ca, _c=c: A.decode_step_paged(
+                params, _c, xt, ca, page_table=pt,
+                lengths=jnp.asarray(lengths),
+                active=jnp.ones((len(lengths),), bool)))
+            o, _ = fn(x_t, dict(cache))
+            jax.block_until_ready(o)
+            t0 = time.perf_counter()
+            o, _ = fn(x_t, dict(cache))
+            jax.block_until_ready(o)
+            res[impl] = {"step_ms": round((time.perf_counter() - t0) * 1e3,
+                                          2),
+                         "out": np.asarray(o)}
+        return res
+
+    causal = decode_pair(None)
+    sw = decode_pair(24)
+    err_causal = float(np.abs(causal["fused"]["out"]
+                              - causal["gather"]["out"]).max())
+    err_sw = float(np.abs(sw["fused"]["out"] - sw["gather"]["out"]).max())
+    assert err_causal < 5e-5, f"dense fused decode diverged: {err_causal}"
+    assert err_sw < 5e-5, f"dense sliding-window decode diverged: {err_sw}"
+
+    # sliding-window fused prefill vs the gather oracle
+    cfg, params, cache, pt, _ = make_paged_attention_state(
+        mechanism="full", sliding_window=24)
+    pt = pt.at[2, 4].set(int(pt.max()) + 1)      # page for the chunk tail
+    x_new = jax.random.normal(jax.random.PRNGKey(5), (1, 32, 64)) * 0.3
+    pre = {}
+    for impl in ("fused", "gather"):
+        c = dataclasses.replace(cfg, paged_impl=impl)
+        y, _ = A.chunk_prefill_paged(
+            params, c, x_new, dict(cache), page_row=pt[2],
+            offset=jnp.asarray(64, jnp.int32),
+            chunk_len=jnp.asarray(20, jnp.int32),
+            slot=jnp.asarray(2, jnp.int32))
+        pre[impl] = np.asarray(y, np.float32)[:, :20]
+    err_pre = float(np.abs(pre["fused"] - pre["gather"]).max())
+    assert err_pre < 5e-5, f"sliding-window fused prefill diverged: {err_pre}"
+
+    out = {
+        "parity": {"dense_decode_max_abs_err": err_causal,
+                   "sliding_window_decode_max_abs_err": err_sw,
+                   "sliding_window_prefill_max_abs_err": err_pre},
+        "interpret_step_ms": {
+            "dense_fused": causal["fused"]["step_ms"],
+            "dense_gather": causal["gather"]["step_ms"],
+            "sw_fused": sw["fused"]["step_ms"],
+            "sw_gather": sw["gather"]["step_ms"]},
+        "note": "interpret-mode CPU times; parity is the signal here",
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# measured: dense engine throughput + n-gram speculative (CPU proxy)
+# ---------------------------------------------------------------------------
+
+def engine_measured(seed: int = 0) -> dict:
+    """Dense-stack serving on CPU: (a) paged continuous batching (gather
+    path — the XLA-compiled proxy) vs static waves; (b) n-gram speculative
+    serving on a repetition-friendly workload — engine decode dispatches
+    vs plain decode, outputs asserted token-identical."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.api import build_model
+    from repro.serve import (EngineConfig, Request, ServeEngine,
+                             StaticWaveEngine, make_mixed_requests)
+
+    cfg = get_smoke_config("qwen3_14b", mechanism="full", n_layers=4,
+                           d_model=128, d_ff=256, num_heads=4,
+                           num_kv_heads=2, head_dim=32, vocab_size=512)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    out: dict = {}
+
+    # --- throughput: paged vs static on a mixed dense workload ---
+    work = [(12, 48), (8, 8), (150, 8), (16, 12), (10, 48), (24, 8),
+            (9, 8), (14, 48), (20, 12), (11, 8), (30, 48), (13, 8)]
+    row = {}
+    for name, eng_cls, kw in (
+            ("paged_gather", ServeEngine, {"paged_impl": "gather"}),
+            ("static_wave", StaticWaveEngine, {})):
+        eng = eng_cls(model, EngineConfig(
+            max_slots=8, max_len=256, prefill_chunk=64, **kw))
+        eng.load(params)
+        for r in make_mixed_requests(cfg.vocab_size, work, seed=seed):
+            eng.submit(r)                        # warm-up: compile
+        eng.run_to_completion(max_steps=4000)
+        reqs = make_mixed_requests(cfg.vocab_size, work, seed=seed)
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run_to_completion(max_steps=4000)
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.output or []) for r in reqs)
+        row[name] = {"tok_per_s": round(toks / dt, 2),
+                     "seconds": round(dt, 3)}
+    row["paged_vs_static_x"] = round(
+        row["paged_gather"]["tok_per_s"]
+        / row["static_wave"]["tok_per_s"], 2)
+    out["throughput_slots_8"] = row
+
+    # --- n-gram speculative: repetition-friendly prompts ---
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for i in range(6):
+        pat = rng.integers(1, cfg.vocab_size, 4).astype(np.int32)
+        prompts.append(np.tile(pat, 8))          # period-4 repetition
+
+    def serve(spec):
+        eng = ServeEngine(model, EngineConfig(
+            max_slots=4, max_len=256, prefill_chunk=64,
+            speculative=spec, draft_len=3, paged_impl="gather"))
+        eng.load(params)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=24))
+        done = eng.run_to_completion(max_steps=4000)
+        return {r.uid: r.output for r in done}, eng
+
+    ref, eng_off = serve("off")
+    got, eng_ng = serve("ngram")
+    for i in range(len(prompts)):
+        assert got[i] == ref[i], f"ngram diverged on request {i}"
+    drafted = eng_ng.stats["spec_drafted"]
+    out["ngram_speculative"] = {
+        "token_exact": True,
+        "engine_steps_off": eng_off.stats["engine_steps"],
+        "engine_steps_ngram": eng_ng.stats["engine_steps"],
+        "step_reduction_x": round(eng_off.stats["engine_steps"]
+                                  / max(1, eng_ng.stats["engine_steps"]),
+                                  2),
+        "acceptance": round(eng_ng.stats["spec_accepted"]
+                            / max(1, drafted), 3),
+    }
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    rows = modeled_table()
+    rows_sw = modeled_table(window=SW)
+    payload = {
+        "geometry": {"layers": LAYERS, "hkv": HKV, "n_rep": N_REP, "dh": DH,
+                     "page_tokens": BK, "modeled_window": SW},
+        "modeled_v5e_dense": rows,
+        "modeled_v5e_sliding_window": rows_sw,
+        "kernel_smoke": kernel_smoke(),
+    }
+    # acceptance: the fused dense path beats gather per decode step on the
+    # byte model at EVERY shape (dense reads are pure page traffic, so the
+    # 3x copy charge dominates everywhere), and the shipped kernels run
+    # and agree with their references (kernel_smoke asserts parity)
+    payload["acceptance_fused_beats_gather_modeled"] = all(
+        r["fused_vs_gather_x"] > 1.0 for r in rows + rows_sw)
+    if not smoke:
+        payload["engine_measured_cpu"] = engine_measured()
+    save_result("fig9_dense_paged", payload)
+    if not smoke:
+        # only full runs refresh the cross-PR trajectory artifact
+        with open(TOP_LEVEL_JSON, "w") as f:
+            json.dump(payload, f, indent=1)
+    print(markdown_table(rows, ["ctx", "batch", "fused_us", "gather_us",
+                                "fused_vs_gather_x"]))
+    print(f"\nsliding window (W={SW}):")
+    print(markdown_table(rows_sw, ["ctx", "batch", "fused_us", "gather_us",
+                                   "fused_vs_gather_x"]))
+    print(f"\nkernel smoke: {payload['kernel_smoke']['parity']}")
+    print(f"acceptance (fused beats gather, modeled): "
+          f"{payload['acceptance_fused_beats_gather_modeled']}")
+    if not smoke:
+        print(f"engine (CPU proxy): {payload['engine_measured_cpu']}")
+    assert payload["acceptance_fused_beats_gather_modeled"]
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="modeled tables + interpret-mode kernel parity "
+                         "only (the CI fast-job invocation)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

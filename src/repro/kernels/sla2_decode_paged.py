@@ -51,12 +51,24 @@ row rides its own routed pages / length / effective linear totals, so the
 position-level mask is simultaneously the causal intra-window mask; see
 docs/speculative.md.
 
+``dense_decode_fused`` / ``dense_decode_verify`` are the DENSE
+(``mechanism='full'`` — and the dense-decoding ``sla`` / ``sparse_only``
+baselines) counterparts: the same ``(B*Hkv, W, pages)`` grid family with
+the page-table row itself as the scalar-prefetch operand — every mapped
+page streams through one online softmax per (slot, kv head, window row),
+the sliding-window / prefix-LM masks fold into the position mask, and
+``W > 1`` gives non-SLA2 stacks the multi-token verify window speculative
+decoding needs.
+
 ``paged_flash_prefill`` is the chunked-prefill counterpart: exact causal
 flash attention of one slot's chunk over its paged history, with the page
 table as the scalar-prefetch operand — replacing the ``_gather_pages``
 materialisation of a contiguous ``(B, maxP*bk, Dh)`` per-slot view.
+Sliding-window layers ride the same kernel: the window constraint is one
+more in-register mask term, and pages entirely below every query's window
+start are skipped via the validity prefetch flags.
 
-Both entry points run compiled on TPU and fall back to interpret mode on
+All entry points run compiled on TPU and fall back to interpret mode on
 CPU (``ops.default_interpret``).
 """
 from __future__ import annotations
@@ -331,6 +343,197 @@ def sla2_decode_verify(q, k_pages, v_pages, phys, jlog, valid, complete,
 
 
 # ---------------------------------------------------------------------------
+# Fused DENSE paged decode / verify (mechanism='full' and the dense-decoding
+# sla / sparse_only baselines): online softmax over the page-table pages
+# ---------------------------------------------------------------------------
+
+def _dense_decode_kernel(phys_ref, valid_ref, tnew_ref,        # SMEM
+                         q_ref, k_ref, v_ref,                  # in
+                         o_ref,                                # out
+                         acc, m_i, l_i,                        # VMEM
+                         *, block_k: int, max_p: int, hkv: int,
+                         window, prefix_len: int, sm_scale: float):
+    """Dense decode/verify kernel body over grid ``(B*Hkv, W, maxP)``.
+
+    Unlike the SLA2 kernel there is no router: every visible page of the
+    slot streams through the online softmax.  Pages with no position
+    visible to a row (beyond its length — or, with a sliding window,
+    wholly below its window start) are masked to the TRASH page in
+    ``phys`` by the caller and flagged invalid: the repeated trash index
+    collapses to one resident block (no per-page DMA) and ``valid`` skips
+    their compute.  The per-row position mask ``cols < t`` doubles as the
+    causal intra-window mask exactly as in the SLA2 verify grid;
+    ``window``/``prefix_len`` fold the sliding-window and prefix-LM
+    constraints into the same in-register mask."""
+    g = pl.program_id(0)           # slot * Hkv + kv head
+    w = pl.program_id(1)           # query row within the verify window
+    p = pl.program_id(2)           # logical page of the slot's history
+    b = g // hkv
+
+    @pl.when(p == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    t = tnew_ref[b, w]             # row length incl. this window token
+
+    @pl.when(valid_ref[b, w, p] == 1)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)     # (n_rep, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)     # (bk, Dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+
+        cols = p * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)[0]
+        vis = cols < t
+        if window is not None:
+            sw = cols >= t - window
+            if prefix_len:
+                sw = jnp.logical_or(sw, cols < prefix_len)
+            vis = jnp.logical_and(vis, sw)
+        s = jnp.where(vis[None, :], s, NEG_INF)
+
+        m_prev = m_i[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(m_new > NEG_INF * 0.5, m_new, 0.0)
+        pr = jnp.exp(s - m_safe[:, None])
+        pr = jnp.where(s > NEG_INF * 0.5, pr, 0.0)
+        corr = jnp.exp(jnp.where(m_prev > NEG_INF * 0.5, m_prev, m_safe)
+                       - m_safe)
+        l_i[...] = l_i[...] * corr + pr.sum(axis=-1)
+        acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+            pr, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_i[...] = m_new
+
+    @pl.when(p == max_p - 1)
+    def _finalize():
+        l_safe = jnp.maximum(l_i[...], 1e-20)
+        o_ref[0, 0] = (acc[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_k", "window", "prefix_len", "interpret"))
+def dense_decode_verify(q, k_pages, v_pages, page_table, t_new, *,
+                        block_k: int, window: int | None = None,
+                        prefix_len: int = 0, interpret: bool | None = None):
+    """Fused dense paged decode over a W-token window — the non-SLA2 leg of
+    the paged kernel family, sharing the ``(B*Hkv, W, pages)`` grid shape
+    of ``sla2_decode_verify`` with the page-table row replacing the routed
+    page ids as the scalar-prefetch operand.
+
+    q          : (B, Hkv, W, n_rep, Dh) window queries grouped by kv head
+                 (the GQA group rides one MXU tile, as in the SLA2 kernel)
+    k_pages    : (P, Hkv, bk, Dh) shared physical page pool
+    v_pages    : (P, Hkv, bk, Dh)
+    page_table : (B, maxP) int32 — logical block -> physical page per slot
+                 (0 = trash page for unmapped entries; masked by position)
+    t_new      : (B, W) int32 per-row token count INCLUDING the row's token
+                 — the position mask ``cols < t_new`` is simultaneously the
+                 causal intra-window mask
+    window     : static sliding-window size (None = full causal); folded
+                 into the position mask as ``cols >= t_new - window``
+    prefix_len : static prefix-LM length (prefix tokens visible through
+                 the window)
+    returns    : o (B, Hkv, W, n_rep, Dh) f32
+
+    Grid ``(B*Hkv, W, maxP)``: each (slot, kv head, row) streams the
+    slot's logical pages through one online softmax.  Pages with no
+    position visible to the row (beyond its length, or wholly below its
+    window start) are masked to the trash page in the per-row ``phys``
+    prefetch operand — the repeated index elides their DMA, so a
+    sliding-window layer's page traffic scales with the window, not the
+    context — and their compute is skipped via the ``valid`` flags."""
+    interpret = default_interpret(interpret)
+    b, hkv, wdw, n_rep, dh = q.shape
+    max_p = page_table.shape[1]
+    bk = block_k
+    g_tot = b * hkv
+    sm_scale = 1.0 / (dh ** 0.5)
+
+    t_new = t_new.astype(jnp.int32)
+    pages = jnp.arange(max_p, dtype=jnp.int32)
+    vis_any = pages[None, None, :] * bk < t_new[:, :, None]
+    if window is not None:
+        w_ok = (pages[None, None, :] + 1) * bk > t_new[:, :, None] - window
+        if prefix_len:
+            w_ok = w_ok | (pages[None, None, :] * bk < prefix_len)
+        vis_any = vis_any & w_ok
+    valid = vis_any.astype(jnp.int32)
+    # per-row physical ids with invisible pages pointed at the trash page:
+    # masking the TABLE (not just the compute) is what saves the traffic
+    phys = jnp.where(vis_any,
+                     page_table.astype(jnp.int32)[:, None, :], 0)
+
+    q_f = q.reshape(g_tot, wdw, n_rep, dh)
+    grid = (g_tot, wdw, max_p)
+    kernel = functools.partial(
+        _dense_decode_kernel, block_k=bk, max_p=max_p, hkv=hkv,
+        window=window, prefix_len=prefix_len, sm_scale=sm_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, n_rep, dh),
+                         lambda g, w, p, ph, va, tn: (g, w, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda g, w, p, ph, va, tn:
+                         (ph[g // hkv, w, p], g % hkv, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda g, w, p, ph, va, tn:
+                         (ph[g // hkv, w, p], g % hkv, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n_rep, dh),
+                         lambda g, w, p, ph, va, tn: (g, w, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_rep, dh), jnp.float32),   # acc
+            pltpu.VMEM((n_rep,), jnp.float32),      # m_i
+            pltpu.VMEM((n_rep,), jnp.float32),      # l_i
+        ],
+    )
+    (o,) = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((g_tot, wdw, n_rep, dh),
+                                        jnp.float32)],
+        interpret=interpret,
+        name="dense_decode_paged",
+    )(phys, valid, t_new, q_f, k_pages, v_pages)
+    return o.reshape(b, hkv, wdw, n_rep, dh)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_k", "window", "prefix_len", "interpret"))
+def dense_decode_fused(q, k_pages, v_pages, page_table, t_new, *,
+                       block_k: int, window: int | None = None,
+                       prefix_len: int = 0, interpret: bool | None = None):
+    """Fused dense paged decode step — the W=1 case of
+    ``dense_decode_verify`` (one query row per slot and kv head).
+
+    q        : (B, Hkv, n_rep, Dh) the new token's queries per kv head
+    t_new    : (B,) int32 per-slot token count INCLUDING the new token
+    returns  : o (B, Hkv, n_rep, Dh) f32
+
+    Replaces the jnp ``_gather_pages`` dense decode (which materialises a
+    contiguous (B, Hkv, maxP*bk, Dh) per-slot copy every step) for
+    ``mechanism='full'`` serving; the gather path stays as the parity
+    oracle (see ``models/attention.decode_step_paged``)."""
+    o = dense_decode_verify(
+        q[:, :, None], k_pages, v_pages, page_table, t_new[:, None],
+        block_k=block_k, window=window, prefix_len=prefix_len,
+        interpret=interpret)
+    return o[:, :, 0]
+
+
+# ---------------------------------------------------------------------------
 # Paged chunked-prefill flash (replaces the _gather_pages per-slot view)
 # ---------------------------------------------------------------------------
 
@@ -339,7 +542,7 @@ def _prefill_kernel(phys_ref, vpg_ref, off_ref,                   # SMEM
                     o_ref,                                        # out
                     acc, m_i, l_i,                                # VMEM
                     *, block_k: int, max_p: int, chunk: int,
-                    prefix_len: int, sm_scale: float):
+                    window, prefix_len: int, sm_scale: float):
     p = pl.program_id(1)           # logical page of this slot's history
 
     @pl.when(p == 0)
@@ -362,6 +565,12 @@ def _prefill_kernel(phys_ref, vpg_ref, off_ref,                   # SMEM
         cols = p * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (n_rows, block_k), 1)
         vis = rows >= cols
+        if window is not None:
+            # no prefix exemption needed here: the unconditional
+            # `vis |= cols < prefix_len` below already restores prefix
+            # columns ((causal & (sw | prefix)) | prefix == (causal & sw)
+            # | prefix)
+            vis = jnp.logical_and(vis, cols >= rows - window + 1)
         if prefix_len:
             vis = jnp.logical_or(vis, cols < prefix_len)
         s = jnp.where(vis, s, NEG_INF)
@@ -388,9 +597,11 @@ def _prefill_kernel(phys_ref, vpg_ref, off_ref,                   # SMEM
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_k", "n_rep", "prefix_len", "interpret"))
+    static_argnames=("block_k", "n_rep", "window", "prefix_len",
+                     "interpret"))
 def paged_flash_prefill(q, k_pages, v_pages, page_row, *, offset,
-                        block_k: int, n_rep: int, prefix_len: int = 0,
+                        block_k: int, n_rep: int,
+                        window: int | None = None, prefix_len: int = 0,
                         interpret: bool | None = None):
     """Causal flash attention of ONE slot's prefill chunk over its paged
     history, reading K/V pages straight from the pool.
@@ -403,6 +614,8 @@ def paged_flash_prefill(q, k_pages, v_pages, page_row, *, offset,
                is masked)
     offset   : scalar int32 — tokens of this slot already cached; the
                chunk's queries sit at positions [offset, offset + C)
+    window   : static sliding-window size (None = full causal) — one more
+               in-register mask term, ``cols >= rows - window + 1``
     returns  : o (H, C, Dh) f32
 
     Grid = (Hkv, maxP): program (h, p) streams logical page p of the slot
@@ -411,8 +624,9 @@ def paged_flash_prefill(q, k_pages, v_pages, page_row, *, offset,
     fetched once per KV head, not once per query head (same grouping as
     the decode kernel).  The page table is the scalar-prefetch operand
     resolving logical -> physical, so no contiguous per-slot K/V view is
-    ever materialised; pages beyond the chunk's last visible position are
-    skipped via the validity prefetch flags.
+    ever materialised; pages beyond the chunk's last visible position —
+    and, with a sliding window, pages wholly below every chunk query's
+    window start — are skipped via the validity prefetch flags.
     """
     interpret = default_interpret(interpret)
     h, c, dh = q.shape
@@ -423,7 +637,19 @@ def paged_flash_prefill(q, k_pages, v_pages, page_row, *, offset,
 
     offset = jnp.asarray(offset, jnp.int32)
     # pages whose first token could be visible to any query of the chunk
-    vpg = (jnp.arange(max_p, dtype=jnp.int32) * bk < offset + c)
+    pages = jnp.arange(max_p, dtype=jnp.int32)
+    vpg = pages * bk < offset + c
+    if window is not None:
+        # the widest window belongs to the FIRST chunk query (position
+        # offset): pages ending at or below offset - window + 1 are
+        # invisible to every query — unless the prefix keeps them live
+        w_ok = (pages + 1) * bk > offset - window + 1
+        if prefix_len:
+            w_ok = w_ok | (pages * bk < prefix_len)
+        vpg = vpg & w_ok
+    # invisible pages point at the trash page: the repeated index elides
+    # their DMA (not just their compute, which the vpg flags skip)
+    phys_row = jnp.where(vpg, page_row.astype(jnp.int32), 0)
     vpg = vpg.astype(jnp.int32)
     off_arr = offset.reshape(1)
     q_g = q.reshape(hkv, n_rep * c, dh)      # group-stacked query tile
@@ -431,7 +657,7 @@ def paged_flash_prefill(q, k_pages, v_pages, page_row, *, offset,
     grid = (hkv, max_p)
     kernel = functools.partial(
         _prefill_kernel, block_k=bk, max_p=max_p, chunk=c,
-        prefix_len=prefix_len, sm_scale=sm_scale)
+        window=window, prefix_len=prefix_len, sm_scale=sm_scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
@@ -459,5 +685,5 @@ def paged_flash_prefill(q, k_pages, v_pages, page_row, *, offset,
         out_shape=[jax.ShapeDtypeStruct((hkv, n_rep * c, dh), jnp.float32)],
         interpret=interpret,
         name="sla2_prefill_paged",
-    )(page_row.astype(jnp.int32), vpg, off_arr, q_g, k_pages, v_pages)
+    )(phys_row, vpg, off_arr, q_g, k_pages, v_pages)
     return o.reshape(h, c, dh)

@@ -37,6 +37,11 @@ Spec = jax.ShapeDtypeStruct
 
 @dataclasses.dataclass
 class Model:
+    """The uniform per-architecture handle ``build_model`` returns: config
+    plus callables for train loss, static prefill/decode, paged serving
+    (chunked prefill, per-slot decode, swap, speculative verify/commit/
+    draft) and the ShapeDtypeStruct input builders for dry-run lowering.
+    Optional fields are None when the architecture lacks that path."""
     kind: str                     # lm | vlm | audio | dit
     cfg: Any
     init: Callable
@@ -75,10 +80,12 @@ class Model:
         return build_model(dataclasses.replace(self.cfg, **overrides))
 
     def abstract_params(self, key=None):
+        """ShapeDtypeStruct pytree of the params (no allocation)."""
         k = jax.random.PRNGKey(0) if key is None else key
         return jax.eval_shape(self.init, k)
 
     def abstract_caches(self, batch: int, max_len: int):
+        """ShapeDtypeStruct pytree of the static caches (no allocation)."""
         return jax.eval_shape(
             lambda: self.init_caches(batch, max_len))
 
@@ -203,6 +210,8 @@ def _dit_model(cfg: D.DiTConfig) -> Model:
 
 
 def build_model(cfg) -> Model:
+    """Dispatch a config dataclass to its Model handle (see module
+    docstring for the uniform surface)."""
     if isinstance(cfg, D.DiTConfig):
         return _dit_model(cfg)
     if isinstance(cfg, E.EncDecConfig):

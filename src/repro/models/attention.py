@@ -31,6 +31,9 @@ from repro.models import layers as L
 
 @dataclasses.dataclass(frozen=True)
 class AttentionConfig:
+    """Per-layer attention hyperparameters: projection geometry, mechanism
+    selection, masking (causal / prefix-LM / sliding window), the SLA2
+    router/quantization knobs, and the paged-serving path switches."""
     d_model: int
     num_heads: int
     num_kv_heads: int
@@ -58,17 +61,23 @@ class AttentionConfig:
     decode_quant_bits: str = "none"    # fused decode QAT tile path
 
     def router_config(self) -> RouterConfig:
+        """The SLA2 router view of this config (block sizes, top-k
+        fraction, masking)."""
         return RouterConfig(
             block_q=self.block_q, block_k=self.block_k, k_frac=self.k_frac,
             causal=self.causal, prefix_len=self.prefix_len,
             sliding_window=self.sliding_window)
 
     def sla2_config(self) -> SLA2Config:
+        """The core SLA2 config view (router + quantization + impl)."""
         return SLA2Config(router=self.router_config(),
                           quant_bits=self.quant_bits, impl=self.sla2_impl)
 
 
 def init_attention(key, cfg: AttentionConfig, dtype=jnp.float32) -> dict:
+    """Initialise one attention layer's params: QKV/output projections,
+    optional qk-norms, and the mechanism's extra params (SLA2 router +
+    alpha table, or the SLA baseline's output projection)."""
     ks = jax.random.split(key, 6)
     d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     std = d ** -0.5
@@ -337,12 +346,59 @@ def insert_paged_state(cache: dict, page_row, slot, state: dict,
     return new
 
 
+# Backends where paged_impl='auto' resolves to the jnp gather reference:
+# Pallas runs in interpret mode there, making the XLA gather path the
+# faster proxy.  Everything else gets the fused page-table kernels.
+AUTO_GATHER_BACKENDS = ("cpu",)
+
+# The paged-attention dispatch table: for every (mechanism, phase) pair,
+# the fused Pallas entry point in kernels/sla2_decode_paged and the jnp
+# gather reference implementing it.  The dispatch sites below
+# (chunk_prefill_paged / decode_step_paged / decode_window_paged) consult
+# this table via use_fused(), and tools/gen_path_matrix.py renders the
+# docs/paths.md support matrix from it — so the documented matrix cannot
+# drift from the code without CI noticing.  Mechanisms 'sla' and
+# 'sparse_only' decode densely over the cache (same math as 'full'), so
+# they share the dense kernel family.
+PAGED_PHASES = ("prefill", "decode", "verify")
+_DENSE_PATHS = {
+    "prefill": ("paged_flash_prefill", "_gather_pages + dense chunk attn"),
+    "decode": ("dense_decode_fused", "_gather_pages + dense masked decode"),
+    "verify": ("dense_decode_verify", "_gather_pages + dense window decode"),
+}
+PAGED_DISPATCH = {
+    ("sla2", "prefill"): _DENSE_PATHS["prefill"],   # chunk attn is exact
+    ("sla2", "decode"): ("sla2_decode_fused", "_sla2_decode_paged gather"),
+    ("sla2", "verify"): ("sla2_decode_verify", "_sla2_decode_window gather"),
+    **{(m, ph): _DENSE_PATHS[ph]
+       for m in ("full", "sla", "sparse_only") for ph in PAGED_PHASES},
+}
+
+
 def resolve_paged_impl(cfg: AttentionConfig) -> str:
     """Resolve cfg.paged_impl: 'auto' picks the fused Pallas page-table
-    kernels on compiled backends and the jnp gather reference on CPU."""
+    kernels on compiled backends and the jnp gather reference on the
+    AUTO_GATHER_BACKENDS (CPU, where Pallas interprets)."""
     if cfg.paged_impl != "auto":
         return cfg.paged_impl
-    return "gather" if jax.default_backend() == "cpu" else "fused"
+    return ("gather" if jax.default_backend() in AUTO_GATHER_BACKENDS
+            else "fused")
+
+
+def fused_paged_entry(mechanism: str, phase: str):
+    """Name of the fused Pallas entry point serving (mechanism, phase) on
+    the paged path, or None when only the gather reference implements it.
+    ``phase`` is one of PAGED_PHASES."""
+    entry = PAGED_DISPATCH.get((mechanism, phase))
+    return entry[0] if entry else None
+
+
+def use_fused(cfg: AttentionConfig, phase: str) -> bool:
+    """True when ``phase`` should run the fused Pallas paged path for this
+    config — the resolved impl is 'fused' AND the dispatch table carries a
+    fused entry point for the mechanism."""
+    return (resolve_paged_impl(cfg) == "fused"
+            and fused_paged_entry(cfg.mechanism, phase) is not None)
 
 
 def _gather_pages(pages, page_table):
@@ -397,18 +453,21 @@ def chunk_prefill_paged(params: dict, cfg: AttentionConfig, x: jax.Array,
         v_new[0].astype(cache["v_pages"].dtype))
 
     # --- exact attention: chunk queries over history + chunk ---
-    if resolve_paged_impl(cfg) == "fused" and cfg.sliding_window is None:
+    if use_fused(cfg, "prefill"):
         # page-table-aware flash: the kernel's index maps resolve logical ->
         # physical through page_row, so K/V pages are read in place and the
-        # contiguous (1, maxP*bk, Dh) per-slot view is never materialised
+        # contiguous (1, maxP*bk, Dh) per-slot view is never materialised;
+        # sliding-window / prefix-LM masks fold into the kernel's
+        # in-register mask
         from repro.kernels.sla2_decode_paged import paged_flash_prefill
         o = paged_flash_prefill(
             q.transpose(0, 2, 1, 3)[0], cache["k_pages"], cache["v_pages"],
             page_row, offset=offset, block_k=bk, n_rep=n_rep,
-            prefix_len=cfg.prefix_len)
+            window=cfg.sliding_window, prefix_len=cfg.prefix_len)
         o = o.astype(x.dtype).transpose(1, 0, 2).reshape(1, c, h * dh)
     else:
-        # gather fallback: sliding-window masks need the full per-slot view
+        # jnp gather reference (parity oracle): dense masked attention over
+        # the materialised per-slot view
         k_all = _repeat_kv(_gather_pages(cache["k_pages"], page_row[None]),
                            n_rep)
         v_all = _repeat_kv(_gather_pages(cache["v_pages"], page_row[None]),
@@ -489,7 +548,19 @@ def decode_step_paged(params: dict, cfg: AttentionConfig, x_t: jax.Array,
     if cfg.mechanism == "sla2":
         o = _sla2_decode_paged(params, cfg, q, cache, page_table, phys_w,
                                t_new, active)
+    elif use_fused(cfg, "decode"):
+        # fused dense paged decode: every mapped page streams through one
+        # online-softmax pass (sliding window / prefix in the position
+        # mask) — no per-slot _gather_pages copy
+        from repro.kernels.sla2_decode_paged import dense_decode_fused
+        o = dense_decode_fused(
+            q[:, :, 0].reshape(b, hkv, n_rep, dh),
+            cache["k_pages"], cache["v_pages"], page_table, t_new,
+            block_k=bk, window=cfg.sliding_window,
+            prefix_len=cfg.prefix_len)
+        o = o.reshape(b, h, dh)[:, :, None, :]
     else:
+        # jnp gather reference (parity oracle for the dense fused kernel)
         k_all = _repeat_kv(_gather_pages(cache["k_pages"], page_table), n_rep)
         v_all = _repeat_kv(_gather_pages(cache["v_pages"], page_table), n_rep)
         s = jnp.einsum("bhqd,bhmd->bhqm", q.astype(jnp.float32),
@@ -567,7 +638,7 @@ def _sla2_decode_paged(params: dict, cfg: AttentionConfig, q, cache,
     complete_bound = cur_blk + jnp.where(completed, 1, 0)
     sel_complete = valid & (idx < complete_bound[:, None, None])
 
-    if resolve_paged_impl(cfg) == "fused":
+    if use_fused(cfg, "decode"):
         # fused Pallas kernel: one HBM traversal of the selected pages does
         # sparse flash + the linear complement subtraction + alpha combine
         from repro.kernels.sla2_decode_paged import sla2_decode_fused
@@ -681,7 +752,20 @@ def decode_window_paged(params: dict, cfg: AttentionConfig, x_w: jax.Array,
         o = _sla2_decode_window(params, cfg, q, cache, page_table, t_new,
                                 lengths)
         o = o.astype(x_w.dtype).reshape(b, wdw, h * dh)
+    elif use_fused(cfg, "verify"):
+        # fused dense verify: the dense decode grid at W query rows — the
+        # per-row position mask is the causal intra-window mask, giving
+        # non-SLA2 stacks a multi-token verify window with no gather
+        from repro.kernels.sla2_decode_paged import dense_decode_verify
+        o = dense_decode_verify(
+            q.reshape(b, hkv, n_rep, wdw, dh).transpose(0, 1, 3, 2, 4),
+            cache["k_pages"], cache["v_pages"], page_table, t_new,
+            block_k=bk, window=cfg.sliding_window,
+            prefix_len=cfg.prefix_len)
+        o = o.transpose(0, 2, 1, 3, 4).astype(x_w.dtype) \
+            .reshape(b, wdw, h * dh)
     else:
+        # jnp gather reference (parity oracle for the dense verify kernel)
         k_all = _repeat_kv(_gather_pages(cache["k_pages"], page_table),
                            n_rep)
         v_all = _repeat_kv(_gather_pages(cache["v_pages"], page_table),
@@ -790,7 +874,7 @@ def _sla2_decode_window(params: dict, cfg: AttentionConfig, q, cache,
     complete_bound = cur_blk + jnp.where(completed, 1, 0)
     sel_complete = valid & (idx < complete_bound[:, :, None, None])
 
-    if resolve_paged_impl(cfg) == "fused":
+    if use_fused(cfg, "verify"):
         # one Pallas pass over the routed pages for ALL window rows: the
         # decode grid extended from 1 to W query rows per (slot, kv head)
         from repro.kernels.sla2_decode_paged import sla2_decode_verify

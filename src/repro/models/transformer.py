@@ -40,6 +40,9 @@ from repro.core import maps
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
+    """One decoder-only architecture: layer layout, attention mechanism and
+    masking, SLA2 knobs, paged-serving switches, and training/system
+    fields.  See the module docstring for the layer-kind vocabulary."""
     name: str = "model"
     family: str = "dense"           # dense|moe|ssm|hybrid|vlm|audio|dit
     n_layers: int = 2
@@ -94,16 +97,19 @@ class ModelConfig:
     # ------------------------------------------------------------------
     @property
     def param_dtype(self):
+        """The parameter dtype as a jnp dtype object."""
         return jnp.dtype(self.dtype)
 
     @property
     def n_groups(self) -> int:
+        """Number of scanned layer groups (body layers / group size)."""
         body = self.n_layers - len(self.first_kinds)
         assert body % len(self.layer_kinds) == 0, \
             f"{body} layers not divisible by group {self.layer_kinds}"
         return body // len(self.layer_kinds)
 
     def attention_config(self) -> A.AttentionConfig:
+        """The per-layer attention view of this model config."""
         return A.AttentionConfig(
             d_model=self.d_model, num_heads=self.num_heads,
             num_kv_heads=self.num_kv_heads, head_dim=self.head_dim,
@@ -118,6 +124,8 @@ class ModelConfig:
             decode_quant_bits=self.decode_quant_bits)
 
     def sla2_config(self):
+        """The core SLA2 config view, with the model-level chunking and
+        branch-fusion knobs applied."""
         cfg = self.attention_config().sla2_config()
         return dataclasses.replace(cfg, q_chunk=self.q_chunk,
                                    fuse_branches=self.fuse_branches)
@@ -164,6 +172,8 @@ def _init_group(key, cfg: ModelConfig) -> dict:
 
 
 def init_model(key, cfg: ModelConfig) -> dict:
+    """Initialise the full parameter pytree: embeddings, prefix layers,
+    the stacked scan groups, and the final norm / untied head."""
     k_e, k_f, k_g, k_h = jax.random.split(key, 4)
     dt = cfg.param_dtype
     params: dict[str, Any] = {
@@ -267,6 +277,7 @@ def forward(params: dict, cfg: ModelConfig, tokens=None, *,
 
 
 def logits_from_hidden(params: dict, cfg: ModelConfig, hidden):
+    """Unembed hidden states to vocab logits (tied or untied head)."""
     if cfg.tie_embeddings:
         return L.unembed(params["embed"], hidden)
     return hidden.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
@@ -335,6 +346,8 @@ def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
                 dtype=jnp.bfloat16) -> dict:
+    """Static (non-paged) decode caches for every layer, mirroring the
+    param layout (prefix layers unrolled, groups stacked for scan)."""
     caches: dict[str, Any] = {}
     if cfg.first_kinds:
         caches["prefix_layers"] = [

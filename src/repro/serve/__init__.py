@@ -4,5 +4,6 @@ from repro.serve.engine import (EngineConfig, PageAllocator, Request,
                                 Scheduler, ServeEngine, StaticWaveEngine,
                                 SwapPool, generate_sequential,
                                 make_mixed_requests)
-from repro.serve.speculative import (LinearDrafter, greedy_accept,
+from repro.serve.speculative import (LinearDrafter, NGramDrafter,
+                                     greedy_accept, ngram_propose,
                                      rejection_sample)

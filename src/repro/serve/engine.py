@@ -91,12 +91,17 @@ class EngineConfig:
     swap_pages: Optional[int] = None
     # speculative decoding: 'off' = every decode dispatch advances each
     # slot by exactly one token; 'linear' = draft `draft_len` tokens per
-    # slot through the SLA2 linear branch (no page reads), then verify the
-    # whole window in ONE multi-token paged pass — a dispatch advances a
-    # slot by 1..draft_len+1 tokens (see docs/speculative.md; requires
-    # mechanism='sla2').  Greedy outputs stay token-identical to 'off'.
+    # slot through the SLA2 linear branch (no page reads; requires
+    # mechanism='sla2'); 'ngram' = model-free prompt-lookup drafting over
+    # each slot's token history (works on ANY paged stack, incl.
+    # mechanism='full').  Either way the whole window is verified in ONE
+    # multi-token paged pass — a dispatch advances a slot by
+    # 1..draft_len+1 tokens (see docs/speculative.md).  Greedy outputs
+    # stay token-identical to 'off' for both drafters.
     speculative: str = "off"
     draft_len: int = 3
+    # longest suffix n-gram the 'ngram' drafter tries to match
+    ngram_max: int = 3
 
 
 def _sample_tokens(logits: np.ndarray, temperature: float,
@@ -378,15 +383,11 @@ class ServeEngine:
             self._swap_out_fn, self._swap_in_fn = model._swap_fns
         else:
             self._swap_out_fn = self._swap_in_fn = None
-        if ecfg.speculative not in ("off", "linear"):
+        if ecfg.speculative not in ("off", "linear", "ngram"):
             raise ValueError(f"unknown speculative mode {ecfg.speculative!r}")
-        self._spec = ecfg.speculative == "linear"
+        self._spec = ecfg.speculative != "off"
         if self._spec:
-            from repro.serve.speculative import LinearDrafter
-            if model.draft_init is None:
-                raise ValueError(
-                    "speculative='linear' requires an SLA2 attention stack "
-                    f"(got mechanism={model.cfg.mechanism!r})")
+            from repro.serve.speculative import LinearDrafter, NGramDrafter
             if ecfg.draft_len < 1:
                 raise ValueError("draft_len must be >= 1")
             if not hasattr(model, "_spec_step_fns"):
@@ -394,7 +395,17 @@ class ServeEngine:
                     jax.jit(lambda p, b, c: model.decode_verify(p, b, c)),
                     jax.jit(model.commit_window, static_argnums=(5,)))
             self._verify_fn, self._commit_fn = model._spec_step_fns
-            self._drafter = LinearDrafter(model, ecfg.temperature)
+            if ecfg.speculative == "linear":
+                if model.draft_init is None:
+                    raise ValueError(
+                        "speculative='linear' requires an SLA2 attention "
+                        f"stack (got mechanism={model.cfg.mechanism!r})")
+                self._drafter = LinearDrafter(model, ecfg.temperature)
+            else:
+                # model-free drafting: any stack with a paged verify path
+                self._drafter = NGramDrafter(model.cfg.vocab_size,
+                                             max_ngram=ecfg.ngram_max,
+                                             temperature=ecfg.temperature)
 
     # ------------------------------------------------------------------
     @property
@@ -646,13 +657,23 @@ class ServeEngine:
         return self._decode_step_single()
 
     def _draft(self, tokens0, active):
-        """Draft ``draft_len`` tokens per active slot through the linear
-        branch (numpy results; patched out by the forced-reject tests)."""
+        """Draft ``draft_len`` tokens per active slot through the
+        configured drafter — the SLA2 linear branch ('linear') or prompt
+        lookup over the slot token histories ('ngram').  Numpy results;
+        patched out by the forced-reject tests."""
+        history = None
+        if getattr(self._drafter, "needs_history", False):
+            history = [None] * self.cfg.max_slots
+            for slot, s in self._slots.items():
+                if active[slot]:
+                    history[slot] = np.concatenate(
+                        [s.tokens, np.asarray(s.req.output or [],
+                                              np.int32)])
         return self._drafter.propose(
             self.params, self.caches,
             page_table=self._page_table, lengths=self._lengths,
             active=active, tokens0=tokens0, k=self.cfg.draft_len,
-            rng=self._rng)
+            rng=self._rng, history=history)
 
     def _decode_step_speculative(self):
         """One multi-token decode dispatch: draft through the linear

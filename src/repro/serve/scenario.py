@@ -52,15 +52,18 @@ def overcommit_workload(*, max_slots: int, page_size: int,
 def make_paged_attention_state(hkv: int = 2, lengths=(37, 16, 70), *,
                                num_heads: int = 4, d_model: int = 64,
                                head_dim: int = 16, max_p: int = 8,
-                               seed: int = 0):
-    """Build (cfg, params, cache, page_table, x_t) for one SLA2 attention
-    layer: per-slot prompts of ``lengths`` tokens prefilled chunk by chunk
-    into a shared pool (trash page 0, pages allocated densely per slot),
-    plus a random decode-step input ``x_t`` of shape (B, 1, d_model)."""
+                               seed: int = 0, mechanism: str = "sla2",
+                               sliding_window=None):
+    """Build (cfg, params, cache, page_table, x_t) for one attention
+    layer (``mechanism`` sla2 by default; 'full' builds the dense paged
+    baseline, optionally sliding-windowed): per-slot prompts of
+    ``lengths`` tokens prefilled chunk by chunk into a shared pool (trash
+    page 0, pages allocated densely per slot), plus a random decode-step
+    input ``x_t`` of shape (B, 1, d_model)."""
     cfg = A.AttentionConfig(
         d_model=d_model, num_heads=num_heads, num_kv_heads=hkv,
-        head_dim=head_dim, mechanism="sla2", block_q=32, block_k=16,
-        k_frac=0.25, n_q_blocks=8)
+        head_dim=head_dim, mechanism=mechanism, block_q=32, block_k=16,
+        k_frac=0.25, n_q_blocks=8, sliding_window=sliding_window)
     params = A.init_attention(jax.random.PRNGKey(seed), cfg)
     b = len(lengths)
     pt = np.zeros((b, max_p), np.int32)

@@ -1,22 +1,30 @@
-"""Self-speculative decoding: linear-branch drafting + rejection sampling.
+"""Speculative-decoding drafters + rejection sampling.
 
-SLA2's decomposition already contains a cheap approximation of full
-attention: the linear branch keeps running ``phi(k)·v`` totals per slot, so
-a forward pass that uses ONLY the linear branch needs no page-pool reads
-and costs O(d^2) per token per layer.  Self-speculative decoding exploits
-that: draft ``draft_len`` tokens through the linear branch (this module),
-then verify the whole window with the full sparse+linear attention in ONE
-multi-token paged pass (``Model.decode_verify`` over the
-``sla2_decode_verify`` kernel / its jnp gather oracle).
+Two drafters share one interface (``propose``) and one verify/commit/
+rollback machinery (``Model.decode_verify`` over the multi-token paged
+kernels / their jnp gather oracles):
 
-The drafter seeds per-layer *speculative* totals from the committed cache
-state (complete-block totals + the current partial block read from its
-page) and advances a private copy token by token — the cache itself is
-never touched, so rejecting any part of a draft needs no rollback work:
-the speculative totals are simply dropped at the end of the engine step.
+  * ``LinearDrafter`` — self-speculative drafting for SLA2 stacks.  The
+    linear branch keeps running ``phi(k)·v`` totals per slot, so a forward
+    pass that uses ONLY the linear branch needs no page-pool reads and
+    costs O(d^2) per token per layer.  The drafter seeds per-layer
+    *speculative* totals from the committed cache state (complete-block
+    totals + the current partial block read from its page) and advances a
+    private copy token by token — the cache itself is never touched, so
+    rejecting any part of a draft needs no rollback work: the speculative
+    totals are simply dropped at the end of the engine step.
+
+  * ``NGramDrafter`` — model-free prompt-lookup drafting for stacks with
+    no linear branch (``mechanism='full'`` and the other dense-decoding
+    baselines): the longest suffix n-gram of the slot's token history is
+    matched against its most recent earlier occurrence and the tokens that
+    followed it are proposed.  Zero device work per draft token; the dense
+    verify window (``dense_decode_verify``) does all the model compute.
+
 Acceptance follows standard speculative rejection sampling
 (``rejection_sample``): greedy decoding reduces to exact argmax matching,
-which keeps speculative serving token-identical to plain decode.
+which keeps speculative serving token-identical to plain decode for BOTH
+drafters.
 
 See docs/speculative.md for the full draft -> verify -> commit lifecycle
 and its interaction with the preemption scheduler.
@@ -140,11 +148,14 @@ class LinearDrafter:
         return jax.jit(propose)
 
     def propose(self, params, caches, *, page_table, lengths, active,
-                tokens0, k: int, rng: Optional[np.random.Generator] = None):
+                tokens0, k: int, rng: Optional[np.random.Generator] = None,
+                history=None):
         """Draft ``k`` tokens for every active slot, starting from each
         slot's last accepted token.  Draft token i sits at position
         ``lengths + i + 1`` (``tokens0`` itself at ``lengths``).  Returns
-        numpy ``(draft_tokens (B, k), draft_logits (B, k, V))``."""
+        numpy ``(draft_tokens (B, k), draft_logits (B, k, V))``.
+        ``history`` is part of the shared drafter interface and unused
+        here — the linear branch drafts from cache state, not tokens."""
         key = (k, self.temperature)     # the graph bakes the temperature in
         if key not in self._fns:
             self._fns[key] = self._build(k)
@@ -160,3 +171,72 @@ class LinearDrafter:
             params, caches, jnp.asarray(page_table), jnp.asarray(lengths),
             jnp.asarray(active), jnp.asarray(tokens0), gumbel)
         return np.asarray(d_toks), np.asarray(d_logits)
+
+
+def ngram_propose(ctx, k: int, max_ngram: int) -> np.ndarray:
+    """Propose ``k`` continuation tokens for a token history ``ctx`` by
+    prompt lookup: match the longest suffix n-gram (n from ``max_ngram``
+    down to 1) against its most recent EARLIER occurrence in ``ctx`` and
+    return the tokens that followed it, padded by repeating the last
+    token.  With no match at any n the fallback repeats the last token
+    ``k`` times — a worst-case draft still only costs rejected rows.
+    Returns (k,) int32."""
+    ctx = np.asarray(ctx, np.int32)
+    out = np.full((k,), int(ctx[-1]), np.int32)
+    for n in range(min(max_ngram, len(ctx) - 1), 0, -1):
+        pat = ctx[-n:]
+        # all length-n windows except the suffix itself
+        wins = np.lib.stride_tricks.sliding_window_view(ctx, n)[:-1]
+        hits = np.nonzero((wins == pat).all(axis=1))[0]
+        if hits.size:
+            start = int(hits[-1]) + n        # token right after the match
+            cont = ctx[start:start + k]      # non-empty: start < len(ctx)
+            out[:len(cont)] = cont
+            break
+    return out
+
+
+class NGramDrafter:
+    """Model-free prompt-lookup drafter for stacks without a linear branch
+    (``EngineConfig.speculative='ngram'``).
+
+    Shares ``LinearDrafter``'s ``propose`` interface so the engine's
+    draft -> verify -> accept -> commit machinery is drafter-agnostic; the
+    proposals come from ``ngram_propose`` over each slot's token history
+    (prompt + generated tokens, supplied by the engine via ``history``) —
+    no device work at all.  Draft logits are a near-one-hot distribution
+    on the proposed token, which is the correct ``q`` for a deterministic
+    drafter under ``rejection_sample``: greedy acceptance never reads
+    them, and at temperature > 0 the accept probability reduces to
+    ``p(draft)`` with the residual resample falling back to the target
+    distribution.  ``rejection_sample`` divides logits by the
+    temperature before its softmax, so the stored logit is pre-scaled by
+    ``max(1, temperature)`` — q(draft) stays ~1 at any temperature
+    instead of collapsing (which would over-accept drafted tokens)."""
+
+    needs_history = True
+
+    def __init__(self, vocab_size: int, max_ngram: int = 3,
+                 temperature: float = 0.0, draft_logit: float = 50.0):
+        self.vocab_size = int(vocab_size)
+        self.max_ngram = int(max_ngram)
+        self.draft_logit = float(draft_logit) * max(1.0, float(temperature))
+
+    def propose(self, params, caches, *, page_table, lengths, active,
+                tokens0, k: int, rng: Optional[np.random.Generator] = None,
+                history=None):
+        """Draft ``k`` tokens per active slot from ``history`` (a list of
+        per-slot token arrays, None for inactive slots).  The model/cache
+        arguments are part of the shared drafter interface and unused.
+        Returns numpy ``(draft_tokens (B, k), draft_logits (B, k, V))``."""
+        assert history is not None, "NGramDrafter needs the engine history"
+        b = int(np.asarray(tokens0).shape[0])
+        toks = np.zeros((b, k), np.int32)
+        logits = np.zeros((b, k, self.vocab_size), np.float32)
+        for s in range(b):
+            if not active[s] or history[s] is None or len(history[s]) == 0:
+                continue
+            prop = ngram_propose(history[s], k, self.max_ngram)
+            toks[s] = prop
+            logits[s, np.arange(k), prop] = self.draft_logit
+        return toks, logits

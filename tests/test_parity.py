@@ -84,11 +84,13 @@ def test_parity_holds_under_alpha_extremes(causal):
 from repro.serve.scenario import make_paged_attention_state as _paged_state_builder  # noqa: E501
 
 
-def _paged_state(hkv, lengths, *, seed=0, num_heads=4):
+def _paged_state(hkv, lengths, *, seed=0, num_heads=4, mechanism="sla2",
+                 sliding_window=None):
     """Multi-slot paged attention state built through the real chunked
     prefill path: ragged per-slot lengths, shared pool, trash page 0."""
     return _paged_state_builder(hkv, tuple(lengths), num_heads=num_heads,
-                                seed=seed)
+                                seed=seed, mechanism=mechanism,
+                                sliding_window=sliding_window)
 
 
 def _decode_both(cfg, params, cache, pt, x_t, lengths, active, quant="none"):
@@ -198,13 +200,16 @@ def test_verify_kernel_matches_gather_window():
     np.testing.assert_allclose(outs["gather"], np.stack(seq, 1), atol=5e-5)
 
 
-def test_dense_window_matches_sequential_decode():
+@pytest.mark.parametrize("impl", ["gather", "fused"])
+def test_dense_window_matches_sequential_decode(impl):
     """The dense (mechanism='full') branch of decode_window_paged — used by
     Model.decode_verify on non-SLA2 stacks — equals W sequential dense
-    single-token decodes over the same pages."""
+    single-token decodes over the same pages, on both the gather oracle
+    and the fused dense_decode_verify kernel."""
     wdw, b, d_model, n = 3, 2, 64, 24
     cfg = A.AttentionConfig(d_model=d_model, num_heads=4, num_kv_heads=2,
-                            head_dim=16, mechanism="full", block_k=16)
+                            head_dim=16, mechanism="full", block_k=16,
+                            paged_impl=impl)
     params = A.init_attention(jax.random.PRNGKey(0), cfg)
     cache = A.init_paged_cache(cfg, 8, b, dtype=jnp.float32)
     pt = jnp.asarray([[1, 2, 0, 0], [3, 4, 0, 0]], jnp.int32)
@@ -222,10 +227,12 @@ def test_dense_window_matches_sequential_decode():
                                    page_table=pt, lengths=ln, active=act,
                                    window_len=jnp.full((b,), wdw,
                                                        jnp.int32))
+    # sequential oracle always runs the gather path: cross-impl identity
+    gcfg = dataclasses.replace(cfg, paged_impl="gather")
     c_seq = dict(cache)
     seq = []
     for w in range(wdw):
-        y, c_seq = A.decode_step_paged(params, cfg, x_w[:, w:w + 1],
+        y, c_seq = A.decode_step_paged(params, gcfg, x_w[:, w:w + 1],
                                        c_seq, page_table=pt,
                                        lengths=ln + w, active=act)
         seq.append(np.asarray(y, np.float32)[:, 0])
@@ -313,3 +320,123 @@ def test_fused_chunk_prefill_matches_gather():
             slot=jnp.asarray(0, jnp.int32))
         outs[impl] = np.asarray(y, np.float32)[:, :20]
     np.testing.assert_allclose(outs["fused"], outs["gather"], atol=5e-5)
+
+
+# ===========================================================================
+# Dense fused paged decode / sliding-window fused prefill (mechanism='full')
+# ===========================================================================
+
+@pytest.mark.parametrize("hkv", [1, 2, 4])
+def test_dense_fused_decode_matches_gather_across_gqa(hkv):
+    """Fused dense paged decode (dense_decode_fused: online softmax over
+    the page-table pages, no _gather_pages copy) == the jnp gather dense
+    decode for GQA ratios 4/2/1 over ragged slot lengths."""
+    lengths = [37, 16, 70]
+    cfg, params, cache, pt, x_t = _paged_state(hkv, lengths,
+                                               mechanism="full")
+    outs = _decode_both(cfg, params, cache, pt, x_t, lengths,
+                        [True] * len(lengths))
+    np.testing.assert_allclose(outs["fused"], outs["gather"], atol=5e-5,
+                               err_msg=f"hkv={hkv}")
+
+
+@pytest.mark.parametrize("window", [10, 40])
+def test_dense_fused_decode_sliding_window(window):
+    """Sliding-window dense decode: the window mask folded into the fused
+    kernel's position mask == the gather reference, for windows smaller
+    and larger than a page (page = 16 tokens)."""
+    lengths = [37, 16, 70]
+    cfg, params, cache, pt, x_t = _paged_state(
+        2, lengths, mechanism="full", sliding_window=window)
+    outs = _decode_both(cfg, params, cache, pt, x_t, lengths,
+                        [True] * len(lengths))
+    np.testing.assert_allclose(outs["fused"], outs["gather"], atol=5e-5,
+                               err_msg=f"window={window}")
+
+
+def test_dense_fused_decode_inactive_and_recycled_slot():
+    """Inactive rows and a recycled slot (re-prefilled at offset 0 over
+    the same physical pages) keep dense fused == gather for every active
+    row — mirrors the SLA2 recycling test on the dense kernel."""
+    lengths = [37, 16, 70]
+    cfg, params, cache, pt, x_t = _paged_state(2, lengths,
+                                               mechanism="full")
+    active = [True, False, True]
+    outs = _decode_both(cfg, params, cache, pt, x_t, lengths, active)
+    np.testing.assert_allclose(outs["fused"][[0, 2]], outs["gather"][[0, 2]],
+                               atol=5e-5)
+    x_new = jax.random.normal(jax.random.PRNGKey(9), (1, 32, 64)) * 0.3
+    _, cache = A.chunk_prefill_paged(
+        params, cfg, x_new, cache, page_row=pt[1],
+        offset=jnp.asarray(0, jnp.int32),
+        chunk_len=jnp.asarray(21, jnp.int32), slot=jnp.asarray(1, jnp.int32))
+    lengths2 = [37, 21, 70]
+    outs2 = _decode_both(cfg, params, cache, pt, x_t, lengths2, [True] * 3)
+    np.testing.assert_allclose(outs2["fused"], outs2["gather"], atol=5e-5)
+
+
+def test_dense_fused_decode_token_identity_sequential(full_attn_smoke,
+                                                      make_prompts,
+                                                      serve_mixed):
+    """End to end: a dense ServeEngine on the fused paged path emits
+    exactly the tokens of unbatched sequential decode — the dense kernel
+    is invisible in the outputs, not just close in float."""
+    from repro.serve import generate_sequential
+
+    cfg, model, params = full_attn_smoke
+    prompts = make_prompts(cfg, [5, 37, 17], seed=2)
+    ref = [generate_sequential(model, params, p, max_new_tokens=6,
+                               max_len=192) for p in prompts]
+    out, _ = serve_mixed(model, params, prompts, max_new=6, max_slots=2,
+                         paged_impl="fused")
+    for i in range(len(prompts)):
+        assert out[i] == ref[i], f"request {i} diverged on fused dense"
+
+
+@pytest.mark.parametrize("window", [10, 40])
+def test_sliding_window_fused_prefill_matches_gather(window):
+    """Sliding-window chunked prefill rides the fused page-table flash
+    (no more dense per-slot fallback): fused == gather on the valid chunk
+    rows, for windows smaller and larger than a page, at a mid-page
+    ragged offset."""
+    lengths = [37]
+    cfg, params, cache, pt, _ = _paged_state(
+        2, lengths, mechanism="full", sliding_window=window)
+    pt = pt.at[0, 3].set(int(pt.max()) + 1)     # page for the chunk tail
+    x_new = jax.random.normal(jax.random.PRNGKey(5), (1, 32, 64)) * 0.3
+    outs = {}
+    for impl in ("fused", "gather"):
+        c = dataclasses.replace(cfg, paged_impl=impl)
+        y, _ = A.chunk_prefill_paged(
+            params, c, x_new, dict(cache), page_row=pt[0],
+            offset=jnp.asarray(32, jnp.int32),
+            chunk_len=jnp.asarray(20, jnp.int32),
+            slot=jnp.asarray(0, jnp.int32))
+        outs[impl] = np.asarray(y, np.float32)[:, :20]
+    np.testing.assert_allclose(outs["fused"], outs["gather"], atol=5e-5,
+                               err_msg=f"window={window}")
+
+
+def test_sliding_window_fused_prefill_sla2_state():
+    """A sliding-window SLA2 layer prefills through the fused path too:
+    outputs AND the block state the chunk writes (pooled keys, linear
+    totals) match the gather path bit-for-bit-close."""
+    lengths = [37, 16]
+    cfg, params, cache, pt, _ = _paged_state(2, lengths,
+                                             sliding_window=24)
+    x_new = jax.random.normal(jax.random.PRNGKey(7), (1, 32, 64)) * 0.3
+    outs, caches = {}, {}
+    for impl in ("fused", "gather"):
+        c = dataclasses.replace(cfg, paged_impl=impl)
+        y, cc = A.chunk_prefill_paged(
+            params, c, x_new, dict(cache), page_row=pt[0],
+            offset=jnp.asarray(32, jnp.int32),
+            chunk_len=jnp.asarray(20, jnp.int32),
+            slot=jnp.asarray(0, jnp.int32))
+        outs[impl], caches[impl] = np.asarray(y, np.float32)[:, :20], cc
+    np.testing.assert_allclose(outs["fused"], outs["gather"], atol=5e-5)
+    for key in ("pooled_pages", "h_tot", "z_tot"):
+        np.testing.assert_allclose(
+            np.asarray(caches["fused"][key], np.float32),
+            np.asarray(caches["gather"][key], np.float32), atol=1e-5,
+            err_msg=key)

@@ -209,3 +209,111 @@ def test_window_len_caps_by_budget_and_replay(qwen3_smoke, qwen3_params):
     assert eng._window_len(mk(budget=99)) == 4
     assert eng._window_len(mk(budget=99, replay=[7])) == 2
     assert eng._window_len(mk(budget=99, replay=[7] * 10)) == 4
+
+
+# ---------------------------------------------------------------------------
+# n-gram drafting (speculative='ngram'): model-free prompt lookup on dense
+# stacks through the same verify/commit/rollback machinery
+# ---------------------------------------------------------------------------
+
+def test_ngram_speculative_matches_plain_decode(full_attn_smoke,
+                                                make_prompts):
+    """Greedy n-gram speculative serving on a DENSE stack (no linear
+    branch) emits exactly the tokens of non-speculative serving, on both
+    the fused dense verify kernel and the jnp gather oracle, with a late
+    joiner in the mix."""
+    cfg, model, params = full_attn_smoke
+    prompts = make_prompts(cfg, [7, 45, 21], seed=21)
+    ref, _ = _serve_spec(model, params, prompts, late_idx=2, max_slots=2,
+                         speculative="off")
+    for impl in ("gather", "fused"):
+        out, eng = _serve_spec(model, params, prompts, late_idx=2,
+                               max_slots=2, speculative="ngram",
+                               draft_len=3, paged_impl=impl)
+        for i in range(len(prompts)):
+            assert out[i] == ref[i], f"request {i} diverged ({impl})"
+        assert eng.stats["spec_steps"] > 0
+        assert eng.stats["spec_drafted"] > 0
+
+
+def test_ngram_speculative_preemption_exact(full_attn_smoke, make_prompts):
+    """Pool sized below demand forces mid-draft preemption (uncommitted
+    window discarded, swap-resume): greedy n-gram speculative outputs stay
+    token-identical to plain decode on the dense stack."""
+    cfg, model, params = full_attn_smoke
+    prompts = make_prompts(cfg, [20, 35, 28, 40], seed=22)
+    ref, _ = _serve_spec(model, params, prompts, late_idx=3, max_slots=3,
+                         speculative="off", num_pages=8)
+    out, eng = _serve_spec(model, params, prompts, late_idx=3, max_slots=3,
+                           speculative="ngram", draft_len=3, num_pages=8)
+    assert eng.stats["preemptions"] > 0
+    for i in range(len(prompts)):
+        assert out[i] == ref[i], f"request {i} diverged across preemption"
+    assert eng.allocator.available == eng.allocator.num_pages - 1
+
+
+def test_ngram_on_sla2_stack(qwen3_smoke, qwen3_params, make_prompts):
+    """'ngram' is mechanism-agnostic: it also serves an SLA2 stack
+    token-identically (the drafter never touches the model).  Acceptance
+    on random weights is workload-dependent, so only draft counting is
+    asserted."""
+    cfg, model = qwen3_smoke
+    prompts = make_prompts(cfg, [9, 33], seed=23)
+    ref, _ = _serve_spec(model, qwen3_params, prompts, max_slots=2,
+                         speculative="off")
+    out, eng = _serve_spec(model, qwen3_params, prompts, max_slots=2,
+                           speculative="ngram", draft_len=3)
+    for i in range(len(prompts)):
+        assert out[i] == ref[i], f"request {i} diverged (ngram on sla2)"
+    assert eng.stats["spec_drafted"] > 0
+
+
+def test_ngram_propose_units():
+    """Longest-suffix matching, most-recent occurrence, padding and the
+    no-match fallback."""
+    from repro.serve import ngram_propose
+
+    # period-3 repetition: continuation after the latest [1, 2, 3] match
+    ctx = np.array([5, 1, 2, 3, 9, 1, 2, 3], np.int32)
+    assert ngram_propose(ctx, 3, 3).tolist() == [9, 1, 2]
+    # the MOST RECENT earlier occurrence wins (not the first)
+    ctx = np.array([1, 2, 7, 1, 2, 8, 1, 2], np.int32)
+    assert ngram_propose(ctx, 1, 2).tolist() == [8]
+    # shorter n-gram used when the longest suffix never re-occurred: the
+    # most recent earlier [4] sits at index 1, continuation [9, 4]
+    ctx = np.array([4, 4, 9, 4], np.int32)
+    assert ngram_propose(ctx, 2, 3).tolist() == [9, 4]
+    # continuation shorter than k: padded by repeating the last token
+    ctx = np.array([3, 7, 3], np.int32)
+    assert ngram_propose(ctx, 4, 1).tolist() == [7, 3, 3, 3]
+    # no match at any n: repeat the last token
+    ctx = np.array([6], np.int32)
+    assert ngram_propose(ctx, 2, 3).tolist() == [6, 6]
+
+
+def test_ngram_gating(full_attn_smoke):
+    """'ngram' constructs on a dense stack (where 'linear' refuses); the
+    engine still rejects unknown speculative modes."""
+    cfg, model, params = full_attn_smoke
+    eng = ServeEngine(model, EngineConfig(speculative="ngram"))
+    assert eng._spec
+    with pytest.raises(ValueError):
+        ServeEngine(model, EngineConfig(speculative="linear"))
+
+
+def test_ngram_draft_q_stays_one_hot_at_high_temperature():
+    """rejection_sample divides draft logits by the temperature, so the
+    drafter pre-scales its near-one-hot logit — q(draft) must stay ~1 at
+    high temperature (a collapsed q would over-accept drafted tokens and
+    bias sampled outputs toward repetition)."""
+    from repro.serve import NGramDrafter
+    from repro.serve.speculative import _softmax
+
+    d = NGramDrafter(vocab_size=50_000, temperature=5.0)
+    toks, logits = d.propose(
+        None, None, page_table=None, lengths=None, active=[True],
+        tokens0=np.zeros((1,), np.int32), k=2,
+        history=[np.array([1, 2, 3, 1, 2], np.int32)])
+    assert toks[0].tolist() == [3, 1]
+    q = _softmax(logits[0, 0], 5.0)
+    assert q[toks[0, 0]] > 0.999

@@ -9,12 +9,15 @@ via tests/test_docs.py; the fourth runs in the CI docs job):
      (compile()); every `python -m <module>` referenced in a ```bash
      block must resolve to an importable module (the entry point exists).
   3. DOCSTRINGS — every public module-level function, class and public
-     method in the user-facing packages (src/repro/serve, src/repro/
-     kernels) must carry a docstring (ast-based, no imports needed).
+     method in the user-facing surface (the src/repro/serve and
+     src/repro/kernels packages, plus the public models/ modules:
+     attention.py, transformer.py, api.py) must carry a docstring
+     (ast-based, no imports needed).
   4. --run — actually execute the cheap commands the docs promise: every
      command line in a bash block matching the RUNNABLE allowlist
-     (pytest --collect-only, benchmark --smoke) is run from the repo root
-     with PYTHONPATH=src and must exit 0.
+     (pytest --collect-only, benchmark --smoke, gen_path_matrix --check)
+     is run from the repo root with PYTHONPATH=src and must exit 0 — so
+     the docs/paths.md support matrix failing --check fails the docs job.
 
 Usage:
     PYTHONPATH=src python tools/check_docs.py          # lint only
@@ -39,8 +42,9 @@ for _p in (REPO, os.path.join(REPO, "src")):
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
 MODULE_RE = re.compile(r"python -m ([\w.]+)")
-# commands the docs claim are cheap enough to run anywhere
-RUNNABLE = ("--collect-only", "--smoke")
+# commands the docs claim are cheap enough to run anywhere (--check is the
+# gen_path_matrix drift gate; --write intentionally NOT runnable)
+RUNNABLE = ("--collect-only", "--smoke", "--check")
 
 
 def doc_files() -> list[str]:
@@ -97,33 +101,46 @@ def check_code_blocks(path: str) -> tuple[list[str], list[str]]:
 # user-facing packages whose public surface must be documented
 DOCSTRING_DIRS = (os.path.join("src", "repro", "serve"),
                   os.path.join("src", "repro", "kernels"))
+# individual public modules linted the same way (models/ has many internal
+# modules; only the serving-facing surface is held to the docstring bar)
+DOCSTRING_FILES = (os.path.join("src", "repro", "models", "attention.py"),
+                   os.path.join("src", "repro", "models", "transformer.py"),
+                   os.path.join("src", "repro", "models", "api.py"))
+
+
+def _docstring_targets() -> list[str]:
+    paths = []
+    for d in DOCSTRING_DIRS:
+        paths += sorted(glob.glob(os.path.join(REPO, d, "*.py")))
+    paths += [os.path.join(REPO, f) for f in DOCSTRING_FILES]
+    return paths
 
 
 def check_docstrings() -> list[str]:
-    """Flag public functions/classes/methods in DOCSTRING_DIRS that carry
-    no docstring (dunder and underscore-private names are exempt)."""
+    """Flag public functions/classes/methods in the DOCSTRING_DIRS
+    packages and the DOCSTRING_FILES modules that carry no docstring
+    (dunder and underscore-private names are exempt)."""
     import ast
     errors = []
-    for d in DOCSTRING_DIRS:
-        for path in sorted(glob.glob(os.path.join(REPO, d, "*.py"))):
-            rel = os.path.relpath(path, REPO)
-            tree = ast.parse(open(path).read())
-            defs = []
-            for node in tree.body:
-                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                    defs.append((node.name, node))
-                elif isinstance(node, ast.ClassDef):
-                    defs.append((node.name, node))
-                    defs += [(f"{node.name}.{sub.name}", sub)
-                             for sub in node.body
-                             if isinstance(sub, (ast.FunctionDef,
-                                                 ast.AsyncFunctionDef))]
-            for qual, node in defs:
-                if any(part.startswith("_") for part in qual.split(".")):
-                    continue
-                if not ast.get_docstring(node):
-                    errors.append(f"{rel}: public `{qual}` missing a "
-                                  "docstring")
+    for path in _docstring_targets():
+        rel = os.path.relpath(path, REPO)
+        tree = ast.parse(open(path).read())
+        defs = []
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.append((node.name, node))
+            elif isinstance(node, ast.ClassDef):
+                defs.append((node.name, node))
+                defs += [(f"{node.name}.{sub.name}", sub)
+                         for sub in node.body
+                         if isinstance(sub, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef))]
+        for qual, node in defs:
+            if any(part.startswith("_") for part in qual.split(".")):
+                continue
+            if not ast.get_docstring(node):
+                errors.append(f"{rel}: public `{qual}` missing a "
+                              "docstring")
     return errors
 
 

@@ -1,0 +1,171 @@
+"""Generate the docs/paths.md support matrix from the serving dispatch.
+
+The matrix is DERIVED, not hand-written, so it cannot drift from the code:
+
+  * ``models/attention.PAGED_DISPATCH`` — the (mechanism, phase) ->
+    implementation table the paged attention dispatch actually consults
+    (``use_fused``), giving the fused Pallas entry point and the jnp
+    gather oracle per cell;
+  * ``models/attention.AUTO_GATHER_BACKENDS`` + ``resolve_paged_impl`` —
+    the ``paged_impl='auto'`` resolution rule;
+  * ``models/transformer.PAGED_KINDS`` / ``supports_paged`` — which layer
+    kinds have a paged path at all (the rest serve through the
+    ``StaticWaveEngine`` fallback);
+  * ``serve/engine.EngineConfig`` — which speculative drafters exist and
+    what they require (probed by constructing the drafters' gates).
+
+The generated tables live between the BEGIN/END markers in docs/paths.md;
+everything outside the markers is hand-written prose.
+
+Usage:
+    PYTHONPATH=src python tools/gen_path_matrix.py --check   # CI drift gate
+    PYTHONPATH=src python tools/gen_path_matrix.py --write   # regenerate
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+DOC = os.path.join(REPO, "docs", "paths.md")
+BEGIN = "<!-- BEGIN GENERATED path-matrix (tools/gen_path_matrix.py) -->"
+END = "<!-- END GENERATED path-matrix -->"
+
+# display order / labels; the CELL CONTENT all comes from the dispatch code
+MECHANISMS = ("full", "sla2", "sla", "sparse_only")
+PHASE_LABEL = {"prefill": "chunked prefill", "decode": "decode",
+               "verify": "verify window"}
+# layer kinds a ModelConfig can carry (transformer.py's vocabulary)
+LAYER_KINDS = ("dense", "moe", "mla_dense", "mla_moe", "hybrid", "mlstm",
+               "slstm")
+
+
+def generate() -> str:
+    """Render the generated section of docs/paths.md as a string."""
+    from repro.models import attention as A
+    from repro.models import transformer as T
+
+    lines = [BEGIN, ""]
+
+    # --- mechanism x phase x implementation -----------------------------
+    lines += [
+        "### Mechanism × phase (`ServeEngine`, paged KV pool)",
+        "",
+        "Derived from `models/attention.PAGED_DISPATCH` — the table the",
+        "paged dispatch (`models/attention.use_fused`) consults at runtime.",
+        "",
+        "| mechanism | phase | `paged_impl='fused'` "
+        "(Pallas, `kernels/sla2_decode_paged`) | `paged_impl='gather'` "
+        "(jnp parity oracle) |",
+        "|---|---|---|---|",
+    ]
+    for mech in MECHANISMS:
+        for phase in A.PAGED_PHASES:
+            entry = A.PAGED_DISPATCH.get((mech, phase))
+            if entry is None:
+                fused, gather = "—", "—"
+            else:
+                fused = f"`{entry[0]}`"
+                gather = f"`{entry[1]}`"
+            lines.append(f"| `{mech}` | {PHASE_LABEL[phase]} | {fused} "
+                         f"| {gather} |")
+    backends = ", ".join(f"`{b}`" for b in A.AUTO_GATHER_BACKENDS)
+    lines += [
+        "",
+        f"`paged_impl='auto'` (the default) resolves to `'gather'` on the "
+        f"{backends} backend(s) — where Pallas runs in interpret mode and "
+        "the XLA gather path is the faster proxy — and to `'fused'` "
+        "everywhere else (`models/attention.resolve_paged_impl`).",
+        "",
+    ]
+
+    # --- layer kinds: paged path vs StaticWaveEngine fallback -----------
+    lines += [
+        "### Layer kinds (engine selection)",
+        "",
+        "Derived from `models/transformer.supports_paged`: a stack is "
+        "paged-servable only when every layer kind is. Non-paged stacks "
+        "fall back to `StaticWaveEngine` (static cache, generation "
+        "waves).",
+        "",
+        "| layer kind | paged path | engine |",
+        "|---|---|---|",
+    ]
+    for kind in LAYER_KINDS:
+        ok = kind in T.PAGED_KINDS
+        lines.append(
+            f"| `{kind}` | {'yes' if ok else 'no'} | "
+            f"{'`ServeEngine`' if ok else '`StaticWaveEngine` fallback'} |")
+
+    # --- speculative drafters -------------------------------------------
+    # import the drafters so a rename/removal breaks --check loudly
+    from repro.serve.speculative import LinearDrafter, NGramDrafter
+    drafters = {"linear": LinearDrafter.__name__,
+                "ngram": NGramDrafter.__name__}
+    lines += [
+        "",
+        "### Speculative drafters (`EngineConfig.speculative`)",
+        "",
+        "| mode | drafter | requires | verify pass |",
+        "|---|---|---|---|",
+        "| `off` | — | — | — (one token per dispatch) |",
+        f"| `linear` | `serve/speculative.{drafters['linear']}` | "
+        "`mechanism='sla2'` (linear branch) | `sla2_decode_verify` / "
+        "gather window |",
+        f"| `ngram` | `serve/speculative.{drafters['ngram']}` | any paged "
+        "stack | mechanism's verify entry above |",
+        "",
+        END,
+    ]
+    return "\n".join(lines)
+
+
+def splice(text: str, block: str) -> str:
+    """Replace the marker-delimited block inside ``text`` with ``block``."""
+    i, j = text.index(BEGIN), text.index(END) + len(END)
+    return text[:i] + block + text[j:]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when docs/paths.md drifted from the code")
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the matrix in docs/paths.md in place")
+    args = ap.parse_args()
+    block = generate()
+    if not os.path.exists(DOC):
+        if args.check:
+            print(f"ERROR: {os.path.relpath(DOC, REPO)} missing",
+                  file=sys.stderr)
+            return 1
+        raise SystemExit("docs/paths.md does not exist; create its prose "
+                         "shell (with the BEGIN/END markers) first")
+    current = open(DOC).read()
+    if BEGIN not in current or END not in current:
+        print("ERROR: docs/paths.md lost its generation markers",
+              file=sys.stderr)
+        return 1
+    updated = splice(current, block)
+    if args.check:
+        if updated != current:
+            print("ERROR: docs/paths.md support matrix drifted from the "
+                  "dispatch code — run `PYTHONPATH=src python "
+                  "tools/gen_path_matrix.py --write`", file=sys.stderr)
+            return 1
+        print("docs/paths.md matrix in sync with the dispatch code")
+        return 0
+    if args.write:
+        with open(DOC, "w") as fh:
+            fh.write(updated)
+        print(f"wrote {os.path.relpath(DOC, REPO)}")
+        return 0
+    print(block)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
