@@ -64,6 +64,11 @@ class Model:
     # swap-out/swap-in path (serve/engine.SwapPool)
     swap_out: Optional[Callable] = None
     swap_in: Optional[Callable] = None
+    # prefix-cache support (serve/prefix_cache.py): per-slot linear-totals
+    # snapshot extract/restore and the copy-on-write page duplication
+    extract_totals: Optional[Callable] = None
+    insert_totals: Optional[Callable] = None
+    copy_page: Optional[Callable] = None
     # speculative decoding (serve/speculative.py): multi-token verify over
     # a draft window + deferred accepted-prefix commit, and the linear-
     # branch drafter (draft_* are None unless the mechanism carries a
@@ -109,6 +114,11 @@ def _lm_model(cfg: T.ModelConfig) -> Model:
                 cfg, c, page_row, slot),
             swap_in=lambda c, page_row, slot, state: T.swap_in_slot(
                 cfg, c, page_row, slot, state),
+            extract_totals=lambda c, slot: T.extract_linear_totals(
+                cfg, c, slot),
+            insert_totals=lambda c, slot, st: T.insert_linear_totals(
+                cfg, c, slot, st),
+            copy_page=lambda c, src, dst: T.copy_kv_page(cfg, c, src, dst),
             decode_verify=lambda p, b, c: T.decode_verify(
                 p, cfg, b["tokens"], c, page_table=b["page_table"],
                 lengths=b["lengths"], active=b["active"],

@@ -346,6 +346,38 @@ def insert_paged_state(cache: dict, page_row, slot, state: dict,
     return new
 
 
+def extract_slot_state(cache: dict, slot, lead: int = 0) -> dict:
+    """Copy ONLY the per-slot keys (the SLA2 linear totals h_tot/z_tot) out
+    of a layer cache — the O(d^2) prefix summary the serving prefix cache
+    snapshots per trie node.  Empty dict for mechanisms without them."""
+    ix = (slice(None),) * lead
+    return {k: cache[k][ix + (slot,)] for k in _SLOT_KEYS if k in cache}
+
+
+def insert_slot_state(cache: dict, slot, state: dict, lead: int = 0) -> dict:
+    """Write an extracted per-slot state (see ``extract_slot_state``) back
+    into a layer cache at ``slot`` — the O(1) linear-totals restore a
+    prefix-cache hit performs instead of re-prefilling the prefix."""
+    ix = (slice(None),) * lead
+    new = dict(cache)
+    for k, v in state.items():
+        new[k] = cache[k].at[ix + (slot,)].set(jnp.asarray(v, cache[k].dtype))
+    return new
+
+
+def copy_paged_page(cache: dict, src, dst, lead: int = 0) -> dict:
+    """Copy one physical page's contents (K/V + SLA2 pooled router key)
+    onto another physical page — the device half of the serving engine's
+    copy-on-write: a slot about to write a page it shares with the prefix
+    cache first duplicates it into a private page."""
+    ix = (slice(None),) * lead
+    new = dict(cache)
+    for k in _PAGE_KEYS:
+        if k in cache:
+            new[k] = cache[k].at[ix + (dst,)].set(cache[k][ix + (src,)])
+    return new
+
+
 # Backends where paged_impl='auto' resolves to the jnp gather reference:
 # Pallas runs in interpret mode there, making the XLA gather path the
 # faster proxy.  Everything else gets the fused page-table kernels.

@@ -492,6 +492,55 @@ def swap_in_slot(cfg: ModelConfig, caches: dict, page_row, slot,
     return caches
 
 
+def extract_linear_totals(cfg: ModelConfig, caches: dict, slot) -> dict:
+    """Extract every layer's per-slot SLA2 linear totals (h_tot, z_tot) for
+    one slot — O(layers * d^2) bytes, the snapshot a prefix-cache trie node
+    stores so a hit restores the linear branch without re-prefilling.
+    Layers without per-slot state contribute empty dicts (dense models)."""
+    out: dict[str, Any] = {}
+    if cfg.first_kinds:
+        out["prefix_layers"] = [
+            {"attn": A.extract_slot_state(lc["attn"], slot)}
+            for lc in caches["prefix_layers"]]
+    out["groups"] = {
+        k: {"attn": A.extract_slot_state(v["attn"], slot, lead=1)}
+        for k, v in caches["groups"].items()}
+    return out
+
+
+def insert_linear_totals(cfg: ModelConfig, caches: dict, slot,
+                         totals: dict) -> dict:
+    """Write an ``extract_linear_totals`` snapshot back into every layer at
+    ``slot`` — the O(1) restore a prefix-cache hit performs before chunked
+    prefill resumes at the first uncached page."""
+    caches = dict(caches)
+    if cfg.first_kinds:
+        caches["prefix_layers"] = [
+            {"attn": A.insert_slot_state(lc["attn"], slot, st["attn"])}
+            for lc, st in zip(caches["prefix_layers"],
+                              totals["prefix_layers"])]
+    caches["groups"] = {
+        k: {"attn": A.insert_slot_state(v["attn"], slot,
+                                        totals["groups"][k]["attn"], lead=1)}
+        for k, v in caches["groups"].items()}
+    return caches
+
+
+def copy_kv_page(cfg: ModelConfig, caches: dict, src, dst) -> dict:
+    """Copy one physical page (K/V + pooled router key) onto another across
+    every layer — the serving engine's copy-on-write primitive for pages
+    shared through the prefix cache."""
+    caches = dict(caches)
+    if cfg.first_kinds:
+        caches["prefix_layers"] = [
+            {"attn": A.copy_paged_page(lc["attn"], src, dst)}
+            for lc in caches["prefix_layers"]]
+    caches["groups"] = {
+        k: {"attn": A.copy_paged_page(v["attn"], src, dst, lead=1)}
+        for k, v in caches["groups"].items()}
+    return caches
+
+
 def _layer_paged(lp, cfg: ModelConfig, kind, x, lc, attn_fn):
     """Shared dense/moe block body around a paged attention call."""
     h = L.rmsnorm(lp["ln1"], x)

@@ -102,6 +102,12 @@ class EngineConfig:
     draft_len: int = 3
     # longest suffix n-gram the 'ngram' drafter tries to match
     ngram_max: int = 3
+    # copy-on-write prefix caching (serve/prefix_cache.py): admission maps
+    # the longest cached full-page prefix of a prompt into the slot's page
+    # table (refcount+1) and skips that much chunked prefill; finished
+    # prompts leave their pages behind in an LRU trie that pool pressure
+    # evicts before preempting live slots
+    prefix_cache: bool = False
 
 
 def _sample_tokens(logits: np.ndarray, temperature: float,
@@ -124,28 +130,60 @@ def make_mixed_requests(vocab_size: int, work, seed: int = 0,
 
 
 class PageAllocator:
-    """Free list over physical pages 1..num_pages-1 (0 is the trash page)."""
+    """Reference-counted free list over pages 1..num_pages-1 (0 = trash).
+
+    ``alloc`` hands out a page at refcount 1; ``incref`` adds a sharer (a
+    prefix-cache node or a second slot mapping the same page); ``free`` is
+    a DECREF — the page returns to the free list only when the last
+    reference drops.  Freeing an unreferenced page raises: before
+    refcounts, a double-free put the same physical page on the free list
+    twice and handed it to two slots (silent cross-slot KV corruption).
+    ``min_available`` tracks the pool's high-water mark (the footprint
+    probe the prefix-cache benchmark reads)."""
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, 0, -1))
+        self._ref = np.zeros(num_pages, np.int32)
+        self.min_available = num_pages - 1
 
     @property
     def available(self) -> int:
         """Pages currently free."""
         return len(self._free)
 
+    def refcount(self, page: int) -> int:
+        """Current reference count of a physical page (0 = free)."""
+        return int(self._ref[page])
+
     def alloc(self) -> int:
-        """Pop one free physical page id; raises when the pool is dry."""
+        """Pop one free physical page id at refcount 1; raises when the
+        pool is dry."""
         if not self._free:
             raise RuntimeError("page pool exhausted")
-        return self._free.pop()
+        page = self._free.pop()
+        self._ref[page] = 1
+        self.min_available = min(self.min_available, len(self._free))
+        return page
+
+    def incref(self, page: int) -> None:
+        """Add a reference to an already-allocated page (page sharing)."""
+        assert 0 < page < self.num_pages and self._ref[page] > 0, \
+            f"incref of unallocated page {page}"
+        self._ref[page] += 1
 
     def free(self, pages) -> None:
-        """Return physical pages to the free list (never the trash page)."""
+        """Drop one reference per page; pages whose count reaches zero go
+        back to the free list.  Rejects freeing an already-free page (the
+        double-free that used to corrupt the pool silently)."""
         for p in pages:
+            p = int(p)
             assert 0 < p < self.num_pages
-            self._free.append(int(p))
+            if self._ref[p] == 0:
+                raise RuntimeError(f"double free of physical page {p}")
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
 
 
 @dataclasses.dataclass
@@ -163,6 +201,19 @@ class _Slot:
     # the rebuilt cache bit-identical to the one the preemption dropped,
     # since it repeats the exact original computation.
     replay: Optional[list] = None
+    # prefix-cache bookkeeping: the slot's first n_shared logical pages are
+    # mapped from the trie (never written without copy-on-write, never
+    # swapped); cache_node is the trie node at the hit depth; snaps
+    # collects per-chunk-boundary linear-totals snapshots during prefill
+    # for insertion once the prompt completes
+    n_shared: int = 0
+    cache_node: Any = None
+    snaps: Optional[dict] = None
+    # the trie node the slot pinned at hit time: held for the slot's whole
+    # lifetime (across preemption) so eviction can never detach a node
+    # whose page the slot maps — a detached node's page would be decreffed
+    # to zero at preemption and reallocated before resume
+    pinned_node: Any = None
 
 
 @dataclasses.dataclass
@@ -174,6 +225,11 @@ class _ResumeState:
     mode: str                          # 'swap' | 'recompute'
     slot: _Slot
     length: int = 0                    # swap-only: tokens in the saved pages
+    # swap-only, prefix-cache: the shared prefix is NOT swapped — its pages
+    # stay alive under the trie node the slot keeps pinned — and is
+    # re-increffed on resume; only the private suffix rides in the SwapPool
+    n_shared: int = 0
+    shared_phys: Optional[np.ndarray] = None
 
 
 # The jitted swap-out graph extracts pages with a static (max_pages,)-padded
@@ -360,7 +416,25 @@ class ServeEngine:
         self.swap = SwapPool(swap_cap)
         self.stats = {"preemptions": 0, "swap_outs": 0, "swap_ins": 0,
                       "recomputes": 0, "spec_steps": 0, "spec_drafted": 0,
-                      "spec_accepted": 0, "engine_steps": 0}
+                      "spec_accepted": 0, "engine_steps": 0,
+                      "prefill_tokens": 0, "prefix_hits": 0,
+                      "prefix_misses": 0, "prefix_hit_tokens": 0,
+                      "prefix_inserts": 0, "prefix_evictions": 0,
+                      "cow_copies": 0}
+        self._sla2 = getattr(model.cfg, "mechanism", None) == "sla2"
+        self._pcache = None
+        if ecfg.prefix_cache:
+            from repro.serve.prefix_cache import PrefixCache
+            self._pcache = PrefixCache(self.page_size,
+                                       self.chunk // self.page_size,
+                                       need_totals=self._sla2)
+            if not hasattr(model, "_prefix_fns"):
+                model._prefix_fns = (
+                    jax.jit(model.extract_totals),
+                    jax.jit(model.insert_totals),
+                    jax.jit(model.copy_page))
+            (self._extract_totals_fn, self._insert_totals_fn,
+             self._copy_page_fn) = model._prefix_fns
         self._slots: dict[int, _Slot] = {}          # slot -> state
         self._prefill_order: list[int] = []         # FCFS chunked prefill
         self._page_table = np.zeros((ecfg.max_slots, self.max_pages),
@@ -429,7 +503,12 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.uid}: {n}+{req.max_new_tokens} tokens exceed "
                 f"max_len {self.max_len}")
-        if self._worst_pages(n, req.max_new_tokens) \
+        # UNCLAMPED worst case: _worst_pages clamps at max_pages (correct
+        # for outstanding-page accounting, where a slot can never map more
+        # than max_pages logical blocks), but the reject gate must compare
+        # the request's true page demand against the pool — the clamp let
+        # an oversized request slip past whenever max_pages <= usable pages
+        if -(-(n + req.max_new_tokens) // self.page_size) \
                 > self.allocator.num_pages - 1:
             raise ValueError(
                 f"request {req.uid}: needs more pages than the pool holds")
@@ -452,6 +531,9 @@ class ServeEngine:
         the optimistic-admission gate (vs the conservative worst case)."""
         if resume is not None and resume.mode == "swap":
             s = resume.slot
+            # the shared prefix is re-mapped by incref, not allocation —
+            # only pages beyond it must come off the free list
+            n_sh = resume.n_shared
             if s.decoding:
                 if self._spec:
                     # a verify step consumes pages for its whole draft
@@ -460,9 +542,9 @@ class ServeEngine:
                     # cover part of it)
                     wlen = self._window_len(s)
                     blocks = (resume.length + wlen - 1) // self.page_size + 1
-                    return max(s.n_pages, blocks)
+                    return max(s.n_pages, blocks) - n_sh
                 boundary = resume.length % self.page_size == 0
-                return s.n_pages + (1 if boundary else 0)
+                return s.n_pages + (1 if boundary else 0) - n_sh
             # mid-prefill: the saved pages may already cover part of the
             # next chunk (self-preemption mid-mapping), so take the max of
             # saved pages and total pages the resumed chunk reaches —
@@ -470,9 +552,27 @@ class ServeEngine:
             # pages than the pool holds (permanent admission deadlock)
             nxt = min(self.chunk, len(s.tokens) - s.pos)
             return max(s.n_pages,
-                       -(-(s.pos + nxt) // self.page_size))
+                       -(-(s.pos + nxt) // self.page_size)) - n_sh
         tokens = req.prompt if resume is None else resume.slot.tokens
         return -(-min(self.chunk, len(tokens)) // self.page_size)
+
+    def _alloc_page(self, slot: int) -> Optional[int]:
+        """One page off the free list, making room first by evicting LRU
+        cached prefixes and then by preempting the youngest slot.  Returns
+        None if ``slot`` itself was the youngest and got preempted (the
+        caller must drop it)."""
+        while self.allocator.available == 0:
+            if self._pcache is not None \
+                    and self._pcache.evict_one(self.allocator):
+                # the evicted node's page only hits the free list once no
+                # slot maps it; keep evicting / fall through to preemption
+                self.stats["prefix_evictions"] += 1
+                continue
+            victim = self.scheduler.victim(self._slots)
+            self._preempt(victim)
+            if victim == slot:
+                return None
+        return self.allocator.alloc()
 
     def _ensure_page(self, slot: int, logical: int) -> bool:
         """Map (slot, logical) -> a physical page, preempting the youngest
@@ -480,13 +580,31 @@ class ServeEngine:
         was the youngest and got preempted (caller must drop it)."""
         if self._page_table[slot, logical] != 0:
             return True
-        while self.allocator.available == 0:
-            victim = self.scheduler.victim(self._slots)
-            self._preempt(victim)
-            if victim == slot:
-                return False
-        self._page_table[slot, logical] = self.allocator.alloc()
+        page = self._alloc_page(slot)
+        if page is None:
+            return False
+        self._page_table[slot, logical] = page
         self._slots[slot].n_pages += 1
+        return True
+
+    def _cow_page(self, slot: int, logical: int) -> bool:
+        """Copy-on-write: give ``slot`` a private copy of a mapped shared
+        page before a write lands on it.  If the slot is the page's sole
+        owner (the cache entry was evicted meanwhile) the page is already
+        private and nothing is copied.  Returns False if ``slot`` got
+        preempted while allocating the private page."""
+        old = int(self._page_table[slot, logical])
+        if self.allocator.refcount(old) == 1:
+            return True
+        new = self._alloc_page(slot)
+        if new is None:
+            return False
+        self.caches = self._copy_page_fn(
+            self.caches, jnp.asarray(old, jnp.int32),
+            jnp.asarray(new, jnp.int32))
+        self._page_table[slot, logical] = new
+        self.allocator.free([old])          # drop the shared reference
+        self.stats["cow_copies"] += 1
         return True
 
     def _preempt(self, slot: int) -> None:
@@ -499,15 +617,28 @@ class ServeEngine:
         row = self._page_table[slot].copy()
         self.stats["preemptions"] += 1
         s.req.n_preempt += 1
+        n_sh = s.n_shared
+        n_priv = s.n_pages - n_sh
         if (self._swap_out_fn is not None and s.n_pages > 0
-                and self.swap.can_hold(s.n_pages)):
+                and self.swap.can_hold(n_priv)):
+            # shared pages are never swapped out: they stay alive under
+            # the (pinned) trie node and are re-mapped by incref on
+            # resume.  Only the private suffix — plus the per-slot linear
+            # totals riding in the extracted state — enters the SwapPool.
+            ext_row = np.zeros_like(row)
+            ext_row[:n_priv] = row[n_sh:s.n_pages]
             state = jax.device_get(self._swap_out_fn(
-                self.caches, jnp.asarray(row), jnp.asarray(slot, jnp.int32)))
-            self.swap.put(s.req.arrival, s.n_pages,
-                          _trim_swap_state(state, s.n_pages))
+                self.caches, jnp.asarray(ext_row),
+                jnp.asarray(slot, jnp.int32)))
+            self.swap.put(s.req.arrival, n_priv,
+                          _trim_swap_state(state, n_priv))
             self.stats["swap_outs"] += 1
+            # s.pinned_node stays held: the shared pages survive on-device
+            # under the trie's references until resume re-increfs them
             resume = _ResumeState(mode="swap", slot=s,
-                                  length=int(self._lengths[slot]))
+                                  length=int(self._lengths[slot]),
+                                  n_shared=n_sh,
+                                  shared_phys=row[:n_sh].copy())
         else:
             if s.n_pages > 0:
                 # a zero-page victim is a pure de-admission — nothing was
@@ -522,6 +653,14 @@ class ServeEngine:
                 s.decoding = False
             s.pos = 0
             s.n_pages = 0
+            # shared refs are dropped too (the cache's own reference keeps
+            # the pages alive); the restarted prefill re-looks-up the trie
+            s.n_shared = 0
+            s.cache_node = None
+            s.snaps = None
+            if s.pinned_node is not None:
+                self._pcache.unpin(s.pinned_node)
+                s.pinned_node = None
             resume = _ResumeState(mode="recompute", slot=s)
         self.allocator.free(row[row > 0])
         self._page_table[slot] = 0
@@ -535,11 +674,20 @@ class ServeEngine:
         and continue exactly where it stopped (decode or chunked prefill)."""
         s = resume.slot
         state = _pad_swap_state(self.swap.pop(req.arrival), self.max_pages)
+        n_sh = resume.n_shared
         row = np.zeros((self.max_pages,), np.int32)
-        for lg in range(s.n_pages):
-            row[lg] = self.allocator.alloc()
+        for lg in range(n_sh):
+            # the shared prefix never left the device pool: re-map the
+            # same physical pages (kept alive by the pinned trie node)
+            p = int(resume.shared_phys[lg])
+            self.allocator.incref(p)
+            row[lg] = p
+        ins_row = np.zeros((self.max_pages,), np.int32)
+        for i in range(s.n_pages - n_sh):
+            row[n_sh + i] = self.allocator.alloc()
+            ins_row[i] = row[n_sh + i]
         self.caches = self._swap_in_fn(
-            self.caches, jnp.asarray(row), jnp.asarray(slot, jnp.int32),
+            self.caches, jnp.asarray(ins_row), jnp.asarray(slot, jnp.int32),
             state)
         self.stats["swap_ins"] += 1
         self._page_table[slot] = row
@@ -556,6 +704,71 @@ class ServeEngine:
         self._slots[slot] = s
         self._lengths[slot] = 0
         self._prefill_order.append(slot)
+        if self._pcache is not None:
+            self._try_prefix_hit(slot, s)
+
+    def _try_prefix_hit(self, slot: int, s: _Slot) -> None:
+        """Map the longest cached prefix of ``s``'s prompt into the slot
+        (refcount+1 per page, no allocation), restore the linear-totals
+        snapshot, and fast-forward prefill past the shared pages.  A hit
+        covering the WHOLE (page-aligned) prompt still re-runs the final
+        chunk — the last token's logits must be produced — over the shared
+        pages, which the prefill write guard copy-on-writes first."""
+        pages, node = self._pcache.lookup(s.tokens)
+        if not pages:
+            self.stats["prefix_misses"] += 1
+            return
+        n_hit = len(pages)
+        pos = n_hit * self.page_size
+        if pos == len(s.tokens):
+            pos -= self.chunk
+            if pos <= 0:        # nothing left to skip: treat as a miss
+                self.stats["prefix_misses"] += 1
+                return
+        row = self._page_table[slot]
+        for lg, p in enumerate(pages):
+            self.allocator.incref(p)
+            row[lg] = p
+        s.n_pages = n_hit
+        s.n_shared = n_hit
+        s.cache_node = node
+        self._pcache.pin(node)          # held until _finish / recompute
+        s.pinned_node = node
+        s.pos = pos
+        self._lengths[slot] = pos
+        if self._sla2:
+            totals = self._pcache.totals_at(node, pos // self.page_size)
+            self.caches = self._insert_totals_fn(
+                self.caches, jnp.asarray(slot, jnp.int32), totals)
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_hit_tokens"] += pos
+
+    def _insert_prefix(self, slot: int, s: _Slot) -> None:
+        """Register a completed prompt's chunk-aligned full pages in the
+        trie (the cache increfs newly indexed pages; the slot keeps its
+        own references until ``_finish`` decrefs them into the LRU)."""
+        ppc = self.chunk // self.page_size
+        n_ins = (len(s.tokens) // self.chunk) * ppc
+        if n_ins == 0:
+            return
+        created, node = self._pcache.insert(
+            s.tokens, self._page_table[slot], n_ins, s.snaps or {},
+            self.allocator)
+        self.stats["prefix_inserts"] += created
+        if node is not None:
+            s.cache_node = node
+        s.snaps = None
+
+    def _available_pages(self) -> int:
+        """Pages admission can count on: the free list plus cached-prefix
+        pages an eviction sweep could still reclaim (without the second
+        term, a pool full of cold cached prefixes would refuse all new
+        work forever — the actual evictions happen lazily in
+        ``_alloc_page`` as pages are demanded)."""
+        n = self.allocator.available
+        if self._pcache is not None:
+            n += self._pcache.evictable_pages(self.allocator)
+        return n
 
     def _admit(self):
         free = [s for s in range(self.cfg.max_slots) if s not in self._slots]
@@ -566,12 +779,12 @@ class ServeEngine:
                 break
             if conservative:
                 need = self._worst_pages(len(req.prompt), req.max_new_tokens)
-                if self.allocator.available - self._outstanding_pages() \
+                if self._available_pages() - self._outstanding_pages() \
                         < need:
                     break                   # pool can't cover it yet (FCFS)
             else:
                 resume = self.scheduler.peek_resume(req)
-                if self.allocator.available \
+                if self._available_pages() \
                         < self._pages_needed_now(req, resume):
                     break                   # not enough to progress (FCFS)
             self.scheduler.pop_head()
@@ -592,8 +805,20 @@ class ServeEngine:
         slot = self._prefill_order[0]
         s = self._slots[slot]
         n_chunk = min(self.chunk, len(s.tokens) - s.pos)
-        for lg in range(s.pos // self.page_size,
-                        (s.pos + n_chunk - 1) // self.page_size + 1):
+        lo = s.pos // self.page_size
+        hi = (s.pos + n_chunk - 1) // self.page_size
+        if lo < s.n_shared:
+            # this chunk rewrites pages the slot shares with the trie (the
+            # full-prompt-hit re-run of the final chunk): copy-on-write
+            # them into private pages first.  n_shared shrinks BEFORE the
+            # loop so a self-preemption mid-loop treats already-copied
+            # pages as private (their cache reference keeps them alive).
+            end = s.n_shared
+            s.n_shared = lo
+            for lg in range(lo, end):
+                if not self._cow_page(slot, lg):
+                    return                  # self-preempted; resumes later
+        for lg in range(lo, hi + 1):
             if not self._ensure_page(slot, lg):
                 return                      # self-preempted; resumes later
         tokens = np.zeros((1, self.chunk), np.int32)
@@ -608,7 +833,19 @@ class ServeEngine:
         logits, self.caches = self._prefill_fn(self.params, batch, self.caches)
         s.pos += n_chunk
         self._lengths[slot] = s.pos
+        self.stats["prefill_tokens"] += n_chunk
+        if self._pcache is not None and s.pos % self.chunk == 0:
+            # chunk boundary: capture the linear-totals snapshot that a
+            # future hit at this depth will restore (None for dense stacks)
+            if s.snaps is None:
+                s.snaps = {}
+            s.snaps[s.pos // self.page_size] = (
+                jax.device_get(self._extract_totals_fn(
+                    self.caches, jnp.asarray(slot, jnp.int32)))
+                if self._sla2 else None)
         if s.pos == len(s.tokens):          # prompt done: first token
+            if self._pcache is not None:
+                self._insert_prefix(slot, s)
             self._prefill_order.pop(0)
             if s.replay:
                 # recompute-resume: everything after the prompt was already
@@ -836,6 +1073,10 @@ class ServeEngine:
             self._emit(slot, int(tok[slot]))
 
     def _finish(self, slot: int):
+        s = self._slots[slot]
+        if s.pinned_node is not None:
+            self._pcache.unpin(s.pinned_node)
+            s.pinned_node = None
         self.allocator.free(self._page_table[slot][
             self._page_table[slot] > 0])
         self._page_table[slot] = 0
@@ -861,11 +1102,42 @@ class ServeEngine:
         self._decode_step()
         return len(self._slots)
 
-    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
-        """Step until every submitted request drained (or max_steps)."""
+    def run_to_completion(self, max_steps: int = 10_000,
+                          livelock_after: int = 50) -> list[Request]:
+        """Step until every submitted request has drained.
+
+        Raises RuntimeError instead of silently returning partial results
+        when the engine stops making progress: either ``max_steps`` ran out
+        with work still queued/active, or ``livelock_after`` consecutive
+        steps changed nothing observable (no tokens emitted, no prefill
+        advance, no scheduler transitions) while slots were occupied — the
+        no-progress livelock a mis-sized pool or stuck admission produces.
+        Previously both cases returned whatever had completed so far and
+        callers mistook the partial list for a drained workload."""
+        stalled, last_sig = 0, None
         for _ in range(max_steps):
             if self.step() == 0 and not self._queue:
-                break
+                return self.completed
+            sig = (len(self.completed), len(self.scheduler.waiting),
+                   self.stats["preemptions"], self.stats["swap_ins"],
+                   self.stats["prefill_tokens"],
+                   tuple(int(x) for x in self._lengths),
+                   sum(len(s.req.output or ())
+                       for s in self._slots.values()))
+            if sig == last_sig and self._slots:
+                stalled += 1
+                if stalled >= livelock_after:
+                    raise RuntimeError(
+                        f"engine livelock: {stalled} consecutive steps made "
+                        f"no progress with {len(self._slots)} occupied "
+                        f"slot(s) and {len(self._queue)} waiting request(s)")
+            else:
+                stalled, last_sig = 0, sig
+        if self._slots or self._queue:
+            raise RuntimeError(
+                f"run_to_completion: max_steps={max_steps} exhausted with "
+                f"{len(self._slots)} active slot(s) and {len(self._queue)} "
+                f"waiting request(s)")
         return self.completed
 
 

@@ -1,0 +1,229 @@
+"""Copy-on-write prefix cache: a radix/trie index over the paged KV pool.
+
+Production traffic is dominated by shared system prompts and few-shot
+prefixes.  Because a physical K/V page (and, for SLA2, its per-page pooled
+router key) is a pure function of the token ids that produced it, two
+requests whose prompts agree on their first ``k * page_size`` tokens can
+share the same ``k`` physical pages — the trie here maps token-id prefixes
+to those pages at full-page granularity, one node per page, so admission
+can skip the chunked-prefill work for the longest cached prefix.
+
+What is NOT a pure function of the token prefix is the SLA2 linear
+branch's running totals (h_tot, z_tot): they are per-slot prefix-summary
+state, accumulated chunk by chunk during prefill.  Each *chunk-aligned*
+trie node therefore stores a host-side snapshot of every layer's totals as
+they stood right after that node's page was prefilled — O(layers * d^2)
+bytes — so a hit restores the linear branch with one O(1) device insert
+and the resumed prefill continues bit-identically to a cold run.
+
+Bit-identity also dictates the hit granularity: the engine accumulates
+h_tot per prefill *chunk* (a float sum whose grouping follows the chunk
+boundaries), so a hit may only resume prefill at a chunk boundary —
+``lookup`` truncates the matched path to a multiple of
+``pages_per_chunk``.  Snapshots are captured at exactly those depths.
+
+Ownership is reference-counted through the serving ``PageAllocator``: the
+cache holds one reference per node, each slot mapping the page holds one
+more.  ``evict_one`` releases the least-recently-used unpinned leaf under
+pool pressure, and pinning protects the shared prefix of a swap-preempted
+slot until it resumes — "shared pages are never swapped out or freed while
+referenced".  Slots never write shared pages: the engine copy-on-writes
+them into private pages first (see ServeEngine._cow_page).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+
+class PrefixNode:
+    """One trie node == one full physical page of ``page_size`` tokens.
+
+    ``key`` is the tuple of token ids the page holds, ``page`` the physical
+    page id the cache owns a reference to, ``depth`` the 1-based number of
+    pages on the path from the root, ``totals`` the per-layer (h_tot,
+    z_tot) snapshot after this page (only present at chunk-aligned depths;
+    None for mechanisms without linear totals), ``pins`` the number of
+    preempted slots whose resume depends on this subtree staying alive."""
+
+    __slots__ = ("key", "page", "parent", "children", "depth", "totals",
+                 "has_totals", "pins", "last_used")
+
+    def __init__(self, key: tuple, page: int, parent: "PrefixNode",
+                 depth: int):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: dict[tuple, PrefixNode] = {}
+        self.depth = depth
+        self.totals: Any = None
+        self.has_totals = False
+        self.pins = 0
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Radix index over token-id prefixes at full-page granularity.
+
+    ``page_size`` is the tokens per page (== the model's block_k),
+    ``pages_per_chunk`` the prefill-chunk granularity hits must align to,
+    ``need_totals`` whether hits require a linear-totals snapshot at the
+    hit depth (True for SLA2 stacks, False for dense)."""
+
+    def __init__(self, page_size: int, pages_per_chunk: int,
+                 need_totals: bool):
+        self.page_size = page_size
+        self.pages_per_chunk = max(1, pages_per_chunk)
+        self.need_totals = need_totals
+        self._root = PrefixNode((), 0, None, 0)
+        self._tick = 0
+
+    # -- internal -------------------------------------------------------
+    def _touch(self, node: PrefixNode) -> None:
+        self._tick += 1
+        node.last_used = self._tick
+
+    def _keys(self, tokens, n_pages: int):
+        ps = self.page_size
+        return [tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
+                for i in range(n_pages)]
+
+    def _iter_nodes(self):
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            yield n
+            stack.extend(n.children.values())
+
+    # -- queries --------------------------------------------------------
+    def lookup(self, tokens) -> tuple[list[int], Optional[PrefixNode]]:
+        """Longest usable cached prefix of ``tokens``.
+
+        Walks the trie over the prompt's full pages, then truncates the
+        match to a chunk-aligned depth carrying a totals snapshot (when
+        required) — the bit-identity constraints above.  Returns the
+        physical page ids of the hit (possibly empty) and the trie node at
+        the hit depth; touches the path's LRU clocks."""
+        n_full = len(tokens) // self.page_size
+        node, path = self._root, []
+        for key in self._keys(tokens, n_full):
+            child = node.children.get(key)
+            if child is None:
+                break
+            path.append(child)
+            node = child
+        # truncate to the deepest chunk-aligned depth (with snapshot)
+        depth = len(path)
+        while depth > 0:
+            cand = path[depth - 1]
+            if depth % self.pages_per_chunk == 0 and \
+                    (not self.need_totals or cand.has_totals):
+                break
+            depth -= 1
+        if depth == 0:
+            return [], None
+        for n in path[:depth]:
+            self._touch(n)
+        return [n.page for n in path[:depth]], path[depth - 1]
+
+    def ancestor(self, node: PrefixNode, depth: int) -> PrefixNode:
+        """The node at 1-based ``depth`` on the path to ``node`` (which
+        must be at or below that depth)."""
+        while node.depth > depth:
+            node = node.parent
+        assert node.depth == depth, "ancestor below requested depth"
+        return node
+
+    def totals_at(self, node: PrefixNode, depth: int):
+        """The linear-totals snapshot at ``depth`` pages on ``node``'s
+        path (None for mechanisms without totals)."""
+        n = self.ancestor(node, depth)
+        assert not self.need_totals or n.has_totals, \
+            "hit depth has no totals snapshot"
+        return n.totals
+
+    # -- updates --------------------------------------------------------
+    def insert(self, tokens, page_row, n_pages: int, snaps: dict,
+               allocator) -> tuple[int, Optional[PrefixNode]]:
+        """Register a freshly prefilled prompt's first ``n_pages`` full
+        pages, increffing each NEWLY indexed physical page in
+        ``allocator`` (existing nodes keep their original page — the
+        submitting slot's duplicate stays private and is freed with the
+        slot).  ``snaps`` maps chunk-aligned page depths to totals
+        snapshots (values may be None for dense stacks).  Returns (number
+        of new nodes, deepest node on the path)."""
+        node, created = self._root, 0
+        for i, key in enumerate(self._keys(tokens, n_pages)):
+            depth = i + 1
+            child = node.children.get(key)
+            if child is None:
+                child = PrefixNode(key, int(page_row[i]), node, depth)
+                allocator.incref(child.page)
+                node.children[key] = child
+                created += 1
+            if depth in snaps and not child.has_totals:
+                child.totals = snaps[depth]
+                child.has_totals = True
+            self._touch(child)
+            node = child
+        return created, (node if node is not self._root else None)
+
+    def pin(self, node: PrefixNode) -> None:
+        """Protect ``node`` (and, transitively, its ancestors — eviction
+        is leaf-only) from eviction while a slot maps its pages.  A slot
+        pins its hit node for its WHOLE lifetime, preemption included: an
+        evicted node's page would otherwise be decreffed to zero when the
+        mapping slot is preempted and reallocated before its resume."""
+        node.pins += 1
+
+    def unpin(self, node: PrefixNode) -> None:
+        """Release a ``pin``."""
+        assert node.pins > 0
+        node.pins -= 1
+
+    def evict_one(self, allocator) -> bool:
+        """Drop the least-recently-used unpinned leaf, returning its page
+        reference to ``allocator`` (the page only reaches the free list
+        once no slot maps it).  Returns False when nothing is evictable."""
+        victim = None
+        for n in self._iter_nodes():
+            if n.children or n.pins:
+                continue
+            if victim is None or n.last_used < victim.last_used:
+                victim = n
+        if victim is None:
+            return False
+        allocator.free([victim.page])
+        del victim.parent.children[victim.key]
+        return True
+
+    # -- introspection --------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        """Nodes (== cached pages) currently indexed."""
+        return sum(1 for _ in self._iter_nodes())
+
+    def page_refs(self) -> dict[int, int]:
+        """Physical page id -> number of cache references (one per node) —
+        the cache's contribution to the pool-invariant accounting."""
+        refs: dict[int, int] = {}
+        for n in self._iter_nodes():
+            refs[n.page] = refs.get(n.page, 0) + 1
+        return refs
+
+    def evictable_pages(self, allocator) -> int:
+        """Pages an eviction sweep could return to the free list: unpinned
+        nodes whose page only the cache holds, excluding ancestors of
+        pinned nodes (leaf-only eviction can never reach them while the
+        pin is held).  The admission gate adds this to
+        ``allocator.available`` so a pool full of cold cached prefixes
+        still admits new work."""
+        protected = set()
+        for n in self._iter_nodes():
+            if n.pins:
+                p = n.parent
+                while p is not None and id(p) not in protected:
+                    protected.add(id(p))
+                    p = p.parent
+        return sum(1 for n in self._iter_nodes()
+                   if n.pins == 0 and id(n) not in protected
+                   and allocator.refcount(n.page) == 1)
