@@ -122,8 +122,7 @@ def serve_waves(model, params, waves, *, prefix_cache: bool,
     return {
         "prefill_tokens": eng.stats["prefill_tokens"],
         "peak_slot_pages": peak_mapped,
-        "peak_alloc_pages": eng.allocator.num_pages - 1
-        - eng.allocator.min_available,
+        "peak_alloc_pages": eng.stats["pool_peak_pages"],
         "steps": steps,
         "tok_per_step": round(toks / steps, 3),
         "seconds": round(dt, 3),

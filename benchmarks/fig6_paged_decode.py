@@ -56,7 +56,8 @@ TOP_LEVEL_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
                               "BENCH_paged_decode.json")
 
 
-def modeled_step(batch: int, ctx: int, method: str) -> float:
+def modeled_step(batch: int, ctx: int, method: str,
+                 kv_quant: str = "none") -> float:
     """Roofline seconds for ONE decode step over all layers on one v5e.
 
     Decode is bandwidth-bound at these shapes, so the methods differ in
@@ -64,12 +65,19 @@ def modeled_step(batch: int, ctx: int, method: str) -> float:
     write + compute re-reads on top of the pool read) is the modeling
     assumption the fused-vs-gather ratio rests on — it is an input of the
     model, not a measurement (no TPU in this container; see kernel_smoke
-    for what IS measured)."""
+    for what IS measured).  ``kv_quant`` models the quantized page pool
+    (kernels dequantize in registers): K/V and pooled router keys become
+    1-byte codes plus one fp32 scale per token row / per page; the linear
+    totals stay fp32."""
     h = HKV * N_REP
     t_n = ctx // BK
     k_sel = max(1, round(K_FRAC * t_n))
-    page_bytes = batch * HKV * k_sel * BK * DH * BF16 * 2        # K + V
-    pooled_bytes = batch * HKV * t_n * DH * F32                  # router keys
+    if kv_quant == "none":
+        page_bytes = batch * HKV * k_sel * BK * DH * BF16 * 2    # K + V
+        pooled_bytes = batch * HKV * t_n * DH * F32              # router keys
+    else:
+        page_bytes = batch * HKV * k_sel * BK * (DH + F32) * 2   # codes+scale
+        pooled_bytes = batch * HKV * t_n * (DH + F32)
     state_bytes = batch * HKV * (DH * DH + DH) * F32             # h_tot/z_tot
     if method == "static":
         bytes_ = batch * HKV * ctx * DH * BF16 * 2
@@ -94,9 +102,11 @@ def modeled_table() -> list[dict]:
         for batch in BATCHES:
             ts = {m: modeled_step(batch, ctx, m)
                   for m in ("fused", "gather", "static")}
+            t_q = modeled_step(batch, ctx, "fused", kv_quant="int8")
             rows.append({
                 "ctx": ctx, "batch": batch,
                 "fused_us": round(ts["fused"] * 1e6, 1),
+                "fused_int8_us": round(t_q * 1e6, 1),
                 "gather_us": round(ts["gather"] * 1e6, 1),
                 "static_us": round(ts["static"] * 1e6, 1),
                 "fused_tok_s": round(batch / ts["fused"]),
@@ -104,6 +114,7 @@ def modeled_table() -> list[dict]:
                 "static_tok_s": round(batch / ts["static"]),
                 "fused_vs_gather_x": round(ts["gather"] / ts["fused"], 2),
                 "fused_vs_static_x": round(ts["static"] / ts["fused"], 2),
+                "int8_pool_vs_bf16_x": round(ts["fused"] / t_q, 2),
             })
     return rows
 
@@ -225,9 +236,10 @@ def run(smoke: bool = False) -> dict:
         # runs skip engine_measured_cpu and would drop it from the file
         with open(TOP_LEVEL_JSON, "w") as f:
             json.dump(payload, f, indent=1)
-    print(markdown_table(rows, ["ctx", "batch", "fused_us", "gather_us",
-                                "static_us", "fused_vs_gather_x",
-                                "fused_vs_static_x"]))
+    print(markdown_table(rows, ["ctx", "batch", "fused_us", "fused_int8_us",
+                                "gather_us", "static_us",
+                                "fused_vs_gather_x", "fused_vs_static_x",
+                                "int8_pool_vs_bf16_x"]))
     print(f"\nkernel smoke: {payload['kernel_smoke']['parity']}")
     print(f"acceptance (fused beats gather, batch>=8 long ctx, modeled): "
           f"{payload['acceptance_fused_beats_gather_modeled']}")

@@ -59,7 +59,8 @@ TOP_LEVEL_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
 
 
 def modeled_step(batch: int, ctx: int, method: str,
-                 window: int | None = None) -> float:
+                 window: int | None = None,
+                 kv_quant: str = "none") -> float:
     """Roofline seconds for ONE dense decode step over all layers on one
     v5e.  Dense decode is bandwidth-bound: the methods differ in bytes
     moved.  The 3x page-bytes charge for 'gather' (copy write + compute
@@ -67,15 +68,18 @@ def modeled_step(batch: int, ctx: int, method: str,
     fig6 — an input of the model, not a measurement (see kernel_smoke for
     what IS measured).  With ``window`` set, the fused kernel only reads
     the pages overlapping the window (validity prefetch flags); the
-    gather reference still materialises the whole per-slot view."""
+    gather reference still materialises the whole per-slot view.
+    ``kv_quant`` models the quantized page pool: 1-byte K/V codes plus an
+    fp32 scale per token row, dequantized in registers by the kernel."""
     h = HKV * N_REP
     read_tokens = ctx if window is None else min(ctx, (window // BK + 1) * BK)
-    page_bytes = batch * HKV * read_tokens * DH * BF16 * 2       # K + V
+    row_bytes = DH * BF16 if kv_quant == "none" else DH + 4
+    page_bytes = batch * HKV * read_tokens * row_bytes * 2       # K + V
     flops = batch * h * read_tokens * DH * 4
     if method == "fused":
         bytes_ = page_bytes
     elif method == "gather":
-        full_bytes = batch * HKV * ctx * DH * BF16 * 2
+        full_bytes = batch * HKV * ctx * row_bytes * 2
         bytes_ = 2 * full_bytes + page_bytes    # copy write + re-read + use
     else:
         raise ValueError(method)
@@ -91,13 +95,17 @@ def modeled_table(window: int | None = None) -> list[dict]:
         for batch in BATCHES:
             ts = {m: modeled_step(batch, ctx, m, window)
                   for m in ("fused", "gather")}
+            t_q = modeled_step(batch, ctx, "fused", window,
+                               kv_quant="int8")
             rows.append({
                 "ctx": ctx, "batch": batch,
                 "fused_us": round(ts["fused"] * 1e6, 1),
+                "fused_int8_us": round(t_q * 1e6, 1),
                 "gather_us": round(ts["gather"] * 1e6, 1),
                 "fused_tok_s": round(batch / ts["fused"]),
                 "gather_tok_s": round(batch / ts["gather"]),
                 "fused_vs_gather_x": round(ts["gather"] / ts["fused"], 2),
+                "int8_pool_vs_bf16_x": round(ts["fused"] / t_q, 2),
             })
     return rows
 
@@ -286,11 +294,14 @@ def run(smoke: bool = False) -> dict:
         # only full runs refresh the cross-PR trajectory artifact
         with open(TOP_LEVEL_JSON, "w") as f:
             json.dump(payload, f, indent=1)
-    print(markdown_table(rows, ["ctx", "batch", "fused_us", "gather_us",
-                                "fused_vs_gather_x"]))
+    print(markdown_table(rows, ["ctx", "batch", "fused_us", "fused_int8_us",
+                                "gather_us", "fused_vs_gather_x",
+                                "int8_pool_vs_bf16_x"]))
     print(f"\nsliding window (W={SW}):")
-    print(markdown_table(rows_sw, ["ctx", "batch", "fused_us", "gather_us",
-                                   "fused_vs_gather_x"]))
+    print(markdown_table(rows_sw, ["ctx", "batch", "fused_us",
+                                   "fused_int8_us", "gather_us",
+                                   "fused_vs_gather_x",
+                                   "int8_pool_vs_bf16_x"]))
     print(f"\nkernel smoke: {payload['kernel_smoke']['parity']}")
     print(f"acceptance (fused beats gather, modeled): "
           f"{payload['acceptance_fused_beats_gather_modeled']}")

@@ -69,6 +69,53 @@ def qdot(a, a_s, b, b_s, *, transpose_b: bool):
     return out * (a_s * b_s)
 
 
+# ---------------------------------------------------------------------------
+# Page-pool storage quantization (the serving ``kv_quant`` knob)
+# ---------------------------------------------------------------------------
+# The paged KV pool can store its pages low-bit: codes in int8 / fp8-e4m3
+# with one fp32 scale per TOKEN ROW (page, kv head, row).  Per-row scales —
+# not per-page scalars — because pages are written one token row at a time
+# (chunked prefill, decode insertion): each row is quantized exactly once at
+# write time and never requantized, so swap round-trips and copy-on-write
+# page copies are bit-exact within the quantized representation.  The same
+# dequant formula (codes.astype(f32) * scale[..., None]) is used by the jnp
+# gather oracle and inside the Pallas kernels, so fused-vs-gather parity on
+# a quantized pool is as tight as on fp32.
+
+KV_QUANT_MODES = ("none", "int8", "fp8")
+
+
+def kv_pool_dtype(kv_quant: str):
+    """Storage dtype of the K/V (and SLA2 pooled-key) page arrays."""
+    if kv_quant == "int8":
+        return jnp.int8
+    if kv_quant == "fp8":
+        return jnp.float8_e4m3fn
+    raise ValueError(kv_quant)
+
+
+def quantize_rows(x, kv_quant: str):
+    """Per-row symmetric quantization over the LAST axis; returns
+    (codes, scale) with ``scale.shape == x.shape[:-1]`` (f32)."""
+    x = x.astype(jnp.float32)
+    ax = jnp.max(jnp.abs(x), axis=-1)
+    if kv_quant == "int8":
+        s = jnp.maximum(ax / INT8_MAX, 1e-8)
+        q = jnp.clip(jnp.round(x / s[..., None]), -INT8_MAX,
+                     INT8_MAX).astype(jnp.int8)
+        return q, s
+    if kv_quant == "fp8":
+        s = jnp.maximum(ax / FP8_MAX, 1e-12)
+        return (x / s[..., None]).astype(jnp.float8_e4m3fn), s
+    raise ValueError(kv_quant)
+
+
+def dequant_rows(codes, scale):
+    """Inverse of ``quantize_rows`` — THE dequant formula, shared verbatim
+    by the gather oracle and the in-kernel dequant tiles."""
+    return codes.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
 def default_interpret(interpret: bool | None = None) -> bool:
     """Resolve a kernel's ``interpret`` argument: every Pallas entry point
     falls back to interpret mode off-TPU (CPU CI, tests, smoke benches) and

@@ -88,12 +88,8 @@ from repro.kernels.ops import (INT8_MAX, NEG_INF, default_interpret,
 # Fused decode: sparse flash + linear complement correction + alpha combine
 # ---------------------------------------------------------------------------
 
-def _decode_kernel(phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,  # SMEM
-                   q_ref, k_ref, v_ref, h_ref, z_ref, a_ref,           # in
-                   o_ref,                                              # out
-                   acc, m_i, l_i, lnum, lden,                          # VMEM
-                   *, block_k: int, k_sel: int, quant_bits: str,
-                   sm_scale: float):
+def _decode_kernel(*refs, block_k: int, k_sel: int, quant_bits: str,
+                   kv_quant: str, sm_scale: float):
     """Shared decode/verify kernel body over grid ``(B*Hkv, W, K_sel)``.
 
     ``W`` is the query-window axis: single-token decode runs it at 1, the
@@ -101,7 +97,24 @@ def _decode_kernel(phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,  # SMEM
     (g, w) program row owns its own routed pages, length ``t_new`` and
     linear totals, so the per-position causal mask (``cols < t``) doubles as
     the intra-window causal mask — window token w+1 sits at position t_w and
-    is invisible to row w's queries."""
+    is invisible to row w's queries.
+
+    With ``kv_quant != 'none'`` the K/V pool holds low-bit codes and two
+    extra operands carry the per-row scales, prefetched by the SAME routed
+    physical page id as the K/V tiles; the tiles are dequantized in
+    registers (codes * scale, ops.dequant_rows' formula) before the MXU
+    dots."""
+    if kv_quant == "none":
+        (phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,     # SMEM
+         q_ref, k_ref, v_ref, h_ref, z_ref, a_ref,              # in
+         o_ref,                                                 # out
+         acc, m_i, l_i, lnum, lden) = refs                      # VMEM
+        ks_ref = vs_ref = None
+    else:
+        (phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,
+         q_ref, k_ref, v_ref, ks_ref, vs_ref, h_ref, z_ref, a_ref,
+         o_ref,
+         acc, m_i, l_i, lnum, lden) = refs
     g = pl.program_id(0)           # slot * Hkv + kv head
     w = pl.program_id(1)           # query row within the verify window
     jj = pl.program_id(2)          # routed-page index
@@ -123,6 +136,10 @@ def _decode_kernel(phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,  # SMEM
         q = q_ref[0, 0].astype(jnp.float32)     # (n_rep, Dh)
         k = k_ref[0, 0].astype(jnp.float32)     # (bk, Dh)
         v = v_ref[0, 0].astype(jnp.float32)
+        if kv_quant != "none":
+            # in-register dequant of the pool codes (per token row)
+            k = k * ks_ref[0, 0][:, None]
+            v = v * vs_ref[0, 0][:, None]
         if quant_bits == "none":
             s = jax.lax.dot_general(
                 q, k, (((1,), (1,)), ((), ())),
@@ -196,13 +213,17 @@ def _decode_kernel(phys_ref, jlog_ref, valid_ref, comp_ref, tnew_ref,  # SMEM
 
 def _call_decode_kernel(q, k_pages, v_pages, phys, jlog, valid, complete,
                         t_new, h_tot, z_tot, alpha, *, block_k: int,
-                        quant_bits: str, interpret: bool | None):
+                        quant_bits: str, kv_quant: str,
+                        k_scale, v_scale, interpret: bool | None):
     """Shared pallas_call wrapper for decode (W=1) and verify (W=k+1).
 
     Window-shaped operands: q (B, Hkv, W, n_rep, Dh); phys/jlog/valid/
     complete (B, Hkv, W, K_sel); t_new (B, W); h_tot (B, Hkv, W, Dh, Dh);
     z_tot (B, Hkv, W, Dh); alpha (B, Hkv, n_rep) — alpha is shared across
     the window (decode always uses the last query block's alpha).
+    With ``kv_quant != 'none'``, k_scale/v_scale (P, Hkv, bk) ride two
+    extra operands whose BlockSpecs resolve through the same routed
+    physical page id as K/V, so scales are prefetched with the pages.
     Returns o (B, Hkv, W, n_rep, Dh) f32."""
     interpret = default_interpret(interpret)
     b, hkv, wdw, n_rep, dh = q.shape
@@ -226,26 +247,36 @@ def _call_decode_kernel(q, k_pages, v_pages, phys, jlog, valid, complete,
     grid = (g_tot, wdw, k_sel)
     kernel = functools.partial(
         _decode_kernel, block_k=bk, k_sel=k_sel, quant_bits=quant_bits,
-        sm_scale=sm_scale)
+        kv_quant=kv_quant, sm_scale=sm_scale)
+    page_spec = pl.BlockSpec((1, 1, bk, dh),
+                             lambda g, w, jj, ph, jl, va, co, tn:
+                             (ph[g, w, jj], g % hkv, 0, 0))
+    scale_spec = pl.BlockSpec((1, 1, bk),
+                              lambda g, w, jj, ph, jl, va, co, tn:
+                              (ph[g, w, jj], g % hkv, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, n_rep, dh),
+                     lambda g, w, jj, ph, jl, va, co, tn: (g, w, 0, 0)),
+        page_spec,      # K pages
+        page_spec,      # V pages
+    ]
+    operands = [q_f, k_pages, v_pages]
+    if kv_quant != "none":
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
+    in_specs += [
+        pl.BlockSpec((1, 1, dh, dh),
+                     lambda g, w, jj, ph, jl, va, co, tn: (g, w, 0, 0)),
+        pl.BlockSpec((1, 1, dh),
+                     lambda g, w, jj, ph, jl, va, co, tn: (g, w, 0)),
+        pl.BlockSpec((1, n_rep),
+                     lambda g, w, jj, ph, jl, va, co, tn: (g, 0)),
+    ]
+    operands += [h_f, z_f, a_f]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, n_rep, dh),
-                         lambda g, w, jj, ph, jl, va, co, tn: (g, w, 0, 0)),
-            pl.BlockSpec((1, 1, bk, dh),
-                         lambda g, w, jj, ph, jl, va, co, tn:
-                         (ph[g, w, jj], g % hkv, 0, 0)),
-            pl.BlockSpec((1, 1, bk, dh),
-                         lambda g, w, jj, ph, jl, va, co, tn:
-                         (ph[g, w, jj], g % hkv, 0, 0)),
-            pl.BlockSpec((1, 1, dh, dh),
-                         lambda g, w, jj, ph, jl, va, co, tn: (g, w, 0, 0)),
-            pl.BlockSpec((1, 1, dh),
-                         lambda g, w, jj, ph, jl, va, co, tn: (g, w, 0)),
-            pl.BlockSpec((1, n_rep),
-                         lambda g, w, jj, ph, jl, va, co, tn: (g, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, n_rep, dh),
                          lambda g, w, jj, ph, jl, va, co, tn: (g, w, 0, 0)),
@@ -264,24 +295,27 @@ def _call_decode_kernel(q, k_pages, v_pages, phys, jlog, valid, complete,
         out_shape=[jax.ShapeDtypeStruct((g_tot, wdw, n_rep, dh),
                                         jnp.float32)],
         interpret=interpret,
-        name=f"sla2_decode_paged_{quant_bits}",
-    )(phys_f, jlog_f, valid_f, comp_f, tnew_f,
-      q_f, k_pages, v_pages, h_f, z_f, a_f)
+        name=f"sla2_decode_paged_{quant_bits}_kv_{kv_quant}",
+    )(phys_f, jlog_f, valid_f, comp_f, tnew_f, *operands)
     return o.reshape(b, hkv, wdw, n_rep, dh)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_k", "quant_bits", "interpret"))
+    static_argnames=("block_k", "quant_bits", "kv_quant", "interpret"))
 def sla2_decode_fused(q, k_pages, v_pages, phys, jlog, valid, complete,
                       t_new, h_tot, z_tot, alpha, *, block_k: int,
-                      quant_bits: str = "none",
+                      quant_bits: str = "none", kv_quant: str = "none",
+                      k_scale=None, v_scale=None,
                       interpret: bool | None = None):
     """Fused SLA2 paged decode step (the W=1 case of the verify grid).
 
     q        : (B, Hkv, n_rep, Dh) — the new token's queries, grouped by
                kv head (GQA group rides one MXU tile)
-    k_pages  : (P, Hkv, bk, Dh) shared physical page pool (bf16/f32)
+    k_pages  : (P, Hkv, bk, Dh) shared physical page pool (bf16/f32 — or
+               int8/fp8 codes when ``kv_quant != 'none'``, with
+               k_scale/v_scale (P, Hkv, bk) f32 per-row scales dequantized
+               in registers)
     v_pages  : (P, Hkv, bk, Dh)
     phys     : (B, Hkv, K_sel) int32 routed PHYSICAL page ids (0 = trash
                page for invalid entries; skipped, costs no extra traffic)
@@ -300,16 +334,18 @@ def sla2_decode_fused(q, k_pages, v_pages, phys, jlog, valid, complete,
         q[:, :, None], k_pages, v_pages, phys[:, :, None], jlog[:, :, None],
         valid[:, :, None], complete[:, :, None], t_new[:, None],
         h_tot[:, :, None], z_tot[:, :, None], alpha,
-        block_k=block_k, quant_bits=quant_bits, interpret=interpret)
+        block_k=block_k, quant_bits=quant_bits, kv_quant=kv_quant,
+        k_scale=k_scale, v_scale=v_scale, interpret=interpret)
     return o[:, :, 0]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_k", "quant_bits", "interpret"))
+    static_argnames=("block_k", "quant_bits", "kv_quant", "interpret"))
 def sla2_decode_verify(q, k_pages, v_pages, phys, jlog, valid, complete,
                        t_new, h_tot, z_tot, alpha, *, block_k: int,
-                       quant_bits: str = "none",
+                       quant_bits: str = "none", kv_quant: str = "none",
+                       k_scale=None, v_scale=None,
                        interpret: bool | None = None):
     """Fused multi-token SLA2 paged verify — the speculative-decoding
     target pass over a draft window of W = draft_len + 1 tokens per slot.
@@ -339,6 +375,7 @@ def sla2_decode_verify(q, k_pages, v_pages, phys, jlog, valid, complete,
     return _call_decode_kernel(
         q, k_pages, v_pages, phys, jlog, valid, complete, t_new,
         h_tot, z_tot, alpha, block_k=block_k, quant_bits=quant_bits,
+        kv_quant=kv_quant, k_scale=k_scale, v_scale=v_scale,
         interpret=interpret)
 
 
@@ -347,12 +384,9 @@ def sla2_decode_verify(q, k_pages, v_pages, phys, jlog, valid, complete,
 # sla / sparse_only baselines): online softmax over the page-table pages
 # ---------------------------------------------------------------------------
 
-def _dense_decode_kernel(phys_ref, valid_ref, tnew_ref,        # SMEM
-                         q_ref, k_ref, v_ref,                  # in
-                         o_ref,                                # out
-                         acc, m_i, l_i,                        # VMEM
-                         *, block_k: int, max_p: int, hkv: int,
-                         window, prefix_len: int, sm_scale: float):
+def _dense_decode_kernel(*refs, block_k: int, max_p: int, hkv: int,
+                         window, prefix_len: int, quant_bits: str,
+                         kv_quant: str, sm_scale: float):
     """Dense decode/verify kernel body over grid ``(B*Hkv, W, maxP)``.
 
     Unlike the SLA2 kernel there is no router: every visible page of the
@@ -364,7 +398,24 @@ def _dense_decode_kernel(phys_ref, valid_ref, tnew_ref,        # SMEM
     their compute.  The per-row position mask ``cols < t`` doubles as the
     causal intra-window mask exactly as in the SLA2 verify grid;
     ``window``/``prefix_len`` fold the sliding-window and prefix-LM
-    constraints into the same in-register mask."""
+    constraints into the same in-register mask.
+
+    ``quant_bits`` is the QAT tile path the SLA2 decode kernel already has
+    (Q/K per-tile symmetric, P fixed-scale int8 / per-tile fp8, V
+    per-tile), now shared by the dense family; ``kv_quant`` dequantizes
+    low-bit pool codes in registers via the per-row scales prefetched
+    through the same physical page id as K/V."""
+    if kv_quant == "none":
+        (phys_ref, valid_ref, tnew_ref,                        # SMEM
+         q_ref, k_ref, v_ref,                                  # in
+         o_ref,                                                # out
+         acc, m_i, l_i) = refs                                 # VMEM
+        ks_ref = vs_ref = None
+    else:
+        (phys_ref, valid_ref, tnew_ref,
+         q_ref, k_ref, v_ref, ks_ref, vs_ref,
+         o_ref,
+         acc, m_i, l_i) = refs
     g = pl.program_id(0)           # slot * Hkv + kv head
     w = pl.program_id(1)           # query row within the verify window
     p = pl.program_id(2)           # logical page of the slot's history
@@ -383,9 +434,18 @@ def _dense_decode_kernel(phys_ref, valid_ref, tnew_ref,        # SMEM
         q = q_ref[0, 0].astype(jnp.float32)     # (n_rep, Dh)
         k = k_ref[0, 0].astype(jnp.float32)     # (bk, Dh)
         v = v_ref[0, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * sm_scale
+        if kv_quant != "none":
+            # in-register dequant of the pool codes (per token row)
+            k = k * ks_ref[0, 0][:, None]
+            v = v * vs_ref[0, 0][:, None]
+        if quant_bits == "none":
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * sm_scale
+        else:
+            q_c, q_s = _quantize_tile(q, quant_bits)
+            k_c, k_s = _quantize_tile(k, quant_bits)
+            s = _qdot(q_c, q_s, k_c, k_s, transpose_b=True) * sm_scale
 
         cols = p * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (1, block_k), 1)[0]
@@ -405,9 +465,19 @@ def _dense_decode_kernel(phys_ref, valid_ref, tnew_ref,        # SMEM
         corr = jnp.exp(jnp.where(m_prev > NEG_INF * 0.5, m_prev, m_safe)
                        - m_safe)
         l_i[...] = l_i[...] * corr + pr.sum(axis=-1)
-        acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
-            pr, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        if quant_bits == "none":
+            o_tmp = jax.lax.dot_general(
+                pr, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        elif quant_bits == "int8":
+            p_c = jnp.round(pr * INT8_MAX).astype(jnp.int8)
+            v_c, v_s = _quantize_tile(v, "int8")
+            o_tmp = _qdot(p_c, 1.0 / INT8_MAX, v_c, v_s, transpose_b=False)
+        else:  # fp8
+            p_c, p_s = _quantize_tile(pr, "fp8")
+            v_c, v_s = _quantize_tile(v, "fp8")
+            o_tmp = _qdot(p_c, p_s, v_c, v_s, transpose_b=False)
+        acc[...] = acc[...] * corr[:, None] + o_tmp
         m_i[...] = m_new
 
     @pl.when(p == max_p - 1)
@@ -418,10 +488,13 @@ def _dense_decode_kernel(phys_ref, valid_ref, tnew_ref,        # SMEM
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_k", "window", "prefix_len", "interpret"))
+    static_argnames=("block_k", "window", "prefix_len", "quant_bits",
+                     "kv_quant", "interpret"))
 def dense_decode_verify(q, k_pages, v_pages, page_table, t_new, *,
                         block_k: int, window: int | None = None,
-                        prefix_len: int = 0, interpret: bool | None = None):
+                        prefix_len: int = 0, quant_bits: str = "none",
+                        kv_quant: str = "none", k_scale=None, v_scale=None,
+                        interpret: bool | None = None):
     """Fused dense paged decode over a W-token window — the non-SLA2 leg of
     the paged kernel family, sharing the ``(B*Hkv, W, pages)`` grid shape
     of ``sla2_decode_verify`` with the page-table row replacing the routed
@@ -474,20 +547,28 @@ def dense_decode_verify(q, k_pages, v_pages, page_table, t_new, *,
     grid = (g_tot, wdw, max_p)
     kernel = functools.partial(
         _dense_decode_kernel, block_k=bk, max_p=max_p, hkv=hkv,
-        window=window, prefix_len=prefix_len, sm_scale=sm_scale)
+        window=window, prefix_len=prefix_len, quant_bits=quant_bits,
+        kv_quant=kv_quant, sm_scale=sm_scale)
+    page_spec = pl.BlockSpec((1, 1, bk, dh),
+                             lambda g, w, p, ph, va, tn:
+                             (ph[g // hkv, w, p], g % hkv, 0, 0))
+    scale_spec = pl.BlockSpec((1, 1, bk),
+                              lambda g, w, p, ph, va, tn:
+                              (ph[g // hkv, w, p], g % hkv, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, n_rep, dh),
+                     lambda g, w, p, ph, va, tn: (g, w, 0, 0)),
+        page_spec,      # K pages
+        page_spec,      # V pages
+    ]
+    operands = [q_f, k_pages, v_pages]
+    if kv_quant != "none":
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, n_rep, dh),
-                         lambda g, w, p, ph, va, tn: (g, w, 0, 0)),
-            pl.BlockSpec((1, 1, bk, dh),
-                         lambda g, w, p, ph, va, tn:
-                         (ph[g // hkv, w, p], g % hkv, 0, 0)),
-            pl.BlockSpec((1, 1, bk, dh),
-                         lambda g, w, p, ph, va, tn:
-                         (ph[g // hkv, w, p], g % hkv, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, n_rep, dh),
                          lambda g, w, p, ph, va, tn: (g, w, 0, 0)),
@@ -504,17 +585,20 @@ def dense_decode_verify(q, k_pages, v_pages, page_table, t_new, *,
         out_shape=[jax.ShapeDtypeStruct((g_tot, wdw, n_rep, dh),
                                         jnp.float32)],
         interpret=interpret,
-        name="dense_decode_paged",
-    )(phys, valid, t_new, q_f, k_pages, v_pages)
+        name=f"dense_decode_paged_{quant_bits}_kv_{kv_quant}",
+    )(phys, valid, t_new, *operands)
     return o.reshape(b, hkv, wdw, n_rep, dh)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_k", "window", "prefix_len", "interpret"))
+    static_argnames=("block_k", "window", "prefix_len", "quant_bits",
+                     "kv_quant", "interpret"))
 def dense_decode_fused(q, k_pages, v_pages, page_table, t_new, *,
                        block_k: int, window: int | None = None,
-                       prefix_len: int = 0, interpret: bool | None = None):
+                       prefix_len: int = 0, quant_bits: str = "none",
+                       kv_quant: str = "none", k_scale=None, v_scale=None,
+                       interpret: bool | None = None):
     """Fused dense paged decode step — the W=1 case of
     ``dense_decode_verify`` (one query row per slot and kv head).
 
@@ -522,14 +606,17 @@ def dense_decode_fused(q, k_pages, v_pages, page_table, t_new, *,
     t_new    : (B,) int32 per-slot token count INCLUDING the new token
     returns  : o (B, Hkv, n_rep, Dh) f32
 
-    Replaces the jnp ``_gather_pages`` dense decode (which materialises a
-    contiguous (B, Hkv, maxP*bk, Dh) per-slot copy every step) for
-    ``mechanism='full'`` serving; the gather path stays as the parity
-    oracle (see ``models/attention.decode_step_paged``)."""
+    ``quant_bits`` enables the QAT tile path (previously SLA2-only);
+    ``kv_quant`` + k_scale/v_scale read a low-bit pool with in-register
+    dequant.  Replaces the jnp ``_gather_pages`` dense decode (which
+    materialises a contiguous (B, Hkv, maxP*bk, Dh) per-slot copy every
+    step) for ``mechanism='full'`` serving; the gather path stays as the
+    parity oracle (see ``models/attention.decode_step_paged``)."""
     o = dense_decode_verify(
         q[:, :, None], k_pages, v_pages, page_table, t_new[:, None],
         block_k=block_k, window=window, prefix_len=prefix_len,
-        interpret=interpret)
+        quant_bits=quant_bits, kv_quant=kv_quant,
+        k_scale=k_scale, v_scale=v_scale, interpret=interpret)
     return o[:, :, 0]
 
 
@@ -537,12 +624,20 @@ def dense_decode_fused(q, k_pages, v_pages, page_table, t_new, *,
 # Paged chunked-prefill flash (replaces the _gather_pages per-slot view)
 # ---------------------------------------------------------------------------
 
-def _prefill_kernel(phys_ref, vpg_ref, off_ref,                   # SMEM
-                    q_ref, k_ref, v_ref,                          # in
-                    o_ref,                                        # out
-                    acc, m_i, l_i,                                # VMEM
-                    *, block_k: int, max_p: int, chunk: int,
-                    window, prefix_len: int, sm_scale: float):
+def _prefill_kernel(*refs, block_k: int, max_p: int, chunk: int,
+                    window, prefix_len: int, kv_quant: str,
+                    sm_scale: float):
+    if kv_quant == "none":
+        (phys_ref, vpg_ref, off_ref,                              # SMEM
+         q_ref, k_ref, v_ref,                                     # in
+         o_ref,                                                   # out
+         acc, m_i, l_i) = refs                                    # VMEM
+        ks_ref = vs_ref = None
+    else:
+        (phys_ref, vpg_ref, off_ref,
+         q_ref, k_ref, v_ref, ks_ref, vs_ref,
+         o_ref,
+         acc, m_i, l_i) = refs
     p = pl.program_id(1)           # logical page of this slot's history
 
     @pl.when(p == 0)
@@ -555,6 +650,9 @@ def _prefill_kernel(phys_ref, vpg_ref, off_ref,                   # SMEM
     def _step():
         q = q_ref[0].astype(jnp.float32)        # (n_rep * C, Dh)
         k = k_ref[0, 0].astype(jnp.float32)     # (bk, Dh)
+        if kv_quant != "none":
+            # in-register dequant of the pool codes (per token row)
+            k = k * ks_ref[0, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * sm_scale
@@ -584,6 +682,8 @@ def _prefill_kernel(phys_ref, vpg_ref, off_ref,                   # SMEM
                        - m_safe)
         l_i[...] = l_i[...] * corr + pr.sum(axis=-1)
         v = v_ref[0, 0].astype(jnp.float32)
+        if kv_quant != "none":
+            v = v * vs_ref[0, 0][:, None]
         acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
             pr, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -598,10 +698,11 @@ def _prefill_kernel(phys_ref, vpg_ref, off_ref,                   # SMEM
 @functools.partial(
     jax.jit,
     static_argnames=("block_k", "n_rep", "window", "prefix_len",
-                     "interpret"))
+                     "kv_quant", "interpret"))
 def paged_flash_prefill(q, k_pages, v_pages, page_row, *, offset,
                         block_k: int, n_rep: int,
                         window: int | None = None, prefix_len: int = 0,
+                        kv_quant: str = "none", k_scale=None, v_scale=None,
                         interpret: bool | None = None):
     """Causal flash attention of ONE slot's prefill chunk over its paged
     history, reading K/V pages straight from the pool.
@@ -657,18 +758,26 @@ def paged_flash_prefill(q, k_pages, v_pages, page_row, *, offset,
     grid = (hkv, max_p)
     kernel = functools.partial(
         _prefill_kernel, block_k=bk, max_p=max_p, chunk=c,
-        window=window, prefix_len=prefix_len, sm_scale=sm_scale)
+        window=window, prefix_len=prefix_len, kv_quant=kv_quant,
+        sm_scale=sm_scale)
+    page_spec = pl.BlockSpec((1, 1, bk, dh),
+                             lambda hh, p, ph, vp, of: (ph[p], hh, 0, 0))
+    scale_spec = pl.BlockSpec((1, 1, bk),
+                              lambda hh, p, ph, vp, of: (ph[p], hh, 0))
+    in_specs = [
+        pl.BlockSpec((1, n_rep * c, dh),
+                     lambda hh, p, ph, vp, of: (hh, 0, 0)),
+        page_spec,      # K pages
+        page_spec,      # V pages
+    ]
+    operands = [q_g, k_pages, v_pages]
+    if kv_quant != "none":
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, n_rep * c, dh),
-                         lambda hh, p, ph, vp, of: (hh, 0, 0)),
-            pl.BlockSpec((1, 1, bk, dh),
-                         lambda hh, p, ph, vp, of: (ph[p], hh, 0, 0)),
-            pl.BlockSpec((1, 1, bk, dh),
-                         lambda hh, p, ph, vp, of: (ph[p], hh, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, n_rep * c, dh),
                          lambda hh, p, ph, vp, of: (hh, 0, 0)),
@@ -684,6 +793,6 @@ def paged_flash_prefill(q, k_pages, v_pages, page_row, *, offset,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((hkv, n_rep * c, dh), jnp.float32)],
         interpret=interpret,
-        name="sla2_prefill_paged",
-    )(phys_row, vpg, off_arr, q_g, k_pages, v_pages)
+        name=f"sla2_prefill_paged_kv_{kv_quant}",
+    )(phys_row, vpg, off_arr, *operands)
     return o.reshape(h, c, dh)

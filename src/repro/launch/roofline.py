@@ -60,6 +60,48 @@ def arch_param_counts(arch: str) -> dict:
     return {"total": total, "active": active}
 
 
+# ---------------------------------------------------------------------------
+# Quantized page-pool sizing (EngineConfig.kv_quant)
+# ---------------------------------------------------------------------------
+# Bytes per stored K/V element by pool storage mode.  'none' is the bf16
+# serving baseline; int8/fp8 pools store 1-byte codes plus one fp32 scale
+# per (page, kv head, token row) — the scale overhead is Dh elements'
+# worth of f32 per row, i.e. 4/Dh relative, ~3% at Dh=128.
+
+KV_QUANT_BYTES = {"none": 2, "int8": 1, "fp8": 1}
+
+
+def kv_page_bytes(hkv: int, page_tokens: int, head_dim: int,
+                  kv_quant: str = "none", *, sla2: bool = False) -> int:
+    """HBM bytes of ONE physical page of ONE layer's pool.
+
+    K + V codes (2 * hkv * page_tokens * head_dim elements) at the
+    storage width, plus — when quantized — the per-row fp32 scales
+    (2 * hkv * page_tokens).  ``sla2=True`` adds the per-page pooled
+    router key (hkv * head_dim codes + hkv fp32 scales when quantized)."""
+    el = KV_QUANT_BYTES[kv_quant]
+    n_kv = 2 * hkv * page_tokens * head_dim
+    total = n_kv * el
+    if kv_quant != "none":
+        total += 2 * hkv * page_tokens * 4          # k_scale + v_scale rows
+    if sla2:
+        total += hkv * head_dim * el                # pooled router key
+        if kv_quant != "none":
+            total += hkv * 4                        # pooled_scale
+    return total
+
+
+def pool_pages_for_hbm(budget_bytes: float, n_layers: int, hkv: int,
+                       page_tokens: int, head_dim: int,
+                       kv_quant: str = "none", *, sla2: bool = False) -> int:
+    """Physical pages an HBM budget holds when every layer keeps a pool
+    (the serving allocator sizes all layers' pools to the same page
+    count)."""
+    per_page = n_layers * kv_page_bytes(hkv, page_tokens, head_dim,
+                                        kv_quant, sla2=sla2)
+    return int(budget_bytes // per_page)
+
+
 _NOTES = {
     "compute": ("compute-bound: raise MXU utilisation — larger per-chip "
                 "tiles (bigger microbatch or less model parallelism), int8 "

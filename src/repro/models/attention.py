@@ -26,6 +26,7 @@ from repro.core import sla2 as sla2lib
 from repro.core.attention import phi
 from repro.core.router import RouterConfig
 from repro.core.sla2 import SLA2Config
+from repro.kernels import ops
 from repro.models import layers as L
 
 
@@ -59,6 +60,13 @@ class AttentionConfig:
     # interpret mode and the XLA gather path is the faster proxy)
     paged_impl: str = "auto"
     decode_quant_bits: str = "none"    # fused decode QAT tile path
+    # page-pool STORAGE dtype ('none' | 'int8' | 'fp8'): low-bit K/V (and
+    # SLA2 pooled-key) pages with per-row f32 scales, quantized once at
+    # write time and dequantized in registers inside the fused kernels (or
+    # by the gather oracle) — halves/quarters pool bytes, swap traffic and
+    # decode-step HBM reads.  Orthogonal to decode_quant_bits (the on-the-
+    # fly QAT tile path inside the kernel's MXU dots).
+    kv_quant: str = "none"
 
     def router_config(self) -> RouterConfig:
         """The SLA2 router view of this config (block sizes, top-k
@@ -295,15 +303,38 @@ def decode_step(params: dict, cfg: AttentionConfig, x_t: jax.Array,
 def init_paged_cache(cfg: AttentionConfig, num_pages: int, batch: int,
                      dtype=jnp.bfloat16) -> dict:
     """Page pool for one attention layer (+ SLA2 per-page pooled keys and
-    per-slot linear-branch totals)."""
+    per-slot linear-branch totals).
+
+    With ``cfg.kv_quant != 'none'`` the K/V pages (and, for SLA2, the
+    pooled router keys) are stored as low-bit codes with per-row f32
+    scales: ``k_scale``/``v_scale`` carry one scale per (page, kv head,
+    token row), ``pooled_scale`` one per (page, kv head).  ``dtype`` then
+    only applies to the unquantized layout."""
     hkv, dh, bk = cfg.num_kv_heads, cfg.head_dim, cfg.block_k
-    cache = {
-        "k_pages": jnp.zeros((num_pages, hkv, bk, dh), dtype),
-        "v_pages": jnp.zeros((num_pages, hkv, bk, dh), dtype),
-    }
+    if cfg.kv_quant != "none":
+        qdt = ops.kv_pool_dtype(cfg.kv_quant)
+        cache = {
+            "k_pages": jnp.zeros((num_pages, hkv, bk, dh), qdt),
+            "v_pages": jnp.zeros((num_pages, hkv, bk, dh), qdt),
+            "k_scale": jnp.zeros((num_pages, hkv, bk), jnp.float32),
+            "v_scale": jnp.zeros((num_pages, hkv, bk), jnp.float32),
+        }
+    else:
+        cache = {
+            "k_pages": jnp.zeros((num_pages, hkv, bk, dh), dtype),
+            "v_pages": jnp.zeros((num_pages, hkv, bk, dh), dtype),
+        }
     if cfg.mechanism == "sla2":
+        if cfg.kv_quant != "none":
+            cache.update({
+                "pooled_pages": jnp.zeros(
+                    (num_pages, hkv, dh), ops.kv_pool_dtype(cfg.kv_quant)),
+                "pooled_scale": jnp.zeros((num_pages, hkv), jnp.float32),
+            })
+        else:
+            cache["pooled_pages"] = jnp.zeros((num_pages, hkv, dh),
+                                              jnp.float32)
         cache.update({
-            "pooled_pages": jnp.zeros((num_pages, hkv, dh), jnp.float32),
             "h_tot": jnp.zeros((batch, hkv, dh, dh), jnp.float32),
             "z_tot": jnp.zeros((batch, hkv, dh), jnp.float32),
         })
@@ -321,8 +352,13 @@ def init_paged_cache(cfg: AttentionConfig, num_pages: int, batch: int,
 # rewrites the trash page — both harmless, so callers can keep a static
 # (max_pages,) shape and the extract/insert functions jit-compile once.
 
-_PAGE_KEYS = ("k_pages", "v_pages", "pooled_pages")
+_PAGE_KEYS = ("k_pages", "v_pages", "pooled_pages",
+              "k_scale", "v_scale", "pooled_scale")
 _SLOT_KEYS = ("h_tot", "z_tot")
+
+# page array -> its per-row scale array when the pool is quantized
+_SCALE_OF = {"k_pages": "k_scale", "v_pages": "v_scale",
+             "pooled_pages": "pooled_scale"}
 
 
 def extract_paged_state(cache: dict, page_row, slot, lead: int = 0) -> dict:
@@ -448,6 +484,89 @@ def _gather_blocks(pages, phys):
         phys, pages)
 
 
+# -- dequant-aware pool accessors -------------------------------------------
+# Every jnp read of a page array goes through these: on an unquantized pool
+# they are plain f32 casts; on a quantized pool (cfg.kv_quant != 'none',
+# i.e. the scale array is present) they apply THE dequant formula
+# (ops.dequant_rows) — the same math the fused kernels run in registers, so
+# the gather oracle stays the bit-for-bit parity reference.
+
+def _kv_read(cache: dict, name: str, idx):
+    """``cache[name][idx]`` dequantized to f32 (``idx`` indexes the page
+    axis; any leading index shape works — the scale broadcasts per row)."""
+    out = cache[name][idx]
+    sk = _SCALE_OF[name]
+    if sk in cache:
+        return ops.dequant_rows(out, cache[sk][idx])
+    return out.astype(jnp.float32)
+
+
+def _kv_gather_pages(cache: dict, name: str, page_table):
+    """Dequantizing ``_gather_pages``: contiguous (B, Hkv, maxP*bk, Dh) f32
+    per-slot view of a (possibly quantized) page array."""
+    g = _kv_read(cache, name, page_table)       # (B, maxP, Hkv, bk, Dh) f32
+    b, mp, hkv, bk, dh = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, mp * bk, dh)
+
+
+def _kv_gather_blocks(cache: dict, name: str, phys):
+    """Dequantizing ``_gather_blocks``: (B, Hkv, K, bk, Dh) f32 from a
+    (possibly quantized) page array and per-kv-head physical ids."""
+    out = _gather_blocks(cache[name], phys).astype(jnp.float32)
+    sk = _SCALE_OF[name]
+    if sk in cache:
+        out = out * _gather_blocks(cache[sk], phys)[..., None]
+    return out
+
+
+def _store_kv_rows(cache: dict, cfg: AttentionConfig, phys, rows,
+                   k_new, v_new) -> dict:
+    """Write token rows into the K/V pools at ``[phys, :, rows]`` — THE
+    write-time quantization point: each row is quantized exactly once here
+    (per-row symmetric, ops.quantize_rows) and never requantized, so swap
+    round-trips and CoW copies of the codes + scales are bit-exact.
+    ``k_new``/``v_new``: (..., Hkv, Dh) with leading shape == phys/rows.
+    Returns (cache, k_eff, v_eff) where k_eff/v_eff are the f32 values a
+    subsequent page read would observe (the quantize->dequantize round
+    trip; the raw inputs when unquantized) — callers derive SLA2 block
+    state from THESE so prefill-time state matches decode-time recompute
+    from pages."""
+    if cfg.kv_quant == "none":
+        cache["k_pages"] = cache["k_pages"].at[phys, :, rows].set(
+            k_new.astype(cache["k_pages"].dtype))
+        cache["v_pages"] = cache["v_pages"].at[phys, :, rows].set(
+            v_new.astype(cache["v_pages"].dtype))
+        return cache, k_new, v_new
+    k_c, k_s = ops.quantize_rows(k_new, cfg.kv_quant)
+    v_c, v_s = ops.quantize_rows(v_new, cfg.kv_quant)
+    cache["k_pages"] = cache["k_pages"].at[phys, :, rows].set(k_c)
+    cache["v_pages"] = cache["v_pages"].at[phys, :, rows].set(v_c)
+    cache["k_scale"] = cache["k_scale"].at[phys, :, rows].set(k_s)
+    cache["v_scale"] = cache["v_scale"].at[phys, :, rows].set(v_s)
+    return cache, ops.dequant_rows(k_c, k_s), ops.dequant_rows(v_c, v_s)
+
+
+def _store_pooled(cache: dict, cfg: AttentionConfig, phys, pooled,
+                  keep) -> dict:
+    """Write pooled router keys (f32, (..., Hkv, Dh)) at pages ``phys``,
+    quantizing per (page, kv head) when the pool is quantized; rows where
+    ``keep`` (leading shape of phys) is False retain the existing page
+    content (the masked-write idiom of the trash-page scheme)."""
+    if cfg.kv_quant == "none":
+        cache["pooled_pages"] = cache["pooled_pages"].at[phys].set(
+            jnp.where(keep[..., None, None],
+                      pooled.astype(cache["pooled_pages"].dtype),
+                      cache["pooled_pages"][phys]))
+        return cache
+    codes, scale = ops.quantize_rows(pooled, cfg.kv_quant)
+    cache["pooled_pages"] = cache["pooled_pages"].at[phys].set(
+        jnp.where(keep[..., None, None], codes,
+                  cache["pooled_pages"][phys]))
+    cache["pooled_scale"] = cache["pooled_scale"].at[phys].set(
+        jnp.where(keep[..., None], scale, cache["pooled_scale"][phys]))
+    return cache
+
+
 def chunk_prefill_paged(params: dict, cfg: AttentionConfig, x: jax.Array,
                         cache: dict, *, page_row, offset, chunk_len, slot):
     """Prefill one chunk of ONE slot's prompt into the page pool.
@@ -479,10 +598,12 @@ def chunk_prefill_paged(params: dict, cfg: AttentionConfig, x: jax.Array,
     phys = jnp.where(valid_t, page_row[logical], 0)
     rows = tok_pos % bk
     cache = dict(cache)
-    cache["k_pages"] = cache["k_pages"].at[phys, :, rows].set(
-        k_new[0].astype(cache["k_pages"].dtype))
-    cache["v_pages"] = cache["v_pages"].at[phys, :, rows].set(
-        v_new[0].astype(cache["v_pages"].dtype))
+    # write-time quantization (kv_quant): rows are quantized exactly once
+    # here; k_eff/v_eff are the values a page read observes (the
+    # quantize->dequantize round trip), from which the SLA2 block state
+    # below is derived so it matches decode-time recompute from pages
+    cache, k_eff, v_eff = _store_kv_rows(cache, cfg, phys, rows,
+                                         k_new[0], v_new[0])
 
     # --- exact attention: chunk queries over history + chunk ---
     if use_fused(cfg, "prefill"):
@@ -490,19 +611,21 @@ def chunk_prefill_paged(params: dict, cfg: AttentionConfig, x: jax.Array,
         # physical through page_row, so K/V pages are read in place and the
         # contiguous (1, maxP*bk, Dh) per-slot view is never materialised;
         # sliding-window / prefix-LM masks fold into the kernel's
-        # in-register mask
+        # in-register mask (quantized pools dequantize tiles in registers)
         from repro.kernels.sla2_decode_paged import paged_flash_prefill
         o = paged_flash_prefill(
             q.transpose(0, 2, 1, 3)[0], cache["k_pages"], cache["v_pages"],
             page_row, offset=offset, block_k=bk, n_rep=n_rep,
-            window=cfg.sliding_window, prefix_len=cfg.prefix_len)
+            window=cfg.sliding_window, prefix_len=cfg.prefix_len,
+            kv_quant=cfg.kv_quant, k_scale=cache.get("k_scale"),
+            v_scale=cache.get("v_scale"))
         o = o.astype(x.dtype).transpose(1, 0, 2).reshape(1, c, h * dh)
     else:
         # jnp gather reference (parity oracle): dense masked attention over
-        # the materialised per-slot view
-        k_all = _repeat_kv(_gather_pages(cache["k_pages"], page_row[None]),
+        # the materialised (dequantized) per-slot view
+        k_all = _repeat_kv(_kv_gather_pages(cache, "k_pages", page_row[None]),
                            n_rep)
-        v_all = _repeat_kv(_gather_pages(cache["v_pages"], page_row[None]),
+        v_all = _repeat_kv(_kv_gather_pages(cache, "v_pages", page_row[None]),
                            n_rep)
         q_t = q.transpose(0, 2, 1, 3)                   # (1, H, C, Dh)
         s = jnp.einsum("bhnd,bhmd->bhnm", q_t.astype(jnp.float32),
@@ -524,8 +647,10 @@ def chunk_prefill_paged(params: dict, cfg: AttentionConfig, x: jax.Array,
     # --- SLA2 block states for the chunk's blocks ---
     if cfg.mechanism == "sla2":
         t_c = c // bk                                   # blocks in the chunk
-        kb = k_new[0].reshape(t_c, bk, hkv, dh).transpose(0, 2, 1, 3)
-        vb = v_new[0].reshape(t_c, bk, hkv, dh).transpose(0, 2, 1, 3)
+        # block state from k_eff/v_eff — the page-read view — so a later
+        # decode-time recompute from (quantized) pages agrees exactly
+        kb = k_eff.reshape(t_c, bk, hkv, dh).transpose(0, 2, 1, 3)
+        vb = v_eff.reshape(t_c, bk, hkv, dh).transpose(0, 2, 1, 3)
         w = valid_t.reshape(t_c, bk).astype(jnp.float32)
         wb = w[:, None, :, None]
         kb32, vb32 = kb.astype(jnp.float32), vb.astype(jnp.float32)
@@ -533,9 +658,7 @@ def chunk_prefill_paged(params: dict, cfg: AttentionConfig, x: jax.Array,
         blk_ids = jnp.minimum(offset // bk + jnp.arange(t_c), max_p - 1)
         has_tok = w.sum(-1) > 0
         phys_blk = jnp.where(has_tok, page_row[blk_ids], 0)
-        cache["pooled_pages"] = cache["pooled_pages"].at[phys_blk].set(
-            jnp.where(has_tok[:, None, None], pooled,
-                      cache["pooled_pages"][phys_blk]))
+        cache = _store_pooled(cache, cfg, phys_blk, pooled, has_tok)
         complete = (w.sum(-1) == bk)[:, None, None, None]
         kf = phi(kb32) * wb
         h_add = (jnp.einsum("thkd,thke->thde", kf, vb32 * wb)
@@ -571,10 +694,8 @@ def decode_step_paged(params: dict, cfg: AttentionConfig, x_t: jax.Array,
         active, jnp.take_along_axis(page_table, cur_blk[:, None], 1)[:, 0], 0)
     rows = lengths % bk
     cache = dict(cache)
-    cache["k_pages"] = cache["k_pages"].at[phys_w, :, rows].set(
-        k_new[:, 0].astype(cache["k_pages"].dtype))
-    cache["v_pages"] = cache["v_pages"].at[phys_w, :, rows].set(
-        v_new[:, 0].astype(cache["v_pages"].dtype))
+    cache, _, _ = _store_kv_rows(cache, cfg, phys_w, rows,
+                                 k_new[:, 0], v_new[:, 0])
     t_new = lengths + 1
 
     if cfg.mechanism == "sla2":
@@ -583,18 +704,24 @@ def decode_step_paged(params: dict, cfg: AttentionConfig, x_t: jax.Array,
     elif use_fused(cfg, "decode"):
         # fused dense paged decode: every mapped page streams through one
         # online-softmax pass (sliding window / prefix in the position
-        # mask) — no per-slot _gather_pages copy
+        # mask) — no per-slot _gather_pages copy; quantized pools
+        # dequantize K/V tiles in registers, and decode_quant_bits enables
+        # the same QAT tile path the SLA2 decode kernel has
         from repro.kernels.sla2_decode_paged import dense_decode_fused
         o = dense_decode_fused(
             q[:, :, 0].reshape(b, hkv, n_rep, dh),
             cache["k_pages"], cache["v_pages"], page_table, t_new,
             block_k=bk, window=cfg.sliding_window,
-            prefix_len=cfg.prefix_len)
+            prefix_len=cfg.prefix_len, quant_bits=cfg.decode_quant_bits,
+            kv_quant=cfg.kv_quant, k_scale=cache.get("k_scale"),
+            v_scale=cache.get("v_scale"))
         o = o.reshape(b, h, dh)[:, :, None, :]
     else:
         # jnp gather reference (parity oracle for the dense fused kernel)
-        k_all = _repeat_kv(_gather_pages(cache["k_pages"], page_table), n_rep)
-        v_all = _repeat_kv(_gather_pages(cache["v_pages"], page_table), n_rep)
+        k_all = _repeat_kv(_kv_gather_pages(cache, "k_pages", page_table),
+                           n_rep)
+        v_all = _repeat_kv(_kv_gather_pages(cache, "v_pages", page_table),
+                           n_rep)
         s = jnp.einsum("bhqd,bhmd->bhqm", q.astype(jnp.float32),
                        k_all.astype(jnp.float32)) / jnp.sqrt(dh)
         pos_k = jnp.arange(k_all.shape[2])
@@ -628,15 +755,13 @@ def _sla2_decode_paged(params: dict, cfg: AttentionConfig, q, cache,
 
     # --- block stats for each row's current block (trash page if inactive) --
     cur_blk = (t_new - 1) // bk
-    kblk = cache["k_pages"][phys_w].astype(jnp.float32)  # (B, Hkv, bk, Dh)
-    vblk = cache["v_pages"][phys_w].astype(jnp.float32)
+    kblk = _kv_read(cache, "k_pages", phys_w)            # (B, Hkv, bk, Dh)
+    vblk = _kv_read(cache, "v_pages", phys_w)
     in_blk = (cur_blk[:, None] * bk + jnp.arange(bk)[None, :]) \
         < t_new[:, None]                                 # (B, bk)
     w = in_blk.astype(jnp.float32)[:, None, :, None]
     pooled_cur = (kblk * w).sum(-2) / jnp.maximum(w.sum(-2), 1.0)
-    cache["pooled_pages"] = cache["pooled_pages"].at[phys_w].set(
-        jnp.where(active[:, None, None], pooled_cur.astype(
-            cache["pooled_pages"].dtype), cache["pooled_pages"][phys_w]))
+    cache = _store_pooled(cache, cfg, phys_w, pooled_cur, active)
     completed = (t_new % bk) == 0
     kf_cur = phi(kblk) * w
     h_cur = jnp.einsum("bhkd,bhke->bhde", kf_cur, vblk * w)
@@ -649,7 +774,7 @@ def _sla2_decode_paged(params: dict, cfg: AttentionConfig, q, cache,
     # --- route: group-shared over the slot's logical blocks ---
     rp = sla2_p.get("router", {})
     qr = q[:, :, 0].astype(jnp.float32)                  # (B, H, Dh)
-    pk = cache["pooled_pages"][page_table].astype(jnp.float32)
+    pk = _kv_read(cache, "pooled_pages", page_table)     # (B, T_n, Hkv, Dh)
     pk = pk.transpose(0, 2, 1, 3)                        # (B, Hkv, T_n, Dh)
     if rp:
         qr = qr @ rp["proj_q"].astype(jnp.float32)
@@ -684,14 +809,14 @@ def _sla2_decode_paged(params: dict, cfg: AttentionConfig, q, cache,
             cache["k_pages"], cache["v_pages"], phys_sel, idx,
             valid.astype(jnp.int32), sel_complete.astype(jnp.int32),
             t_new, cache["h_tot"], cache["z_tot"], alpha,
-            block_k=bk, quant_bits=cfg.decode_quant_bits)
+            block_k=bk, quant_bits=cfg.decode_quant_bits,
+            kv_quant=cfg.kv_quant, k_scale=cache.get("k_scale"),
+            v_scale=cache.get("v_scale"))
         return o.reshape(b, h, dh)[:, :, None, :]
 
     # --- jnp gather reference: page-table indirection, gather, flash ---
-    k_sel_blocks = _gather_blocks(cache["k_pages"], phys_sel) \
-        .astype(jnp.float32)                             # (B,Hkv,K,bk,Dh)
-    v_sel_blocks = _gather_blocks(cache["v_pages"], phys_sel) \
-        .astype(jnp.float32)
+    k_sel_blocks = _kv_gather_blocks(cache, "k_pages", phys_sel)
+    v_sel_blocks = _kv_gather_blocks(cache, "v_pages", phys_sel)
     q_g = q[:, :, 0].astype(jnp.float32).reshape(b, hkv, n_rep, dh)
     s = jnp.einsum("bhgd,bhjkd->bhgjk", q_g, k_sel_blocks) / jnp.sqrt(dh)
     pos = idx[..., None] * bk + jnp.arange(bk)[None, None, None, :]
@@ -774,10 +899,7 @@ def decode_window_paged(params: dict, cfg: AttentionConfig, x_w: jax.Array,
                        jnp.take_along_axis(page_table, logical, 1), 0)
     rows = tok_pos % bk
     cache = dict(cache)
-    cache["k_pages"] = cache["k_pages"].at[phys_w, :, rows].set(
-        k_new.astype(cache["k_pages"].dtype))
-    cache["v_pages"] = cache["v_pages"].at[phys_w, :, rows].set(
-        v_new.astype(cache["v_pages"].dtype))
+    cache, _, _ = _store_kv_rows(cache, cfg, phys_w, rows, k_new, v_new)
     t_new = tok_pos + 1                                 # (B, W)
 
     if cfg.mechanism == "sla2":
@@ -793,14 +915,16 @@ def decode_window_paged(params: dict, cfg: AttentionConfig, x_w: jax.Array,
             q.reshape(b, hkv, n_rep, wdw, dh).transpose(0, 1, 3, 2, 4),
             cache["k_pages"], cache["v_pages"], page_table, t_new,
             block_k=bk, window=cfg.sliding_window,
-            prefix_len=cfg.prefix_len)
+            prefix_len=cfg.prefix_len, quant_bits=cfg.decode_quant_bits,
+            kv_quant=cfg.kv_quant, k_scale=cache.get("k_scale"),
+            v_scale=cache.get("v_scale"))
         o = o.transpose(0, 2, 1, 3, 4).astype(x_w.dtype) \
             .reshape(b, wdw, h * dh)
     else:
         # jnp gather reference (parity oracle for the dense verify kernel)
-        k_all = _repeat_kv(_gather_pages(cache["k_pages"], page_table),
+        k_all = _repeat_kv(_kv_gather_pages(cache, "k_pages", page_table),
                            n_rep)
-        v_all = _repeat_kv(_gather_pages(cache["v_pages"], page_table),
+        v_all = _repeat_kv(_kv_gather_pages(cache, "v_pages", page_table),
                            n_rep)
         s = jnp.einsum("bhwd,bhmd->bhwm", q.astype(jnp.float32),
                        k_all.astype(jnp.float32)) / jnp.sqrt(dh)
@@ -849,8 +973,8 @@ def _sla2_decode_window(params: dict, cfg: AttentionConfig, q, cache,
     genuine = span_ids_raw < t_n
     span_ids = jnp.minimum(span_ids_raw, t_n - 1)
     span_phys = jnp.take_along_axis(page_table, span_ids, 1)    # (B, S)
-    kblk = cache["k_pages"][span_phys].astype(jnp.float32)  # (B,S,Hkv,bk,Dh)
-    vblk = cache["v_pages"][span_phys].astype(jnp.float32)
+    kblk = _kv_read(cache, "k_pages", span_phys)        # (B,S,Hkv,bk,Dh)
+    vblk = _kv_read(cache, "v_pages", span_phys)
     pos_blk = span_ids[:, :, None] * bk + jnp.arange(bk)        # (B,S,bk)
     msk = (pos_blk[:, None] < t_new[:, :, None, None]) \
         .astype(jnp.float32)                                    # (B,W,S,bk)
@@ -874,7 +998,7 @@ def _sla2_decode_window(params: dict, cfg: AttentionConfig, q, cache,
     # --- route per row: group-shared, transient pooled keys for the span --
     rp = sla2_p.get("router", {})
     qr = q.astype(jnp.float32)                                  # (B,H,W,Dh)
-    pk = cache["pooled_pages"][page_table].astype(jnp.float32)
+    pk = _kv_read(cache, "pooled_pages", page_table)
     pk = pk.transpose(0, 2, 1, 3)                               # (B,Hkv,T,Dh)
     pw = pooled_ws
     if rp:
@@ -922,15 +1046,17 @@ def _sla2_decode_window(params: dict, cfg: AttentionConfig, q, cache,
             to_k(phys_sel), to_k(idx), to_k(valid.astype(jnp.int32)),
             to_k(sel_complete.astype(jnp.int32)), t_new,
             h_eff.transpose(0, 2, 1, 3, 4), z_eff.transpose(0, 2, 1, 3),
-            alpha, block_k=bk, quant_bits=cfg.decode_quant_bits)
+            alpha, block_k=bk, quant_bits=cfg.decode_quant_bits,
+            kv_quant=cfg.kv_quant, k_scale=cache.get("k_scale"),
+            v_scale=cache.get("v_scale"))
         return o.transpose(0, 2, 1, 3, 4)       # (B, W, Hkv, n_rep, Dh)
 
     # --- jnp gather reference (parity oracle for the verify kernel) ---
     phys_f = phys_sel.reshape(b * wdw, hkv, k_sel)
-    k_sel_blocks = _gather_blocks(cache["k_pages"], phys_f).astype(
-        jnp.float32).reshape(b, wdw, hkv, k_sel, bk, dh)
-    v_sel_blocks = _gather_blocks(cache["v_pages"], phys_f).astype(
-        jnp.float32).reshape(b, wdw, hkv, k_sel, bk, dh)
+    k_sel_blocks = _kv_gather_blocks(cache, "k_pages", phys_f) \
+        .reshape(b, wdw, hkv, k_sel, bk, dh)
+    v_sel_blocks = _kv_gather_blocks(cache, "v_pages", phys_f) \
+        .reshape(b, wdw, hkv, k_sel, bk, dh)
     q_g = q.astype(jnp.float32).reshape(b, hkv, n_rep, wdw, dh) \
         .transpose(0, 3, 1, 2, 4)                               # (B,W,H,g,D)
     s = jnp.einsum("bwhgd,bwhjkd->bwhgjk", q_g, k_sel_blocks) / jnp.sqrt(dh)
@@ -985,8 +1111,8 @@ def commit_paged_window(cfg: AttentionConfig, cache: dict, *, page_table,
     genuine = span_ids_raw < t_n
     span_ids = jnp.minimum(span_ids_raw, t_n - 1)
     span_phys = jnp.take_along_axis(page_table, span_ids, 1)
-    kblk = cache["k_pages"][span_phys].astype(jnp.float32)  # (B,S,Hkv,bk,Dh)
-    vblk = cache["v_pages"][span_phys].astype(jnp.float32)
+    kblk = _kv_read(cache, "k_pages", span_phys)        # (B,S,Hkv,bk,Dh)
+    vblk = _kv_read(cache, "v_pages", span_phys)
     pos_blk = span_ids[:, :, None] * bk + jnp.arange(bk)        # (B,S,bk)
     msk = (pos_blk < new_len[:, None, None]).astype(jnp.float32)
     live = genuine & active[:, None] & (accepted > 0)[:, None]
@@ -995,10 +1121,7 @@ def commit_paged_window(cfg: AttentionConfig, cache: dict, *, page_table,
         / jnp.maximum(msk.sum(-1), 1.0)[..., None, None]
     upd_phys = jnp.where(has_tok, span_phys, 0)
     cache = dict(cache)
-    cache["pooled_pages"] = cache["pooled_pages"].at[upd_phys].set(
-        jnp.where(has_tok[..., None, None],
-                  pooled.astype(cache["pooled_pages"].dtype),
-                  cache["pooled_pages"][upd_phys]))
+    cache = _store_pooled(cache, cfg, upd_phys, pooled, has_tok)
     # blocks that completed inside the accepted prefix join the totals
     newc = (live & ((span_ids + 1) * bk <= new_len[:, None])
             & ((span_ids + 1) * bk > lengths[:, None])).astype(jnp.float32)
@@ -1026,8 +1149,8 @@ def linear_draft_state(cfg: AttentionConfig, cache: dict, *, page_table,
     phys = jnp.where(active,
                      jnp.take_along_axis(page_table, blk0[:, None], 1)[:, 0],
                      0)
-    kblk = cache["k_pages"][phys].astype(jnp.float32)   # (B, Hkv, bk, Dh)
-    vblk = cache["v_pages"][phys].astype(jnp.float32)
+    kblk = _kv_read(cache, "k_pages", phys)             # (B, Hkv, bk, Dh)
+    vblk = _kv_read(cache, "v_pages", phys)
     pos = blk0[:, None] * bk + jnp.arange(bk)           # (B, bk)
     w = ((pos < lengths[:, None]) & active[:, None]) \
         .astype(jnp.float32)[:, None, :, None]

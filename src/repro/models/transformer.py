@@ -81,6 +81,10 @@ class ModelConfig:
     # the fused decode kernel ('none' | 'int8' | 'fp8')
     paged_impl: str = "auto"
     decode_quant_bits: str = "none"
+    # page-pool STORAGE dtype ('none' | 'int8' | 'fp8'): low-bit K/V pages
+    # with per-row f32 scales, dequantized in registers by the fused
+    # kernels / gather oracle — see models/attention.AttentionConfig
+    kv_quant: str = "none"
     # sub-configs
     moe: Optional[MOE.MoEConfig] = None
     mla: Optional[MLA.MLAConfig] = None
@@ -121,7 +125,8 @@ class ModelConfig:
             quant_bits=self.quant_bits, sla2_impl=self.sla2_impl,
             n_q_blocks=max(1, self.max_target_len // self.block_q),
             paged_impl=self.paged_impl,
-            decode_quant_bits=self.decode_quant_bits)
+            decode_quant_bits=self.decode_quant_bits,
+            kv_quant=self.kv_quant)
 
     def sla2_config(self):
         """The core SLA2 config view, with the model-level chunking and

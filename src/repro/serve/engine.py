@@ -81,6 +81,12 @@ class EngineConfig:
     paged_impl: Optional[str] = None
     # override the fused decode kernel's QAT tile path ('none'|'int8'|'fp8')
     decode_quant_bits: Optional[str] = None
+    # page-pool STORAGE dtype ('none' | 'int8' | 'fp8'): K/V (and SLA2
+    # pooled-key) pages held as low-bit codes with per-row f32 scales —
+    # pool bytes, swap traffic and decode-step HBM reads shrink ~2x at
+    # int8/fp8, so the same HBM budget holds ~2x the pages/slots (see
+    # launch/roofline.kv_page_bytes).  None keeps the model config.
+    kv_quant: Optional[str] = None
     # 'optimistic' admits against actual outstanding pages and preempts the
     # youngest slot on pool exhaustion (swap to host, else recompute);
     # 'conservative' keeps the legacy worst-case page reservation (never
@@ -239,8 +245,12 @@ class _ResumeState:
 # zeros on swap-in (the padded rows only ever write the trash page).  Page
 # axes are located name-by-position-from-the-end, matching the leaf layout
 # of models/attention.extract_paged_state regardless of leading (e.g. group)
-# axes: k/v pages are (..., P, Hkv, bk, Dh), pooled keys (..., P, Hkv, Dh).
-_PAGE_AXIS_FROM_END = {"k_pages": 4, "v_pages": 4, "pooled_pages": 3}
+# axes: k/v pages are (..., P, Hkv, bk, Dh), pooled keys (..., P, Hkv, Dh);
+# quantized pools add per-row scales (..., P, Hkv, bk) / (..., P, Hkv) that
+# swap with their pages (codes + scales together keep the round trip
+# bit-exact within the quantized representation).
+_PAGE_AXIS_FROM_END = {"k_pages": 4, "v_pages": 4, "pooled_pages": 3,
+                       "k_scale": 3, "v_scale": 3, "pooled_scale": 2}
 
 
 def _map_page_leaves(state, fn):
@@ -271,18 +281,47 @@ def _pad_swap_state(state, max_pages: int):
 
 
 class SwapPool:
-    """Host-memory swap space for preempted slots, page-granular.
+    """Host-memory swap space for preempted slots, page-granular but
+    capacity-accounted in BYTES.
 
     Holds numpy mirrors of a slot's device state — its K/V pages (+ SLA2
-    per-page pooled router keys) for every layer, plus the per-slot linear
-    totals (h_tot, z_tot) — capacity-accounted in pages.  ``can_hold`` gates
-    the scheduler's swap-vs-recompute decision; a request whose pages don't
+    per-page pooled router keys, + per-row scales when the pool is
+    quantized) for every layer, plus the per-slot linear totals (h_tot,
+    z_tot).  The capacity budget is ``capacity_pages`` REFERENCE
+    (unquantized bf16) pages worth of host memory; ``configure_bytes``
+    (called from ``ServeEngine.load`` with the actual cache layout) fixes
+    both the actual and the reference per-page byte size, so a quantized
+    pool's smaller pages pack proportionally more preempted slots into the
+    same budget.  Unconfigured, both sizes default to 1 and the accounting
+    degrades to the legacy page semantics.  ``can_hold`` gates the
+    scheduler's swap-vs-recompute decision; a request whose pages don't
     fit falls back to recompute-from-prompt."""
 
     def __init__(self, capacity_pages: int):
-        self.capacity = max(0, int(capacity_pages))
-        self.used = 0
+        self.capacity_pages = max(0, int(capacity_pages))
+        self.page_bytes = 1          # actual bytes of one swapped page
+        self.capacity_bytes = self.capacity_pages
+        self.used_bytes = 0
         self._store: dict[int, tuple[int, Any]] = {}   # arrival -> (n, state)
+
+    def configure_bytes(self, page_bytes: int, ref_page_bytes: int) -> None:
+        """Set the actual per-page byte size of swapped states and the
+        reference per-page size the page budget was provisioned against
+        (``capacity_bytes = capacity_pages * ref_page_bytes``)."""
+        assert not self._store and self.used_bytes == 0
+        self.page_bytes = max(1, int(page_bytes))
+        self.capacity_bytes = self.capacity_pages * max(1,
+                                                        int(ref_page_bytes))
+
+    @property
+    def capacity(self) -> int:
+        """Capacity in ACTUAL pages (the byte budget / actual page size)."""
+        return self.capacity_bytes // self.page_bytes
+
+    @property
+    def used(self) -> int:
+        """Pages currently held (the byte usage / actual page size)."""
+        return self.used_bytes // self.page_bytes
 
     @property
     def n_swapped(self) -> int:
@@ -290,21 +329,54 @@ class SwapPool:
         return len(self._store)
 
     def can_hold(self, n_pages: int) -> bool:
-        """True when n_pages more pages fit in the configured capacity."""
-        return self.used + n_pages <= self.capacity
+        """True when n_pages more pages' bytes fit in the capacity."""
+        return self.used_bytes + n_pages * self.page_bytes \
+            <= self.capacity_bytes
 
     def put(self, key: int, n_pages: int, state) -> None:
         """Store one slot's extracted state under the request's arrival
-        id, charging n_pages against capacity."""
+        id, charging n_pages * page_bytes against capacity."""
         assert key not in self._store and self.can_hold(n_pages)
         self._store[key] = (n_pages, state)
-        self.used += n_pages
+        self.used_bytes += n_pages * self.page_bytes
 
     def pop(self, key: int):
-        """Remove and return a stored state, releasing its pages."""
+        """Remove and return a stored state, releasing its bytes."""
         n_pages, state = self._store.pop(key)
-        self.used -= n_pages
+        self.used_bytes -= n_pages * self.page_bytes
         return state
+
+
+def _pool_page_bytes(caches, reference: bool = False) -> int:
+    """Bytes one physical page occupies across the whole cache pytree
+    (every leaf keyed in ``_PAGE_AXIS_FROM_END`` contributes
+    ``size / P * itemsize``; leading group axes fold the layer count in
+    naturally).  With ``reference=True`` the page is sized as an
+    UNQUANTIZED 2-byte pool would hold it — scale rows are dropped and
+    1-byte code arrays count 2 bytes per element — giving the
+    provisioning baseline for ``SwapPool.configure_bytes``."""
+    total = 0
+
+    def walk(node):
+        nonlocal total
+        if isinstance(node, dict):
+            for name, val in node.items():
+                if name in _PAGE_AXIS_FROM_END and hasattr(val, "shape"):
+                    axis = val.ndim - _PAGE_AXIS_FROM_END[name]
+                    item = val.dtype.itemsize
+                    if reference:
+                        if name.endswith("_scale"):
+                            continue
+                        item = max(item, 2)
+                    total += val.size // val.shape[axis] * item
+                else:
+                    walk(val)
+        elif isinstance(node, (list, tuple)):
+            for val in node:
+                walk(val)
+
+    walk(caches)
+    return total
 
 
 class Scheduler:
@@ -375,7 +447,8 @@ class ServeEngine:
                 "paged serving path; use StaticWaveEngine")
         overrides = {
             k: v for k, v in (("paged_impl", ecfg.paged_impl),
-                              ("decode_quant_bits", ecfg.decode_quant_bits))
+                              ("decode_quant_bits", ecfg.decode_quant_bits),
+                              ("kv_quant", ecfg.kv_quant))
             if v is not None and v != getattr(model.cfg, k, None)}
         if overrides:
             # rebuild so the jitted step fns close over the requested paged
@@ -420,7 +493,10 @@ class ServeEngine:
                       "prefill_tokens": 0, "prefix_hits": 0,
                       "prefix_misses": 0, "prefix_hit_tokens": 0,
                       "prefix_inserts": 0, "prefix_evictions": 0,
-                      "cow_copies": 0}
+                      "cow_copies": 0,
+                      # pool-pressure / swap telemetry, refreshed each step
+                      "swap_bytes": 0, "min_available": num_pages - 1,
+                      "pool_peak_pages": 0}
         self._sla2 = getattr(model.cfg, "mechanism", None) == "sla2"
         self._pcache = None
         if ecfg.prefix_cache:
@@ -493,6 +569,12 @@ class ServeEngine:
         self.params = params
         self.caches = self.model.init_paged_caches(
             self.cfg.max_slots, self.allocator.num_pages)
+        # Byte-accurate swap accounting: the swap budget is swap_cap
+        # REFERENCE (2-byte) pages, so a quantized pool's smaller pages
+        # pack ~2x more preempted slots into the same host memory.
+        self.swap.configure_bytes(_pool_page_bytes(self.caches),
+                                  _pool_page_bytes(self.caches,
+                                                   reference=True))
 
     def submit(self, req: Request):
         """Validate and enqueue a request (it joins a slot at admission)."""
@@ -1100,6 +1182,10 @@ class ServeEngine:
         self._admit()
         self._prefill_step()
         self._decode_step()
+        self.stats["swap_bytes"] = self.swap.used_bytes
+        self.stats["min_available"] = self.allocator.min_available
+        self.stats["pool_peak_pages"] = (self.allocator.num_pages - 1
+                                         - self.allocator.min_available)
         return len(self._slots)
 
     def run_to_completion(self, max_steps: int = 10_000,

@@ -53,17 +53,20 @@ def make_paged_attention_state(hkv: int = 2, lengths=(37, 16, 70), *,
                                num_heads: int = 4, d_model: int = 64,
                                head_dim: int = 16, max_p: int = 8,
                                seed: int = 0, mechanism: str = "sla2",
-                               sliding_window=None):
+                               sliding_window=None, kv_quant: str = "none"):
     """Build (cfg, params, cache, page_table, x_t) for one attention
     layer (``mechanism`` sla2 by default; 'full' builds the dense paged
     baseline, optionally sliding-windowed): per-slot prompts of
     ``lengths`` tokens prefilled chunk by chunk into a shared pool (trash
     page 0, pages allocated densely per slot), plus a random decode-step
-    input ``x_t`` of shape (B, 1, d_model)."""
+    input ``x_t`` of shape (B, 1, d_model).  ``kv_quant`` selects the
+    pool storage dtype ('none' | 'int8' | 'fp8') — quantized pools carry
+    per-row scale arrays and all reads dequantize."""
     cfg = A.AttentionConfig(
         d_model=d_model, num_heads=num_heads, num_kv_heads=hkv,
         head_dim=head_dim, mechanism=mechanism, block_q=32, block_k=16,
-        k_frac=0.25, n_q_blocks=8, sliding_window=sliding_window)
+        k_frac=0.25, n_q_blocks=8, sliding_window=sliding_window,
+        kv_quant=kv_quant)
     params = A.init_attention(jax.random.PRNGKey(seed), cfg)
     b = len(lengths)
     pt = np.zeros((b, max_p), np.int32)

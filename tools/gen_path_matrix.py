@@ -45,8 +45,30 @@ LAYER_KINDS = ("dense", "moe", "mla_dense", "mla_moe", "hybrid", "mlstm",
 
 def generate() -> str:
     """Render the generated section of docs/paths.md as a string."""
+    import inspect
+
+    from repro.kernels import ops as K_ops
+    from repro.kernels import sla2_decode_paged as KP
     from repro.models import attention as A
     from repro.models import transformer as T
+
+    quant_modes = " / ".join(f"`{m}`" for m in K_ops.KV_QUANT_MODES
+                             if m != "none")
+
+    def kv_quant_cell(entry) -> str:
+        """Quantized-pool support, probed from the fused entry point's
+        actual signature (a ``kv_quant`` parameter means the kernel has
+        the dequant-in-kernel path; the gather oracle always follows)."""
+        if entry is None:
+            return "—"
+        fn = getattr(KP, entry[0], None)
+        if fn is None:
+            return "—"
+        try:
+            params = inspect.signature(fn).parameters
+        except (TypeError, ValueError):
+            return "—"
+        return quant_modes if "kv_quant" in params else "—"
 
     lines = [BEGIN, ""]
 
@@ -56,11 +78,14 @@ def generate() -> str:
         "",
         "Derived from `models/attention.PAGED_DISPATCH` — the table the",
         "paged dispatch (`models/attention.use_fused`) consults at runtime.",
+        "The `kv_quant` column is probed from the fused entry points'",
+        "signatures: listed modes store the page pool low-bit and",
+        "dequantize in-kernel (the gather oracle dequantizes the same way).",
         "",
         "| mechanism | phase | `paged_impl='fused'` "
         "(Pallas, `kernels/sla2_decode_paged`) | `paged_impl='gather'` "
-        "(jnp parity oracle) |",
-        "|---|---|---|---|",
+        "(jnp parity oracle) | `kv_quant` pool |",
+        "|---|---|---|---|---|",
     ]
     for mech in MECHANISMS:
         for phase in A.PAGED_PHASES:
@@ -71,7 +96,7 @@ def generate() -> str:
                 fused = f"`{entry[0]}`"
                 gather = f"`{entry[1]}`"
             lines.append(f"| `{mech}` | {PHASE_LABEL[phase]} | {fused} "
-                         f"| {gather} |")
+                         f"| {gather} | {kv_quant_cell(entry)} |")
     backends = ", ".join(f"`{b}`" for b in A.AUTO_GATHER_BACKENDS)
     lines += [
         "",
