@@ -19,22 +19,24 @@ def main():
                             fig6_paged_decode, fig7_preemption,
                             fig8_speculative, fig9_dense_paged,
                             fig10_prefix_cache, fig11_quant_pool,
-                            table1_efficiency, table2_ablations)
+                            fig12_diffusion, table1_efficiency,
+                            table2_ablations)
     suites = {
         "table1": table1_efficiency.run,
         "table2": table2_ablations.run,
         "fig4": fig4_kernel_speed.run,
         "fig5": fig5_e2e_latency.run,
-        # fig6-fig11 also refresh the top-level BENCH_paged_decode /
+        # fig6-fig12 also refresh the top-level BENCH_paged_decode /
         # BENCH_preemption / BENCH_speculative / BENCH_dense_paged /
-        # BENCH_prefix_cache / BENCH_quant_pool .json files that track
-        # the serving perf trajectory across PRs
+        # BENCH_prefix_cache / BENCH_quant_pool / BENCH_diffusion .json
+        # files that track the serving perf trajectory across PRs
         "fig6": fig6_paged_decode.run,
         "fig7": fig7_preemption.run,
         "fig8": fig8_speculative.run,
         "fig9": fig9_dense_paged.run,
         "fig10": fig10_prefix_cache.run,
         "fig11": fig11_quant_pool.run,
+        "fig12": fig12_diffusion.run,
     }
     failures = 0
     for name, fn in suites.items():

@@ -42,8 +42,12 @@ def _scores(q, k, *, quant_bits: str):
 
 
 def sparse_flash_ref(q, k, v, idx, valid, *, block_q: int, block_k: int,
-                     causal: bool, quant_bits: str = "none"):
+                     causal: bool, quant_bits: str = "none",
+                     kv_len: int = 0):
     """Oracle for the sparse-branch forward kernel.
+
+    ``kv_len`` mirrors the kernel's ragged-tail masking: key positions
+    >= kv_len are treated as padding (0 means every key is real).
 
     Returns (o_s, lse):
       o_s : (..., N, d) renormalised sparse attention output (P_s V).
@@ -58,6 +62,8 @@ def sparse_flash_ref(q, k, v, idx, valid, *, block_q: int, block_k: int,
     if causal:
         cm = masklib.token_causal_mask(n_q, n_kv)
         s = jnp.where(cm, s, masklib.NEG_INF)
+    if kv_len and kv_len < n_kv:
+        s = jnp.where(jnp.arange(n_kv) < kv_len, s, masklib.NEG_INF)
     s_max = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e20)
     p = jnp.exp(s - s_max)
     l = p.sum(axis=-1, keepdims=True)

@@ -39,7 +39,7 @@ def _fwd_kernel(idx_ref, valid_ref,      # scalar prefetch
                 acc, m_i, l_i,           # VMEM scratch
                 *, block_q: int, block_k: int, k_sel: int,
                 causal: bool, prefix_len: int, quant_bits: str,
-                sm_scale: float):
+                sm_scale: float, kv_len: int):
     bh = pl.program_id(0)
     i = pl.program_id(1)
     jj = pl.program_id(2)
@@ -75,6 +75,11 @@ def _fwd_kernel(idx_ref, valid_ref,      # scalar prefetch
             if prefix_len:
                 vis = jnp.logical_or(vis, cols < prefix_len)
             s = jnp.where(vis, s, NEG_INF)
+        if kv_len:
+            # ragged last block: keys past the true length are padding
+            cols = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(cols < kv_len, s, NEG_INF)
 
         m_prev = m_i[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
@@ -116,17 +121,21 @@ def _fwd_kernel(idx_ref, valid_ref,      # scalar prefetch
 @functools.partial(
     jax.jit,
     static_argnames=("block_q", "block_k", "causal", "prefix_len",
-                     "quant_bits", "interpret"))
+                     "quant_bits", "interpret", "kv_len"))
 def sparse_flash_fwd(q, k, v, idx, valid, *, block_q: int, block_k: int,
                      causal: bool, prefix_len: int = 0,
                      quant_bits: str = "none",
-                     interpret: bool | None = None):
+                     interpret: bool | None = None,
+                     kv_len: int = 0):
     """Block-sparse flash attention forward.
 
     q        : (BH, N_q, d)
     k, v     : (BH, N_kv, d)
     idx      : (BH, T_m, K_sel) int32 selected kv-block ids (sorted asc)
     valid    : (BH, T_m, K_sel) int32 {0,1} padding flags
+    kv_len   : true key/value length when the sequence is ragged (padded to
+               a block_k multiple); keys at positions >= kv_len are masked
+               in-register.  0 (default) means all n_kv keys are real.
     returns  : o_s (BH, N_q, d), lse (BH, T_m, b_q) flattened to (BH, N_q)
     """
     interpret = default_interpret(interpret)
@@ -135,12 +144,14 @@ def sparse_flash_fwd(q, k, v, idx, valid, *, block_q: int, block_k: int,
     t_m = n_q // block_q
     k_sel = idx.shape[-1]
     sm_scale = 1.0 / (d ** 0.5)
+    if kv_len and kv_len >= n_kv:
+        kv_len = 0          # nothing to mask: every key is real
 
     grid = (bh, t_m, k_sel)
     kernel = functools.partial(
         _fwd_kernel, block_q=block_q, block_k=block_k, k_sel=k_sel,
         causal=causal, prefix_len=prefix_len, quant_bits=quant_bits,
-        sm_scale=sm_scale)
+        sm_scale=sm_scale, kv_len=kv_len)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

@@ -102,6 +102,45 @@ def pool_pages_for_hbm(budget_bytes: float, n_layers: int, hkv: int,
     return int(budget_bytes // per_page)
 
 
+# ---------------------------------------------------------------------------
+# Diffusion attention traffic (serve/diffusion.DiffusionEngine hot loop)
+# ---------------------------------------------------------------------------
+
+def diffusion_attention_bytes(n: int, head_dim: int, *,
+                              sparsity: float = 0.0, method: str = "full",
+                              block_q: int = 128, block_k: int = 64,
+                              el_bytes: int = 2) -> float:
+    """HBM bytes of ONE bidirectional self-attention forward per head at
+    ``n`` latent tokens — the denoise-step hot loop modeled by
+    benchmarks/fig12_diffusion.py.
+
+    All methods are flash-style (no N^2 materialisation): Q is read once
+    and O written once.  'full' additionally streams all of K and V;
+    the sparse branch streams only the selected ``(1 - sparsity)``
+    fraction of K/V tiles; sla/sla2 add one full K/V pass for the linear
+    states plus the phi(Q) side, and every routed method pays the router:
+    the block-pooled K (n/block_k rows) and the (n/block_q, n/block_k)
+    score/Top-k map, recomputed every denoise step."""
+    qo = 2 * n * head_dim * el_bytes                 # Q read + O write
+    if method == "full":
+        return qo + 2 * n * head_dim * el_bytes      # all of K + V
+    kv = (1.0 - sparsity) * 2 * n * head_dim * el_bytes
+    router = (n / block_k) * head_dim * el_bytes \
+        + (n / block_q) * (n / block_k) * 4
+    total = qo + kv + router
+    if method in ("sla", "sla2"):
+        total += 3 * n * head_dim * el_bytes         # linear K,V pass + phiQ
+    return total
+
+
+def attention_roofline_s(flops: float, bytes_: float) -> float:
+    """max(compute, memory) seconds on one v5e.  Quantized-MXU speedup
+    is modeled upstream by ``benchmarks.common.attention_flops``'s
+    ``quant_speed`` (it divides the sparse-branch FLOPs), so the peaks
+    here stay bf16."""
+    return max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW)
+
+
 _NOTES = {
     "compute": ("compute-bound: raise MXU utilisation — larger per-chip "
                 "tiles (bigger microbatch or less model parallelism), int8 "

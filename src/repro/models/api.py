@@ -77,6 +77,13 @@ class Model:
     commit_window: Optional[Callable] = None
     draft_init: Optional[Callable] = None
     draft_step: Optional[Callable] = None
+    # diffusion serving (serve/diffusion.DiffusionEngine): per-request
+    # constants precomputed once at admission (text cross-attention K/V,
+    # per-timestep adaLN modulation tables) + the cached-path denoise
+    # step.  None for every non-diffusion architecture.
+    precompute_text_kv: Optional[Callable] = None
+    precompute_step_mods: Optional[Callable] = None
+    denoise: Optional[Callable] = None
 
     def with_overrides(self, **overrides) -> "Model":
         """Rebuild this model with config fields replaced — e.g.
@@ -195,8 +202,9 @@ def _audio_model(cfg: E.EncDecConfig) -> Model:
 
 def _dit_model(cfg: D.DiTConfig) -> Model:
     def denoise(p, b, _c):
-        x = D.denoise_step(p, cfg, b["latents"], b["text"], b["time"],
-                           b["dt"])
+        x = D.denoise_step(p, cfg, b["latents"], b.get("text"),
+                           b.get("time"), b["dt"],
+                           text_kv=b.get("text_kv"), mods=b.get("mods"))
         return x, _c
 
     return Model(
@@ -216,6 +224,13 @@ def _dit_model(cfg: D.DiTConfig) -> Model:
             "text": Spec((batch, cfg.n_text, cfg.d_model), bf16),
             "time": Spec((batch,), f32), "dt": Spec((batch,), f32)},
         decode_inputs=None,
+        # diffusion-serving surface: admission-time precompute of the
+        # per-request constants + the cached-path denoise dispatch
+        precompute_text_kv=lambda p, text: D.precompute_text_kv(
+            p, cfg, text),
+        precompute_step_mods=lambda p, t: D.precompute_step_mods(
+            p, cfg, t),
+        denoise=denoise,
     )
 
 

@@ -11,8 +11,8 @@ via tests/test_docs.py; the fourth runs in the CI docs job):
   3. DOCSTRINGS — every public module-level function, class and public
      method in the user-facing surface (the src/repro/serve and
      src/repro/kernels packages, plus the public models/ modules:
-     attention.py, transformer.py, api.py) must carry a docstring
-     (ast-based, no imports needed).
+     attention.py, transformer.py, api.py, dit.py) must carry a
+     docstring (ast-based, no imports needed).
   4. --run — actually execute the cheap commands the docs promise: every
      command line in a bash block matching the RUNNABLE allowlist
      (pytest --collect-only, benchmark --smoke, gen_path_matrix --check)
@@ -105,7 +105,8 @@ DOCSTRING_DIRS = (os.path.join("src", "repro", "serve"),
 # modules; only the serving-facing surface is held to the docstring bar)
 DOCSTRING_FILES = (os.path.join("src", "repro", "models", "attention.py"),
                    os.path.join("src", "repro", "models", "transformer.py"),
-                   os.path.join("src", "repro", "models", "api.py"))
+                   os.path.join("src", "repro", "models", "api.py"),
+                   os.path.join("src", "repro", "models", "dit.py"))
 
 
 def _docstring_targets() -> list[str]:

@@ -12,7 +12,10 @@ The matrix is DERIVED, not hand-written, so it cannot drift from the code:
     kinds have a paged path at all (the rest serve through the
     ``StaticWaveEngine`` fallback);
   * ``serve/engine.EngineConfig`` — which speculative drafters exist and
-    what they require (probed by constructing the drafters' gates).
+    what they require (probed by constructing the drafters' gates);
+  * ``models/dit.MECHANISM_ATTENTION`` + ``serve/diffusion.ATTN_IMPLS`` —
+    the step-level diffusion engine's self-attention dispatch and its
+    fused/gather/reference implementation mapping.
 
 The generated tables live between the BEGIN/END markers in docs/paths.md;
 everything outside the markers is hand-written prose.
@@ -142,6 +145,48 @@ def generate() -> str:
         "gather window |",
         f"| `ngram` | `serve/speculative.{drafters['ngram']}` | any paged "
         "stack | mechanism's verify entry above |",
+    ]
+
+    # --- diffusion engine (step-level, no KV cache) ---------------------
+    from repro.models import dit as D_dit
+    from repro.serve import diffusion as DS
+    impl_path = {
+        "fused": "Pallas `kernels/sla2_fwd.sparse_flash_fwd` "
+                 "(bidirectional, re-routed every denoise step)",
+        "gather": "jnp gathered-tiles parity oracle",
+        "reference": "O(N²) einsum reference",
+    }
+    lines += [
+        "",
+        "### Diffusion engine (`serve/diffusion.DiffusionEngine`, "
+        "no KV cache)",
+        "",
+        "Derived from `models/dit.MECHANISM_ATTENTION` (the per-step "
+        "self-attention dispatch) and `serve/diffusion.ATTN_IMPLS` (the "
+        "`attn_impl` → `DiTConfig.sla2_impl` mapping). The scheduling "
+        "unit is one denoise step; there is no paged pool — a request's "
+        "footprint is one constant batch slot.",
+        "",
+        "| `mechanism` | self-attention (`models/dit`) |",
+        "|---|---|",
+    ]
+    for mech, fn in D_dit.MECHANISM_ATTENTION.items():
+        lines.append(f"| `{mech}` | `{fn.__name__}` |")
+    lines += [
+        "",
+        "| `attn_impl` | `DiTConfig.sla2_impl` | path |",
+        "|---|---|---|",
+    ]
+    for impl, sla2_impl in DS.ATTN_IMPLS.items():
+        lines.append(f"| `{impl}` | `{sla2_impl}` | {impl_path[impl]} |")
+    # exercise the resolver so a rename/behaviour change breaks --check
+    assert DS.resolve_attn_impl("fused") == "fused"
+    lines += [
+        "",
+        f"`attn_impl='auto'` resolves to `'gather'` on the {backends} "
+        "backend(s) and `'fused'` everywhere else "
+        "(`serve/diffusion.resolve_attn_impl`, same rule as "
+        "`paged_impl='auto'`).",
         "",
         END,
     ]
