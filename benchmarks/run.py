@@ -19,8 +19,8 @@ def main():
                             fig6_paged_decode, fig7_preemption,
                             fig8_speculative, fig9_dense_paged,
                             fig10_prefix_cache, fig11_quant_pool,
-                            fig12_diffusion, table1_efficiency,
-                            table2_ablations)
+                            fig12_diffusion, fig13_mesh_scaling,
+                            table1_efficiency, table2_ablations)
     suites = {
         "table1": table1_efficiency.run,
         "table2": table2_ablations.run,
@@ -37,6 +37,9 @@ def main():
         "fig10": fig10_prefix_cache.run,
         "fig11": fig11_quant_pool.run,
         "fig12": fig12_diffusion.run,
+        # fig13 refreshes the top-level BENCH_mesh.json (modeled
+        # slots-vs-hosts curve for the sharded serving engine)
+        "fig13": fig13_mesh_scaling.run,
     }
     failures = 0
     for name, fn in suites.items():

@@ -15,6 +15,13 @@ signals:
   * ``ElasticPlan``      — given old/new device counts, decides the new
     mesh shape and whether the checkpoint can be resharded directly
     (always true for our full-value checkpoints; see checkpoint/).
+
+The serving engine wires the same pieces to its sharded page pool:
+``ServeEngine.check_faults`` polls a ``HeartbeatMonitor`` (one simulated
+host per mesh device), and a dead host triggers an ``ElasticPlan``
+reshard — the dead shard's slots are preempted into swap/recompute and
+the pool is rebuilt on the surviving mesh (see
+serve/engine._reshard_after_failure and docs/serving.md).
 """
 from __future__ import annotations
 
@@ -25,6 +32,10 @@ from typing import Optional
 
 @dataclasses.dataclass
 class HeartbeatMonitor:
+    """Per-host liveness: a host missing ``misses_allowed`` consecutive
+    ``deadline_s`` windows is declared dead by ``check``.  The clock is
+    injectable (pass ``now``) so tests — and the engine's fault-injection
+    test — simulate host death without killing a process."""
     deadline_s: float = 60.0
     misses_allowed: int = 2
 
@@ -33,6 +44,7 @@ class HeartbeatMonitor:
         self._misses: dict[int, int] = {}
 
     def beat(self, host: int, now: Optional[float] = None):
+        """Record a heartbeat from ``host`` (resets its miss count)."""
         self._last[host] = time.monotonic() if now is None else now
         self._misses[host] = 0
 
@@ -51,6 +63,9 @@ class HeartbeatMonitor:
 
 @dataclasses.dataclass
 class StragglerPolicy:
+    """Flag hosts whose step time runs ``factor``x over the fleet EMA;
+    ``strikes`` consecutive slow steps escalate a warning to an eviction
+    recommendation (the caller applies it)."""
     factor: float = 3.0
     strikes: int = 3
 
@@ -58,6 +73,7 @@ class StragglerPolicy:
         self._strikes: dict[int, int] = {}
 
     def observe(self, host: int, step_time: float, ema: float) -> Optional[str]:
+        """One timing observation -> None | 'warn:<host>' | 'evict:<host>'."""
         if ema <= 0:
             return None
         if step_time > self.factor * ema:
@@ -71,6 +87,9 @@ class StragglerPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class ElasticPlan:
+    """Shrink/grow decision for an elastic restart: old vs new device
+    count -> the new mesh shape (DP absorbs the change, MP stays fixed)
+    and whether state reshards without conversion."""
     old_devices: int
     new_devices: int
 
@@ -82,5 +101,5 @@ class ElasticPlan:
 
     @property
     def reshardable(self) -> bool:
-        # full-value manifest checkpoints restore onto any mesh
+        """Full-value manifest checkpoints restore onto any mesh."""
         return True

@@ -112,6 +112,10 @@ def _fit_to_shape(spec: P, shape, mesh: Mesh) -> P:
 
 
 def spec_for_path(path: str, ndim: int, mesh: Mesh, shape=None) -> P:
+    """PartitionSpec for one leaf: first PARAM_RULES regex that matches the
+    '/'-joined ``path`` wins, right-aligned against ``ndim`` dims; pass
+    ``shape`` to drop axes the dim size cannot divide (replication
+    fallback).  No match => fully replicated."""
     for pat, spec in PARAM_RULES:
         if re.search(pat, path):
             if len(spec) > ndim:   # scalar-ish leaf, rule too wide
@@ -142,8 +146,41 @@ def param_specs(params_shape, mesh: Mesh):
 
 
 def param_shardings(params_shape, mesh: Mesh):
+    """``param_specs`` materialised as a NamedSharding tree on ``mesh``."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s),
                         param_specs(params_shape, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _strip_dp(ax, dp: frozenset):
+    if ax is None:
+        return None
+    if isinstance(ax, tuple):
+        kept = tuple(a for a in ax if a not in dp)
+        return kept[0] if len(kept) == 1 else (kept or None)
+    return None if ax in dp else ax
+
+
+def serving_param_specs(params_shape, mesh: Mesh):
+    """Inference weight placement: ``param_specs`` with the data-parallel
+    axes dropped, so only tensor-parallel ('model') dims stay sharded.
+
+    Decode is latency-bound — FSDP-sharded contracting dims would force a
+    per-step all-gather (or a DP psum whose float reassociation breaks the
+    bit-identity guarantee vs the single-device engine), while the 'data'
+    axis already earns its keep sharding slots and the page pool.  On a
+    (N, 1) host mesh this replicates the weights outright."""
+    dp = frozenset(dp_axes(mesh))
+    return jax.tree.map(
+        lambda s: P(*(_strip_dp(ax, dp) for ax in s)),
+        param_specs(params_shape, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def serving_param_shardings(params_shape, mesh: Mesh):
+    """``serving_param_specs`` as a NamedSharding tree on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        serving_param_specs(params_shape, mesh),
                         is_leaf=lambda x: isinstance(x, P))
 
 
@@ -245,5 +282,27 @@ def cache_specs(cache_shape, mesh: Mesh):
 
 
 def logical_to_shardings(spec_tree, mesh: Mesh):
+    """Materialise a PartitionSpec tree as NamedShardings on ``mesh``."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# page → shard bookkeeping (host side)
+# ---------------------------------------------------------------------------
+
+def pool_shard_count(num_pages: int, mesh: Mesh) -> int:
+    """How many ways ``cache_specs`` actually splits the page axis: the
+    full mesh size when it divides ``num_pages`` evenly, else 1 (the
+    ``_fit_to_shape`` replication fallback kicked in)."""
+    n = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    return n if n > 0 and num_pages % n == 0 else 1
+
+
+def page_to_shard(page: int, num_pages: int, n_shards: int) -> int:
+    """Which pool shard owns physical page id ``page``.  XLA partitions a
+    sharded dim into equal contiguous blocks, so shard i owns pages
+    [i*num_pages/n_shards, (i+1)*num_pages/n_shards).  The engine's fault
+    path uses this to decide which slots lost state with a dead host."""
+    assert n_shards > 0 and num_pages % n_shards == 0
+    return int(page) // (num_pages // n_shards)

@@ -70,6 +70,12 @@ start are skipped via the validity prefetch flags.
 
 All entry points run compiled on TPU and fall back to interpret mode on
 CPU (``ops.default_interpret``).
+
+Sharded serving (``EngineConfig.mesh``) wraps these five entry points in
+``shard_map`` — decode/verify split the slot (batch) axis, prefill the
+KV-head axis, with the page pool replicated into every shard's body —
+see ``distributed/shard_paged.ENTRY_AXES``; the kernels themselves are
+mesh-agnostic and always see full pools plus a shard of rows.
 """
 from __future__ import annotations
 

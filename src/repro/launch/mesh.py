@@ -18,15 +18,26 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The paper-scale (data, model) v5e mesh; ``multi_pod`` prepends a
+    2-way "pod" axis (folded into DP by ``distributed.sharding``)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever this host has — smoke tests and examples."""
-    n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+def make_host_mesh(n: int | None = None, *, devices=None):
+    """Whatever this host has — smoke tests, examples and the sharded
+    serving tests.  ``n`` takes the first n local devices (data axis);
+    ``devices`` builds the mesh from an explicit device list instead (the
+    engine's fault path re-meshes onto the survivors of a host failure).
+    Either way the mesh is (data=n, model=1)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    if devices is not None:
+        devs = list(devices)
+    else:
+        devs = jax.devices() if n is None else jax.devices()[:n]
+    return Mesh(np.asarray(devs).reshape(len(devs), 1), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline (launch/roofline.py)

@@ -102,6 +102,30 @@ def pool_pages_for_hbm(budget_bytes: float, n_layers: int, hkv: int,
     return int(budget_bytes // per_page)
 
 
+def sharded_pool_slots(n_hosts: int, hbm_per_host: float,
+                       weight_bytes: float, n_layers: int, hkv: int,
+                       page_tokens: int, head_dim: int,
+                       pages_per_slot: int, kv_quant: str = "none", *,
+                       sla2: bool = False) -> dict:
+    """Page-pool capacity of an ``n_hosts`` serving mesh — the
+    fig13_mesh_scaling model.
+
+    Every host keeps a full weight replica (serving params shard the
+    model axis only — ``distributed.sharding.serving_param_specs`` — and
+    the host mesh has model=1) and gives the rest of its HBM to its page
+    pool shard (``cache_specs``: page axis over all mesh axes).  Total
+    concurrent slots therefore scale with hosts at fixed per-slot page
+    demand: slots = n_hosts * pages_per_host // pages_per_slot."""
+    per_host_budget = max(0.0, hbm_per_host - weight_bytes)
+    pages_host = pool_pages_for_hbm(per_host_budget, n_layers, hkv,
+                                    page_tokens, head_dim, kv_quant,
+                                    sla2=sla2)
+    total_pages = n_hosts * pages_host
+    return {"hosts": n_hosts, "pages_per_host": pages_host,
+            "total_pages": total_pages,
+            "slots": total_pages // max(1, pages_per_slot)}
+
+
 # ---------------------------------------------------------------------------
 # Diffusion attention traffic (serve/diffusion.DiffusionEngine hot loop)
 # ---------------------------------------------------------------------------

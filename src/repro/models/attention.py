@@ -14,7 +14,7 @@ this is what makes the 500k-token decode shape sub-quadratic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +67,13 @@ class AttentionConfig:
     # decode-step HBM reads.  Orthogonal to decode_quant_bits (the on-the-
     # fly QAT tile path inside the kernel's MXU dots).
     kv_quant: str = "none"
+    # sharded serving: a jax.sharding.Mesh here routes every fused paged
+    # entry through its shard_map wrapper (distributed/shard_paged) — slot
+    # axis split for decode/verify, head axis for chunked prefill — so
+    # each device runs the kernel over its local share.  None (default)
+    # keeps single-device dispatch; the gather oracle is placed by GSPMD
+    # alone either way.
+    mesh: Optional[Any] = None
 
     def router_config(self) -> RouterConfig:
         """The SLA2 router view of this config (block sizes, top-k
@@ -469,6 +476,20 @@ def use_fused(cfg: AttentionConfig, phase: str) -> bool:
             and fused_paged_entry(cfg.mechanism, phase) is not None)
 
 
+def fused_entry_fn(name: str, cfg: AttentionConfig):
+    """The fused entry callable for ``name`` — wrapped in shard_map over
+    ``cfg.mesh`` when a mesh is set (distributed/shard_paged splits the
+    slot/head axis across the devices), the bare kernel otherwise.  The
+    single composition point between the dispatch table and the sharded
+    serving path."""
+    from repro.kernels import sla2_decode_paged as KP
+    fn = getattr(KP, name)
+    if cfg.mesh is None:
+        return fn
+    from repro.distributed.shard_paged import wrap_entry
+    return wrap_entry(name, fn, cfg.mesh)
+
+
 def _gather_pages(pages, page_table):
     """pages (P, Hkv, bk, Dh), page_table (B, maxP) -> (B, Hkv, maxP*bk, Dh)
     contiguous per-slot view in logical order."""
@@ -612,8 +633,7 @@ def chunk_prefill_paged(params: dict, cfg: AttentionConfig, x: jax.Array,
         # contiguous (1, maxP*bk, Dh) per-slot view is never materialised;
         # sliding-window / prefix-LM masks fold into the kernel's
         # in-register mask (quantized pools dequantize tiles in registers)
-        from repro.kernels.sla2_decode_paged import paged_flash_prefill
-        o = paged_flash_prefill(
+        o = fused_entry_fn("paged_flash_prefill", cfg)(
             q.transpose(0, 2, 1, 3)[0], cache["k_pages"], cache["v_pages"],
             page_row, offset=offset, block_k=bk, n_rep=n_rep,
             window=cfg.sliding_window, prefix_len=cfg.prefix_len,
@@ -707,8 +727,7 @@ def decode_step_paged(params: dict, cfg: AttentionConfig, x_t: jax.Array,
         # mask) — no per-slot _gather_pages copy; quantized pools
         # dequantize K/V tiles in registers, and decode_quant_bits enables
         # the same QAT tile path the SLA2 decode kernel has
-        from repro.kernels.sla2_decode_paged import dense_decode_fused
-        o = dense_decode_fused(
+        o = fused_entry_fn("dense_decode_fused", cfg)(
             q[:, :, 0].reshape(b, hkv, n_rep, dh),
             cache["k_pages"], cache["v_pages"], page_table, t_new,
             block_k=bk, window=cfg.sliding_window,
@@ -798,13 +817,12 @@ def _sla2_decode_paged(params: dict, cfg: AttentionConfig, q, cache,
     if use_fused(cfg, "decode"):
         # fused Pallas kernel: one HBM traversal of the selected pages does
         # sparse flash + the linear complement subtraction + alpha combine
-        from repro.kernels.sla2_decode_paged import sla2_decode_fused
         logit = sla2_p["alpha_logit"][:, -1].astype(jnp.float32)
         if logit.shape[0] == 1 and h > 1:
             logit = jnp.broadcast_to(logit, (h,))
         alpha = jnp.broadcast_to(logit.reshape(1, hkv, n_rep),
                                  (b, hkv, n_rep))
-        o = sla2_decode_fused(
+        o = fused_entry_fn("sla2_decode_fused", cfg)(
             q[:, :, 0].reshape(b, hkv, n_rep, dh),
             cache["k_pages"], cache["v_pages"], phys_sel, idx,
             valid.astype(jnp.int32), sel_complete.astype(jnp.int32),
@@ -910,8 +928,7 @@ def decode_window_paged(params: dict, cfg: AttentionConfig, x_w: jax.Array,
         # fused dense verify: the dense decode grid at W query rows — the
         # per-row position mask is the causal intra-window mask, giving
         # non-SLA2 stacks a multi-token verify window with no gather
-        from repro.kernels.sla2_decode_paged import dense_decode_verify
-        o = dense_decode_verify(
+        o = fused_entry_fn("dense_decode_verify", cfg)(
             q.reshape(b, hkv, n_rep, wdw, dh).transpose(0, 1, 3, 2, 4),
             cache["k_pages"], cache["v_pages"], page_table, t_new,
             block_k=bk, window=cfg.sliding_window,
@@ -1033,14 +1050,13 @@ def _sla2_decode_window(params: dict, cfg: AttentionConfig, q, cache,
     if use_fused(cfg, "verify"):
         # one Pallas pass over the routed pages for ALL window rows: the
         # decode grid extended from 1 to W query rows per (slot, kv head)
-        from repro.kernels.sla2_decode_paged import sla2_decode_verify
         logit = sla2_p["alpha_logit"][:, -1].astype(jnp.float32)
         if logit.shape[0] == 1 and h > 1:
             logit = jnp.broadcast_to(logit, (h,))
         alpha = jnp.broadcast_to(logit.reshape(1, hkv, n_rep),
                                  (b, hkv, n_rep))
         to_k = lambda x: x.transpose(0, 2, 1, 3).astype(jnp.int32)
-        o = sla2_decode_verify(
+        o = fused_entry_fn("sla2_decode_verify", cfg)(
             q.reshape(b, hkv, n_rep, wdw, dh).transpose(0, 1, 3, 2, 4),
             cache["k_pages"], cache["v_pages"],
             to_k(phys_sel), to_k(idx), to_k(valid.astype(jnp.int32)),

@@ -85,6 +85,10 @@ class ModelConfig:
     # with per-row f32 scales, dequantized in registers by the fused
     # kernels / gather oracle — see models/attention.AttentionConfig
     kv_quant: str = "none"
+    # sharded serving: a jax.sharding.Mesh routes the fused paged entries
+    # through shard_map (distributed/shard_paged); the engine sets this
+    # via its model override when EngineConfig.mesh is given
+    mesh: Optional[Any] = None
     # sub-configs
     moe: Optional[MOE.MoEConfig] = None
     mla: Optional[MLA.MLAConfig] = None
@@ -126,7 +130,7 @@ class ModelConfig:
             n_q_blocks=max(1, self.max_target_len // self.block_q),
             paged_impl=self.paged_impl,
             decode_quant_bits=self.decode_quant_bits,
-            kv_quant=self.kv_quant)
+            kv_quant=self.kv_quant, mesh=self.mesh)
 
     def sla2_config(self):
         """The core SLA2 config view, with the model-level chunking and

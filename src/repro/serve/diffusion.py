@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -150,12 +150,17 @@ class DiffusionEngineConfig:
     every request must carry; ``max_steps`` caps per-request step counts
     (it sizes the per-slot modulation tables); ``mechanism`` overrides
     the model's self-attention math (None keeps the model's own);
-    ``attn_impl`` picks the SLA2 implementation (see module docstring)."""
+    ``attn_impl`` picks the SLA2 implementation (see module docstring);
+    ``mesh`` places the params (model-axis only) and the per-slot arrays
+    (slot axis over DP) with the distributed/sharding NamedShardings —
+    the diffusion analogue of ``EngineConfig.mesh`` (there is no page
+    pool here, a request's whole footprint is one batch slot)."""
     max_slots: int = 4
     n_latent: int = 64
     max_steps: int = 32
     mechanism: Optional[str] = None
     attn_impl: str = "auto"
+    mesh: Optional[Any] = None
 
 
 def _timestep_schedule(n_steps: int, max_steps: int) -> np.ndarray:
@@ -266,6 +271,23 @@ class DiffusionEngine:
         self._kv_v = jnp.zeros((li, s, h, m, dh), pdt)
         self._mods_b = jnp.zeros((li, s, cfg.max_steps, 6 * d), jnp.float32)
         self._mods_f = jnp.zeros((s, cfg.max_steps, 2 * d), jnp.float32)
+        if cfg.mesh is not None:
+            # slot arrays over DP (batch_specs shards dim 0, or dim 1 for
+            # the layer-leading KV/mod tables), params model-axis only —
+            # per-slot math is row-independent, so placement cannot
+            # change the bit pattern of any slot's denoise trajectory
+            from repro.distributed import sharding as shardlib
+            slot_arrays = {"latents": self._latents, "kv_k": self._kv_k,
+                           "kv_v": self._kv_v, "mods_b": self._mods_b,
+                           "mods_f": self._mods_f}
+            placed = jax.device_put(
+                slot_arrays, shardlib.logical_to_shardings(
+                    shardlib.batch_specs(slot_arrays, cfg.mesh), cfg.mesh))
+            self._latents, self._kv_k, self._kv_v = (
+                placed["latents"], placed["kv_k"], placed["kv_v"])
+            self._mods_b, self._mods_f = placed["mods_b"], placed["mods_f"]
+            self.params = jax.device_put(
+                params, shardlib.serving_param_shardings(params, cfg.mesh))
         self._dt = np.zeros((s,), np.float32)
         self._clock = 0
         self.stats = {"engine_steps": 0, "denoise_steps": 0,

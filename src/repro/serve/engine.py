@@ -114,6 +114,21 @@ class EngineConfig:
     # prompts leave their pages behind in an LRU trie that pool pressure
     # evicts before preempting live slots
     prefix_cache: bool = False
+    # sharded serving: a jax.sharding.Mesh (e.g. launch/mesh.make_host_mesh)
+    # makes load() place params (model-axis only) and the page pool /
+    # per-slot linear totals (page axis over all mesh axes, slot axis over
+    # DP) with the distributed/sharding NamedShardings, and routes the
+    # fused paged entries through shard_map (distributed/shard_paged).
+    # The page table and the scheduler stay global on the host.
+    mesh: Optional[Any] = None
+    # 'auto' shards whenever a mesh is given; 'off' ignores the mesh
+    shard: str = "auto"
+    # heartbeat fault handling (armed only when a mesh is set): one
+    # simulated host per mesh device; a host missing `heartbeat_misses`
+    # deadlines is declared dead by check_faults(), which reshards the
+    # engine onto the survivors instead of killing it
+    heartbeat_deadline_s: float = 60.0
+    heartbeat_misses: int = 2
 
 
 def _sample_tokens(logits: np.ndarray, temperature: float,
@@ -445,10 +460,14 @@ class ServeEngine:
             raise ValueError(
                 f"{model.kind}/{getattr(model.cfg, 'layer_kinds', ())} has no "
                 "paged serving path; use StaticWaveEngine")
+        if ecfg.shard not in ("auto", "off"):
+            raise ValueError(f"unknown shard mode {ecfg.shard!r}")
+        mesh = ecfg.mesh if ecfg.shard == "auto" else None
         overrides = {
             k: v for k, v in (("paged_impl", ecfg.paged_impl),
                               ("decode_quant_bits", ecfg.decode_quant_bits),
-                              ("kv_quant", ecfg.kv_quant))
+                              ("kv_quant", ecfg.kv_quant),
+                              ("mesh", mesh))
             if v is not None and v != getattr(model.cfg, k, None)}
         if overrides:
             # rebuild so the jitted step fns close over the requested paged
@@ -494,9 +513,21 @@ class ServeEngine:
                       "prefix_misses": 0, "prefix_hit_tokens": 0,
                       "prefix_inserts": 0, "prefix_evictions": 0,
                       "cow_copies": 0,
+                      # sharded-serving fault telemetry
+                      "host_failures": 0, "reshards": 0,
                       # pool-pressure / swap telemetry, refreshed each step
                       "swap_bytes": 0, "min_available": num_pages - 1,
                       "pool_peak_pages": 0}
+        self.mesh = mesh
+        self.monitor = None
+        if mesh is not None:
+            from repro.distributed.fault_tolerance import HeartbeatMonitor
+            self.monitor = HeartbeatMonitor(
+                deadline_s=ecfg.heartbeat_deadline_s,
+                misses_allowed=ecfg.heartbeat_misses)
+            # every mesh device is one simulated host, alive at t=0
+            for h in range(len(list(mesh.devices.flat))):
+                self.monitor.beat(h, now=0.0)
         self._sla2 = getattr(model.cfg, "mechanism", None) == "sla2"
         self._pcache = None
         if ecfg.prefix_cache:
@@ -504,13 +535,6 @@ class ServeEngine:
             self._pcache = PrefixCache(self.page_size,
                                        self.chunk // self.page_size,
                                        need_totals=self._sla2)
-            if not hasattr(model, "_prefix_fns"):
-                model._prefix_fns = (
-                    jax.jit(model.extract_totals),
-                    jax.jit(model.insert_totals),
-                    jax.jit(model.copy_page))
-            (self._extract_totals_fn, self._insert_totals_fn,
-             self._copy_page_fn) = model._prefix_fns
         self._slots: dict[int, _Slot] = {}          # slot -> state
         self._prefill_order: list[int] = []         # FCFS chunked prefill
         self._page_table = np.zeros((ecfg.max_slots, self.max_pages),
@@ -518,44 +542,89 @@ class ServeEngine:
         self._lengths = np.zeros((ecfg.max_slots,), np.int32)
         self._rng = np.random.default_rng(ecfg.seed)
         self.completed: list[Request] = []
-        # jitted step fns are cached on the model so engine restarts (and
-        # tests spinning up many engines) share compilations; jit retraces
-        # per (chunk, max_slots, pool) shape as needed.
-        if not hasattr(model, "_paged_step_fns"):
-            model._paged_step_fns = (
-                jax.jit(lambda p, b, c: model.prefill_chunk(p, b, c)),
-                jax.jit(lambda p, b, c: model.decode_paged(p, b, c)))
-        self._prefill_fn, self._decode_fn = model._paged_step_fns
-        if model.swap_out is not None:
-            if not hasattr(model, "_swap_fns"):
-                model._swap_fns = (jax.jit(model.swap_out),
-                                   jax.jit(model.swap_in))
-            self._swap_out_fn, self._swap_in_fn = model._swap_fns
-        else:
-            self._swap_out_fn = self._swap_in_fn = None
         if ecfg.speculative not in ("off", "linear", "ngram"):
             raise ValueError(f"unknown speculative mode {ecfg.speculative!r}")
         self._spec = ecfg.speculative != "off"
         if self._spec:
-            from repro.serve.speculative import LinearDrafter, NGramDrafter
+            from repro.serve.speculative import NGramDrafter
             if ecfg.draft_len < 1:
                 raise ValueError("draft_len must be >= 1")
-            if not hasattr(model, "_spec_step_fns"):
-                model._spec_step_fns = (
-                    jax.jit(lambda p, b, c: model.decode_verify(p, b, c)),
-                    jax.jit(model.commit_window, static_argnums=(5,)))
-            self._verify_fn, self._commit_fn = model._spec_step_fns
             if ecfg.speculative == "linear":
                 if model.draft_init is None:
                     raise ValueError(
                         "speculative='linear' requires an SLA2 attention "
                         f"stack (got mechanism={model.cfg.mechanism!r})")
-                self._drafter = LinearDrafter(model, ecfg.temperature)
             else:
                 # model-free drafting: any stack with a paged verify path
                 self._drafter = NGramDrafter(model.cfg.vocab_size,
                                              max_ngram=ecfg.ngram_max,
                                              temperature=ecfg.temperature)
+        self._bind_model_fns(model)
+
+    def _bind_model_fns(self, model) -> None:
+        """(Re)bind the jitted step / swap / verify / prefix fns (and the
+        model-bound linear drafter) to ``model``.  Cached on the model
+        object so engine restarts — and tests spinning up many engines —
+        share compilations; jit retraces per (chunk, max_slots, pool)
+        shape as needed.  The fault path calls this again after rebuilding
+        the model on the surviving mesh."""
+        self.model = model
+        mesh = getattr(model.cfg, "mesh", None)
+
+        def pin(caches):
+            # keep the pool placed across steps: without the constraint
+            # GSPMD is free to hand the updated caches back replicated
+            # (it sometimes does on the shard_map path), silently undoing
+            # the load()-time placement after the first step
+            if mesh is None:
+                return caches
+            from repro.distributed import sharding as shardlib
+            return jax.lax.with_sharding_constraint(
+                caches, shardlib.logical_to_shardings(
+                    shardlib.cache_specs(caches, mesh), mesh))
+
+        if not hasattr(model, "_paged_step_fns"):
+            model._paged_step_fns = (
+                jax.jit(lambda p, b, c:
+                        (lambda o, cc: (o, pin(cc)))(
+                            *model.prefill_chunk(p, b, c))),
+                jax.jit(lambda p, b, c:
+                        (lambda o, cc: (o, pin(cc)))(
+                            *model.decode_paged(p, b, c))))
+        self._prefill_fn, self._decode_fn = model._paged_step_fns
+        if model.swap_out is not None:
+            if not hasattr(model, "_swap_fns"):
+                model._swap_fns = (
+                    jax.jit(model.swap_out),
+                    jax.jit(lambda c, row, slot, st:
+                            pin(model.swap_in(c, row, slot, st))))
+            self._swap_out_fn, self._swap_in_fn = model._swap_fns
+        else:
+            self._swap_out_fn = self._swap_in_fn = None
+        if self._spec:
+            if not hasattr(model, "_spec_step_fns"):
+                model._spec_step_fns = (
+                    jax.jit(lambda p, b, c:
+                            (lambda o, cc: (o, pin(cc)))(
+                                *model.decode_verify(p, b, c))),
+                    jax.jit(lambda c, pt, ln, acc, act, w:
+                            pin(model.commit_window(c, pt, ln, acc, act,
+                                                    w)),
+                            static_argnums=(5,)))
+            self._verify_fn, self._commit_fn = model._spec_step_fns
+            if self.cfg.speculative == "linear":
+                from repro.serve.speculative import LinearDrafter
+                self._drafter = LinearDrafter(model, self.cfg.temperature)
+        if self._pcache is not None:
+            if not hasattr(model, "_prefix_fns"):
+                model._prefix_fns = (
+                    jax.jit(model.extract_totals),
+                    jax.jit(lambda c, slot, st:
+                            pin(model.insert_totals(c, slot, st))),
+                    jax.jit(lambda c, src, dst:
+                            pin(model.copy_page(c, src, dst))))
+            (self._extract_totals_fn, self._insert_totals_fn,
+             self._copy_page_fn) = model._prefix_fns
 
     # ------------------------------------------------------------------
     @property
@@ -565,16 +634,151 @@ class ServeEngine:
         return self.scheduler.waiting
 
     def load(self, params):
-        """Install model params and allocate the paged cache pools."""
+        """Install model params and allocate the paged cache pools.  With
+        a mesh, both leave the host already placed: params model-axis only
+        (serving_param_shardings), pool + per-slot totals per cache_specs
+        (page axis over all mesh axes, slot axis over DP)."""
         self.params = params
         self.caches = self.model.init_paged_caches(
             self.cfg.max_slots, self.allocator.num_pages)
+        if self.mesh is not None:
+            self.params, self.caches = self._place_on_mesh(params,
+                                                           self.caches)
         # Byte-accurate swap accounting: the swap budget is swap_cap
         # REFERENCE (2-byte) pages, so a quantized pool's smaller pages
         # pack ~2x more preempted slots into the same host memory.
         self.swap.configure_bytes(_pool_page_bytes(self.caches),
                                   _pool_page_bytes(self.caches,
                                                    reference=True))
+
+    def _place_on_mesh(self, params, caches):
+        """device_put params and caches onto ``self.mesh`` with the
+        distributed/sharding placements (see load())."""
+        from repro.distributed import sharding as shardlib
+        params = jax.device_put(
+            params, shardlib.serving_param_shardings(params, self.mesh))
+        caches = jax.device_put(
+            caches, shardlib.logical_to_shardings(
+                shardlib.cache_specs(caches, self.mesh), self.mesh))
+        return params, caches
+
+    # ------------------------------------------------------------------
+    # fault handling (sharded serving): one simulated host per mesh device
+    # ------------------------------------------------------------------
+    def heartbeat(self, host: int, now: Optional[float] = None) -> None:
+        """Record a liveness beat from simulated host ``host``.  No-op
+        without a mesh (single-host engines have nothing to monitor)."""
+        if self.monitor is not None:
+            self.monitor.beat(host, now)
+
+    def check_faults(self, now: Optional[float] = None) -> list[int]:
+        """Poll the HeartbeatMonitor; hosts past their miss budget are
+        declared dead and the engine reshards onto the survivors
+        (``_reshard_after_failure``) instead of dying.  Returns the dead
+        host ids (hosts are renumbered 0..n-1 on the shrunk mesh
+        afterwards).  Callers drive the clock via ``now`` the same way
+        they drive ``heartbeat``."""
+        if self.monitor is None:
+            return []
+        n = len(list(self.mesh.devices.flat))
+        dead = sorted(h for h in self.monitor.check(now) if 0 <= h < n)
+        if dead:
+            self._reshard_after_failure(dead, now=now)
+        return dead
+
+    def _reshard_after_failure(self, dead: list[int],
+                               now: Optional[float] = None) -> None:
+        """Shrink the engine onto the surviving mesh devices.
+
+        The dead host's pool shard is gone and the pool is re-initialised
+        on the survivors, so EVERY occupied slot is preempted first —
+        through the normal PR-3 machinery: slots whose pages all live on
+        surviving shards swap out (the extracted state is read from
+        surviving-shard data, bit-exact), slots touching a dead-shard page
+        — or leaning on prefix-cache pages, which die with the pool — are
+        forced onto the teacher-forced recompute path.  Then ElasticPlan
+        shrinks the mesh (DP absorbs the loss, MP stays fixed), the model
+        is rebuilt with the surviving mesh so the shard_map wrappers
+        re-close over it, the jitted fns rebind, and a fresh pool is
+        placed.  Greedy outputs are unchanged vs a never-failed run
+        (tests/test_mesh_serving.py asserts token identity)."""
+        from jax.sharding import Mesh
+        from repro.distributed import fault_tolerance as ftlib
+        from repro.distributed import sharding as shardlib
+        devs = list(self.mesh.devices.flat)
+        dead_set = set(dead)
+        num_pages = self.allocator.num_pages
+        n_shards = shardlib.pool_shard_count(num_pages, self.mesh)
+        # pages whose shard sat on a dead host (empty when the pool fell
+        # back to replication: every survivor still holds every page)
+        lost = ({p for p in range(1, num_pages)
+                 if shardlib.page_to_shard(p, num_pages, n_shards)
+                 in dead_set} if n_shards > 1 else set())
+        # parked swap states that lean on shared trie pages lose them with
+        # the pool: demote them to recompute before rebuilding anything
+        for arr, res in list(self.scheduler._resume.items()):
+            if res.mode == "swap" and res.n_shared > 0:
+                self.swap.pop(arr)
+                s = res.slot
+                if s.decoding:
+                    s.replay = list(s.req.output)
+                    s.decoding = False
+                s.pos = 0
+                s.n_pages = 0
+                s.n_shared = 0
+                s.cache_node = None
+                s.snaps = None
+                if s.pinned_node is not None:
+                    self._pcache.unpin(s.pinned_node)
+                    s.pinned_node = None
+                self.stats["recomputes"] += 1
+                self.scheduler._resume[arr] = _ResumeState(
+                    mode="recompute", slot=s)
+        # preempt every occupied slot, oldest first (oldest carry the most
+        # computed state, so they get first claim on the swap pool)
+        for slot in sorted(self._slots,
+                           key=lambda sl: self._slots[sl].req.arrival):
+            s = self._slots[slot]
+            row = self._page_table[slot]
+            touched = any(int(p) in lost for p in row[row > 0])
+            tied_to_trie = (self._pcache is not None
+                            and (s.n_shared > 0 or s.pinned_node is not None
+                                 or s.cache_node is not None))
+            self._preempt(slot, force_recompute=touched or tied_to_trie)
+        if self._pcache is not None:
+            # the trie's pages die with the pool: start a fresh cache
+            from repro.serve.prefix_cache import PrefixCache
+            self._pcache = PrefixCache(self.page_size,
+                                       self.chunk // self.page_size,
+                                       need_totals=self._sla2)
+        survivors = [d for i, d in enumerate(devs) if i not in dead_set]
+        assert len(self.mesh.axis_names) == 2, \
+            "engine fault resharding expects a (data, model) host mesh"
+        mp = int(self.mesh.shape.get("model", 1))
+        plan = ftlib.ElasticPlan(old_devices=len(devs),
+                                 new_devices=len(survivors))
+        assert plan.reshardable
+        shape = plan.new_mesh_shape(model_parallel=mp)
+        self.mesh = Mesh(np.asarray(survivors).reshape(shape),
+                         self.mesh.axis_names)
+        self.monitor = ftlib.HeartbeatMonitor(
+            deadline_s=self.cfg.heartbeat_deadline_s,
+            misses_allowed=self.cfg.heartbeat_misses)
+        for h in range(len(survivors)):
+            self.monitor.beat(h, now=now)
+        self._bind_model_fns(self.model.with_overrides(mesh=self.mesh))
+        # fresh pool on the shrunk mesh; page bytes are unchanged so the
+        # SwapPool keeps its byte budget (and its swapped-out states)
+        self.allocator = PageAllocator(num_pages)
+        self.caches = self.model.init_paged_caches(self.cfg.max_slots,
+                                                   num_pages)
+        if self.params is not None:
+            self.params, self.caches = self._place_on_mesh(self.params,
+                                                           self.caches)
+        self._page_table[:] = 0
+        self._lengths[:] = 0
+        self.stats["host_failures"] += len(dead)
+        self.stats["reshards"] += 1
 
     def submit(self, req: Request):
         """Validate and enqueue a request (it joins a slot at admission)."""
@@ -689,10 +893,13 @@ class ServeEngine:
         self.stats["cow_copies"] += 1
         return True
 
-    def _preempt(self, slot: int) -> None:
+    def _preempt(self, slot: int, *, force_recompute: bool = False) -> None:
         """Evict a slot: swap its pages + linear totals to the host pool if
         they fit, else drop them and schedule recompute-from-prompt.  The
-        request re-enters the wait queue at its original priority."""
+        request re-enters the wait queue at its original priority.
+        ``force_recompute`` skips the swap path even when it would fit —
+        the fault reshard uses it for slots whose device state is (partly)
+        on a dead host and therefore must not be trusted."""
         s = self._slots.pop(slot)
         if slot in self._prefill_order:
             self._prefill_order.remove(slot)
@@ -701,8 +908,8 @@ class ServeEngine:
         s.req.n_preempt += 1
         n_sh = s.n_shared
         n_priv = s.n_pages - n_sh
-        if (self._swap_out_fn is not None and s.n_pages > 0
-                and self.swap.can_hold(n_priv)):
+        if (not force_recompute and self._swap_out_fn is not None
+                and s.n_pages > 0 and self.swap.can_hold(n_priv)):
             # shared pages are never swapped out: they stay alive under
             # the (pinned) trie node and are re-mapped by incref on
             # resume.  Only the private suffix — plus the per-slot linear

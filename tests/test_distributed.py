@@ -1,11 +1,16 @@
-"""Distribution-layer tests: sharding rules, batch/cache spec ladders, and
-the SPMD cost/memory calibration the roofline analysis relies on."""
+"""Distribution-layer tests: sharding rules, batch/cache spec ladders,
+the fault-tolerance policy pieces the sharded serving engine wires in,
+the int8 wire compression, and the SPMD cost/memory calibration the
+roofline analysis relies on.  Everything here runs live on tier-1's
+single device; the genuinely-multi-device variants run on a forced
+4-device CPU platform in tests/mesh_harness.py (CI ``mesh`` job)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed import fault_tolerance as ftlib
 from repro.distributed import sharding as shardlib
 
 
@@ -37,12 +42,21 @@ def test_param_rules_match_paths(mesh2d):
     assert all(s is None for s in ln)
 
 
-def test_fit_to_shape_drops_indivisible(mesh2d):
-    n = len(jax.devices())
-    if n == 1:
-        pytest.skip("needs >1 device to be meaningful")
-    spec = shardlib.spec_for_path("attn/wq", 2, mesh2d, (7, 13))
-    assert all(s is None or s == "model" for s in spec)
+def test_fit_to_shape_drops_indivisible():
+    # fixed-size fake mesh (the real-device variant runs in the mesh
+    # harness): a 4-wide data axis cannot divide dim 7, so the wq rule's
+    # data-parallel axis is dropped while 'model' (width 2, divides 8)
+    # survives
+    from unittest import mock
+    mesh = mock.Mock()
+    mesh.axis_names = ("data", "model")
+    mesh.shape = {"data": 4, "model": 2}
+    spec = shardlib.spec_for_path("attn/wq", 2, mesh, (7, 13))
+    assert all(s is None for s in spec)
+    spec = shardlib.spec_for_path("attn/wq", 2, mesh, (7, 8))
+    assert spec[0] is None and spec[1] == "model"
+    spec = shardlib.spec_for_path("attn/wq", 2, mesh, (8, 8))
+    assert spec[0] == "data" and spec[1] == "model"
 
 
 def test_batch_spec_ladder():
@@ -112,17 +126,19 @@ def test_cache_specs_shard_paged_pools():
 
 def test_cost_and_memory_analysis_are_per_device(mesh2d):
     """Calibration for launch/roofline.py: on an SPMD module both
-    cost_analysis flops and memory_analysis sizes are per-partition."""
+    cost_analysis flops and memory_analysis sizes are per-partition.
+    Live at ANY device count (per-partition == total on tier-1's single
+    device, a real 4-way split in the mesh harness) — this used to skip
+    everywhere tier-1 ran."""
     n = len(jax.devices())
-    if n == 1:
-        pytest.skip("needs >1 device")
     x = jax.ShapeDtypeStruct((n * 8, 128), jnp.float32,
                              sharding=NamedSharding(mesh2d, P("data", None)))
     w = jax.ShapeDtypeStruct((128, 128), jnp.float32,
                              sharding=NamedSharding(mesh2d, P()))
     with mesh2d:
         c = jax.jit(lambda x, w: x @ w).lower(x, w).compile()
-    flops = c.cost_analysis()["flops"]
+    ca = c.cost_analysis()
+    flops = (ca[0] if isinstance(ca, (list, tuple)) else ca)["flops"]
     total = 2 * (n * 8) * 128 * 128
     np.testing.assert_allclose(flops, total / n, rtol=0.01)
     arg = c.memory_analysis().argument_size_in_bytes
@@ -150,3 +166,118 @@ def test_collective_parser():
     assert out["total_bytes"] == sum(
         out[k]["bytes"] for k in ("all-gather", "all-reduce", "all-to-all",
                                   "reduce-scatter", "collective-permute"))
+
+
+# ===========================================================================
+# serving placement helpers (PR 9)
+# ===========================================================================
+
+def test_serving_param_specs_strip_dp():
+    """Inference weights shard the model axis only: every 'data' entry of
+    the training specs is dropped, so the (N, 1) host mesh replicates."""
+    from unittest import mock
+    mesh = mock.Mock()
+    mesh.axis_names = ("data", "model")
+    mesh.shape = {"data": 4, "model": 2}
+    params = {"embed": {"table": jax.ShapeDtypeStruct((100, 64),
+                                                      jnp.float32)},
+              "groups": {"l0": {"attn": {"wq": jax.ShapeDtypeStruct(
+                  (4, 64, 128), jnp.float32)}}}}
+    train = shardlib.param_specs(params, mesh)
+    serve = shardlib.serving_param_specs(params, mesh)
+    wq_t = train["groups"]["l0"]["attn"]["wq"]
+    wq_s = serve["groups"]["l0"]["attn"]["wq"]
+    assert "data" in jax.tree_util.tree_leaves(tuple(wq_t))
+    flat = [a for ax in wq_s if ax is not None
+            for a in (ax if isinstance(ax, tuple) else (ax,))]
+    assert flat == [a for a in flat if a != "data"]
+    assert "model" in flat                        # MP placement survives
+
+
+def test_page_to_shard_partitioning():
+    """XLA splits a sharded axis into equal contiguous blocks; the fault
+    path's lost-page computation must agree with that layout."""
+    assert shardlib.page_to_shard(0, 16, 4) == 0
+    assert shardlib.page_to_shard(3, 16, 4) == 0
+    assert shardlib.page_to_shard(4, 16, 4) == 1
+    assert shardlib.page_to_shard(15, 16, 4) == 3
+    counts = [sum(shardlib.page_to_shard(p, 16, 4) == s
+                  for p in range(16)) for s in range(4)]
+    assert counts == [4, 4, 4, 4]
+
+
+def test_pool_shard_count_divisibility():
+    from unittest import mock
+    mesh = mock.Mock()
+    mesh.axis_names = ("data", "model")
+    mesh.shape = {"data": 3, "model": 1}
+    assert shardlib.pool_shard_count(12, mesh) == 3
+    assert shardlib.pool_shard_count(16, mesh) == 1   # replication fallback
+
+
+# ===========================================================================
+# fault-tolerance policy (PR 9 wires these into ServeEngine.check_faults)
+# ===========================================================================
+
+def test_heartbeat_monitor_declares_dead_after_misses():
+    mon = ftlib.HeartbeatMonitor(deadline_s=1.0, misses_allowed=2)
+    for h in range(3):
+        mon.beat(h, now=0.0)
+    assert mon.check(now=0.9) == []               # everyone inside deadline
+    mon.beat(0, now=1.0)
+    mon.beat(1, now=1.0)
+    assert mon.check(now=1.5) == []               # host 2: miss 1
+    mon.beat(0, now=2.0)
+    mon.beat(1, now=2.0)
+    assert mon.check(now=2.6) == [2]              # host 2: miss 2 -> dead
+    # a beat resets the miss count
+    mon2 = ftlib.HeartbeatMonitor(deadline_s=1.0, misses_allowed=2)
+    mon2.beat(0, now=0.0)
+    assert mon2.check(now=1.1) == []              # miss 1
+    mon2.beat(0, now=1.2)
+    assert mon2.check(now=2.0) == []              # reset, inside deadline
+    assert mon2.check(now=2.4) == []              # miss 1 again, not dead
+
+
+def test_straggler_policy_escalates():
+    pol = ftlib.StragglerPolicy(factor=3.0, strikes=2)
+    assert pol.observe(5, 1.0, ema=1.0) is None
+    assert pol.observe(5, 4.0, ema=1.0) == "warn:5"
+    assert pol.observe(5, 4.0, ema=1.0) == "evict:5"
+    assert pol.observe(5, 1.0, ema=1.0) is None   # strike count resets
+
+
+def test_elastic_plan_shrinks_dp_only():
+    plan = ftlib.ElasticPlan(old_devices=4, new_devices=3)
+    assert plan.reshardable
+    assert plan.new_mesh_shape(model_parallel=1) == (3, 1)
+    with pytest.raises(AssertionError):
+        plan.new_mesh_shape(model_parallel=2)     # 3 % 2 != 0
+
+
+# ===========================================================================
+# int8 wire compression (live on tier-1's single device; the real 4-wide
+# axis runs in the mesh harness)
+# ===========================================================================
+
+def test_int8_all_reduce_matches_bf16_baseline(mesh2d):
+    from jax.experimental.shard_map import shard_map
+    from repro.distributed.compression import (bf16_all_reduce_mean,
+                                               int8_all_reduce_mean)
+    n = len(jax.devices())
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((n, 64, 8)), jnp.float32)
+    kw = dict(mesh=mesh2d, in_specs=P("data"), out_specs=P("data"),
+              check_rep=False)
+    q = shard_map(lambda v: int8_all_reduce_mean(v[0], "data")[None],
+                  **kw)(g)
+    b = shard_map(lambda v: bf16_all_reduce_mean(v[0], "data")[None],
+                  **kw)(g)
+    # two quantisation roundings, each bounded by half an int8 step
+    amax = float(jnp.max(jnp.abs(g)))
+    assert float(jnp.max(jnp.abs(q - b))) <= 2.5 * amax / 127
+    # the odd-size padding path round-trips exactly
+    g3 = jnp.asarray(rng.standard_normal((n, 7)), jnp.float32)
+    q3 = shard_map(lambda v: int8_all_reduce_mean(v[0], "data")[None],
+                   **kw)(g3)
+    assert q3.shape == g3.shape

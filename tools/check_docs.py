@@ -100,7 +100,8 @@ def check_code_blocks(path: str) -> tuple[list[str], list[str]]:
 
 # user-facing packages whose public surface must be documented
 DOCSTRING_DIRS = (os.path.join("src", "repro", "serve"),
-                  os.path.join("src", "repro", "kernels"))
+                  os.path.join("src", "repro", "kernels"),
+                  os.path.join("src", "repro", "distributed"))
 # individual public modules linted the same way (models/ has many internal
 # modules; only the serving-facing surface is held to the docstring bar)
 DOCSTRING_FILES = (os.path.join("src", "repro", "models", "attention.py"),

@@ -73,6 +73,18 @@ def generate() -> str:
             return "—"
         return quant_modes if "kv_quant" in params else "—"
 
+    from repro.distributed import shard_paged as SP
+
+    def shard_cell(entry) -> str:
+        """Sharded-serving axis, probed from the shard_map wrapper table
+        (``distributed/shard_paged.ENTRY_AXES``): the mesh axis each
+        device's local fused call covers when ``EngineConfig.mesh`` is
+        set ('slots' = batched decode rows, 'heads' = prefill KV
+        heads)."""
+        if entry is None or entry[0] not in SP.ENTRY_AXES:
+            return "—"
+        return f"`{SP.ENTRY_AXES[entry[0]]}`"
+
     lines = [BEGIN, ""]
 
     # --- mechanism x phase x implementation -----------------------------
@@ -84,11 +96,16 @@ def generate() -> str:
         "The `kv_quant` column is probed from the fused entry points'",
         "signatures: listed modes store the page pool low-bit and",
         "dequantize in-kernel (the gather oracle dequantizes the same way).",
+        "The `shard` column is probed from "
+        "`distributed/shard_paged.ENTRY_AXES`: with `EngineConfig.mesh` "
+        "set, the fused entry runs under `shard_map` with that argument "
+        "axis split across the mesh (see docs/serving.md §Sharded "
+        "serving).",
         "",
         "| mechanism | phase | `paged_impl='fused'` "
         "(Pallas, `kernels/sla2_decode_paged`) | `paged_impl='gather'` "
-        "(jnp parity oracle) | `kv_quant` pool |",
-        "|---|---|---|---|---|",
+        "(jnp parity oracle) | `kv_quant` pool | shard |",
+        "|---|---|---|---|---|---|",
     ]
     for mech in MECHANISMS:
         for phase in A.PAGED_PHASES:
@@ -99,7 +116,8 @@ def generate() -> str:
                 fused = f"`{entry[0]}`"
                 gather = f"`{entry[1]}`"
             lines.append(f"| `{mech}` | {PHASE_LABEL[phase]} | {fused} "
-                         f"| {gather} | {kv_quant_cell(entry)} |")
+                         f"| {gather} | {kv_quant_cell(entry)} "
+                         f"| {shard_cell(entry)} |")
     backends = ", ".join(f"`{b}`" for b in A.AUTO_GATHER_BACKENDS)
     lines += [
         "",
