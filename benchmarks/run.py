@@ -20,6 +20,7 @@ def main():
                             fig8_speculative, fig9_dense_paged,
                             fig10_prefix_cache, fig11_quant_pool,
                             fig12_diffusion, fig13_mesh_scaling,
+                            fig14_family_serving,
                             table1_efficiency, table2_ablations)
     suites = {
         "table1": table1_efficiency.run,
@@ -40,6 +41,9 @@ def main():
         # fig13 refreshes the top-level BENCH_mesh.json (modeled
         # slots-vs-hosts curve for the sharded serving engine)
         "fig13": fig13_mesh_scaling.run,
+        # fig14 refreshes BENCH_family.json (MLA latent-page economics +
+        # recurrent-family paged-vs-static serving)
+        "fig14": fig14_family_serving.run,
     }
     failures = 0
     for name, fn in suites.items():

@@ -5,9 +5,11 @@
 Trains a tiny model briefly (so generations aren't pure noise), then serves
 a mixed-length workload twice: through the continuous-batching ServeEngine
 (block-paged KV cache, per-slot offsets, chunked prefill) and through the
-legacy StaticWaveEngine (all slots join at sequence start, the wave drains
-before refilling).  The long prompt in the mix stalls the static waves but
-interleaves with ongoing decode under the paged engine.
+retired StaticWaveEngine (all slots join at sequence start, the wave drains
+before refilling — kept ONLY as this comparison baseline; every LM family,
+including MLA, recurrent and hybrid stacks, serves through ServeEngine).
+The long prompt in the mix stalls the static waves but interleaves with
+ongoing decode under the paged engine.
 """
 import tempfile
 import time

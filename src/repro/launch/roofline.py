@@ -91,6 +91,26 @@ def kv_page_bytes(hkv: int, page_tokens: int, head_dim: int,
     return total
 
 
+def mla_latent_page_bytes(latent_dim: int, page_tokens: int,
+                          kv_quant: str = "none") -> int:
+    """HBM bytes of ONE physical latent page of ONE MLA layer's pool
+    (models.mla.init_mla_paged_cache): the compressed latent rows
+    (page_tokens * latent_dim codes — stored ONCE, not as separate K and
+    V) plus the per-page pooled router latent; quantized pools add one
+    fp32 scale per token row and per pooled key, unquantized pools keep
+    the pooled key in fp32.  Compare against ``kv_page_bytes(hkv=heads,
+    ...)`` for the dense-cache equivalent — the paged-MLA memory win the
+    fig14 family benchmark plots."""
+    el = KV_QUANT_BYTES[kv_quant]
+    total = page_tokens * latent_dim * el           # k_pages rows
+    if kv_quant != "none":
+        total += page_tokens * 4                    # k_scale
+        total += latent_dim * el + 4                # pooled codes + scale
+    else:
+        total += latent_dim * 4                     # pooled key kept f32
+    return total
+
+
 def pool_pages_for_hbm(budget_bytes: float, n_layers: int, hkv: int,
                        page_tokens: int, head_dim: int,
                        kv_quant: str = "none", *, sla2: bool = False) -> int:

@@ -13,8 +13,7 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models.api import build_model
-from repro.serve import (EngineConfig, Request, ServeEngine,
-                         StaticWaveEngine)
+from repro.serve import EngineConfig, Request, ServeEngine
 
 
 def main():
@@ -36,11 +35,9 @@ def main():
 
     params = model.init(jax.random.PRNGKey(args.seed))
     ecfg = EngineConfig(max_slots=args.slots, max_len=args.max_len)
-    if model.decode_paged is not None:
-        eng = ServeEngine(model, ecfg)
-    else:   # recurrent mixers / MLA: static generation waves
-        print(f"[serve] {args.arch}: no paged path, using StaticWaveEngine")
-        eng = StaticWaveEngine(model, ecfg)
+    # every LM family serves paged: attention K/V pages, MLA latent pages,
+    # recurrent state checkpoints (StaticWaveEngine is benchmark-only)
+    eng = ServeEngine(model, ecfg)
     eng.load(params)
     rng = np.random.default_rng(args.seed)
     reqs = []

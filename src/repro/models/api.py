@@ -52,11 +52,13 @@ class Model:
     decode: Optional[Callable] = None
     prefill_inputs: Optional[Callable] = None
     decode_inputs: Optional[Callable] = None
-    # paged serving (continuous batching with per-slot offsets); None when
-    # the architecture keeps the static cache path (recurrent mixers, MLA).
-    # The paged hot path is selected by cfg.paged_impl: 'fused' runs the
-    # Pallas page-table kernels (sla2_decode_paged), 'gather' the jnp
-    # reference; use with_overrides() to switch on a built model.
+    # paged serving (continuous batching with per-slot offsets) covers every
+    # LM layer kind: attention pages K/V, MLA pages the compressed latent,
+    # recurrent mixers (mamba/mlstm/slstm, incl. hybrid blocks) ride the
+    # same plumbing with per-slot state checkpoints.  The paged hot path is
+    # selected by cfg.paged_impl: 'fused' runs the Pallas page-table kernels
+    # (sla2_decode_paged), 'gather' the jnp reference; use with_overrides()
+    # to switch on a built model.
     init_paged_caches: Optional[Callable] = None
     prefill_chunk: Optional[Callable] = None
     decode_paged: Optional[Callable] = None
@@ -72,11 +74,16 @@ class Model:
     # speculative decoding (serve/speculative.py): multi-token verify over
     # a draft window + deferred accepted-prefix commit, and the linear-
     # branch drafter (draft_* are None unless the mechanism carries a
-    # linear branch, i.e. sla2)
+    # linear branch, i.e. sla2, AND the stack is attention-only; the
+    # model-free ngram drafter works for every family)
     decode_verify: Optional[Callable] = None
     commit_window: Optional[Callable] = None
     draft_init: Optional[Callable] = None
     draft_step: Optional[Callable] = None
+    # True when any layer keeps per-slot state (SLA2 linear totals, MLA
+    # totals, recurrent checkpoints) that the serving prefix cache must
+    # snapshot on insert and restore on hit.
+    has_slot_state: bool = False
     # diffusion serving (serve/diffusion.DiffusionEngine): per-request
     # constants precomputed once at admission (text cross-attention K/V,
     # per-timestep adaLN modulation tables) + the cached-path denoise
@@ -134,7 +141,10 @@ def _lm_model(cfg: T.ModelConfig) -> Model:
                 window: T.commit_window(cfg, c, page_table, lengths,
                                         accepted, active, window),
         )
-        if cfg.mechanism == "sla2":
+        paged["has_slot_state"] = T.has_slot_state(cfg)
+        kinds = tuple(cfg.first_kinds) + tuple(cfg.layer_kinds)
+        attn_only = all(k in ("dense", "moe") for k in kinds)
+        if cfg.mechanism == "sla2" and attn_only:
             paged.update(
                 draft_init=lambda c, b: T.draft_init(
                     cfg, c, b["page_table"], b["lengths"], b["active"]),
@@ -149,7 +159,8 @@ def _lm_model(cfg: T.ModelConfig) -> Model:
         train_inputs=lambda seq, batch: {
             "tokens": Spec((batch, seq), i32),
             "labels": Spec((batch, seq), i32)},
-        init_caches=lambda batch, max_len: T.init_caches(cfg, batch, max_len),
+        init_caches=lambda batch, max_len, **kw: T.init_caches(
+            cfg, batch, max_len, **kw),
         prefill=lambda p, b, c: T.prefill(p, cfg, b["tokens"], c),
         decode=lambda p, b, c: T.decode_step(p, cfg, b["token"], c),
         prefill_inputs=lambda seq, batch: {"tokens": Spec((batch, seq), i32)},

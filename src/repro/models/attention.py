@@ -361,7 +361,14 @@ def init_paged_cache(cfg: AttentionConfig, num_pages: int, batch: int,
 
 _PAGE_KEYS = ("k_pages", "v_pages", "pooled_pages",
               "k_scale", "v_scale", "pooled_scale")
-_SLOT_KEYS = ("h_tot", "z_tot")
+# Per-slot state leaves: the SLA2 linear-branch totals plus the recurrent-
+# mixer state checkpoints (ssm.py names them with an "s_" prefix).  One
+# name list means the swap / prefix-snapshot / extract-insert machinery
+# carries every cache kind without knowing which layer family wrote it —
+# an SSM layer's paged cache is exactly a degenerate pool with no page
+# keys and only these per-slot leaves.  ("s_win_*" verify-window buffers
+# are deliberately absent: they are transient within one engine step.)
+_SLOT_KEYS = ("h_tot", "z_tot", "s_state", "s_c", "s_n", "s_h", "s_m")
 
 # page array -> its per-row scale array when the pool is quantized
 _SCALE_OF = {"k_pages": "k_scale", "v_pages": "v_scale",
@@ -380,19 +387,27 @@ def extract_paged_state(cache: dict, page_row, slot, lead: int = 0) -> dict:
 def insert_paged_state(cache: dict, page_row, slot, state: dict,
                        lead: int = 0) -> dict:
     """Write a previously extracted slot state back into a layer cache at a
-    (possibly different) page row / slot id."""
+    (possibly different) page row / slot id.  Raises ValueError when the
+    state carries a leaf the target cache does not have — inserting an MLA
+    latent page into a dense pool (or an SSM checkpoint into an attention
+    cache) is a scheduler bug, not a silent no-op."""
     ix = (slice(None),) * lead
     new = dict(cache)
     for k, v in state.items():
+        if k not in cache:
+            raise ValueError(
+                f"state leaf {k!r} does not exist in the target cache "
+                f"(has {sorted(cache)}): wrong cache kind for this insert")
         tgt = ix + ((page_row,) if k in _PAGE_KEYS else (slot,))
         new[k] = cache[k].at[tgt].set(jnp.asarray(v, cache[k].dtype))
     return new
 
 
 def extract_slot_state(cache: dict, slot, lead: int = 0) -> dict:
-    """Copy ONLY the per-slot keys (the SLA2 linear totals h_tot/z_tot) out
-    of a layer cache — the O(d^2) prefix summary the serving prefix cache
-    snapshots per trie node.  Empty dict for mechanisms without them."""
+    """Copy ONLY the per-slot keys (SLA2 linear totals h_tot/z_tot and/or
+    the recurrent-mixer "s_*" state checkpoints) out of a layer cache —
+    the O(d^2) prefix summary the serving prefix cache snapshots per trie
+    node.  Empty dict for layer kinds without per-slot state."""
     ix = (slice(None),) * lead
     return {k: cache[k][ix + (slot,)] for k in _SLOT_KEYS if k in cache}
 
@@ -404,6 +419,10 @@ def insert_slot_state(cache: dict, slot, state: dict, lead: int = 0) -> dict:
     ix = (slice(None),) * lead
     new = dict(cache)
     for k, v in state.items():
+        if k not in cache:
+            raise ValueError(
+                f"slot-state leaf {k!r} does not exist in the target cache "
+                f"(has {sorted(cache)}): wrong cache kind for this insert")
         new[k] = cache[k].at[ix + (slot,)].set(jnp.asarray(v, cache[k].dtype))
     return new
 

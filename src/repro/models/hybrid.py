@@ -23,6 +23,8 @@ from repro.models import ssm as S
 
 def init_hybrid(key, attn_cfg: A.AttentionConfig, ssm_cfg: S.SSMConfig,
                 dtype=jnp.float32) -> dict:
+    """Initialise one hybrid block: full attention params, inner Mamba
+    params (no own out-projection), per-path fusion norms and betas."""
     k1, k2 = jax.random.split(key)
     d_inner = attn_cfg.num_heads * attn_cfg.head_dim
     attn = A.init_attention(k1, attn_cfg, dtype)
@@ -54,6 +56,7 @@ def _ssm_inner_forward(params, x, cfg: S.SSMConfig, state=None):
 
 
 def _ssm_inner_decode(params, x_t, cfg: S.SSMConfig, state):
+    """mamba_decode_step without the final out-projection."""
     p = dict(params)
     d_inner = cfg.num_heads * cfg.head_dim
     p["w_out"] = jnp.eye(d_inner, dtype=x_t.dtype)
@@ -69,6 +72,8 @@ def _attn_inner_forward(params, cfg: A.AttentionConfig, x, positions=None):
 
 
 def _fuse(params, a_out, s_out, x_dtype):
+    """Hymba fusion: per-path rmsnorm, beta-weighted average, shared
+    output projection (attention's wo)."""
     y = (params["beta_attn"].astype(jnp.float32)
          * L.rmsnorm(params["norm_attn"], a_out).astype(jnp.float32)
          + params["beta_ssm"].astype(jnp.float32)
@@ -78,6 +83,7 @@ def _fuse(params, a_out, s_out, x_dtype):
 
 def hybrid_forward(params: dict, attn_cfg: A.AttentionConfig,
                    ssm_cfg: S.SSMConfig, x: jax.Array, positions=None):
+    """Full-sequence hybrid block: attention + Mamba in parallel, fused."""
     a_out = _attn_inner_forward(params["attn"], attn_cfg, x, positions)
     s_out, _ = _ssm_inner_forward(params["ssm"], x, ssm_cfg)
     return _fuse(params, a_out, s_out, x.dtype)
@@ -85,6 +91,7 @@ def hybrid_forward(params: dict, attn_cfg: A.AttentionConfig,
 
 def init_hybrid_cache(attn_cfg: A.AttentionConfig, ssm_cfg: S.SSMConfig,
                       batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    """Static decode cache: attention K/V block cache + Mamba SSD state."""
     return {
         "attn": A.init_cache(attn_cfg, batch, max_len, dtype),
         "ssm": S.mamba_init_state(ssm_cfg, batch),
@@ -92,6 +99,7 @@ def init_hybrid_cache(attn_cfg: A.AttentionConfig, ssm_cfg: S.SSMConfig,
 
 
 def hybrid_prefill(params, attn_cfg, ssm_cfg, x, cache, positions=None):
+    """Full-sequence forward populating both sub-caches."""
     p_attn = dict(params["attn"])
     d_inner = attn_cfg.num_heads * attn_cfg.head_dim
     p_attn["wo"] = jnp.eye(d_inner, dtype=x.dtype)
@@ -102,6 +110,7 @@ def hybrid_prefill(params, attn_cfg, ssm_cfg, x, cache, positions=None):
 
 
 def hybrid_decode_step(params, attn_cfg, ssm_cfg, x_t, cache):
+    """One-token hybrid decode over the static caches."""
     p_attn = dict(params["attn"])
     d_inner = attn_cfg.num_heads * attn_cfg.head_dim
     p_attn["wo"] = jnp.eye(d_inner, dtype=x_t.dtype)
@@ -110,3 +119,99 @@ def hybrid_decode_step(params, attn_cfg, ssm_cfg, x_t, cache):
                                          cache["ssm"])
     y = _fuse(params, a_out, s_out, x_t.dtype)
     return y, {"attn": attn_cache, "ssm": ssm_state}
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: attention page pool + Mamba state checkpoints, composed
+# ---------------------------------------------------------------------------
+# The hybrid paged cache is the nested composition of its two sub-caches:
+# {"attn": attention page pool, "ssm": ssm.py state checkpoints}.  The
+# engine's swap/CoW machinery walks nested dicts, so both halves ride the
+# existing plumbing; the attention half pages K/V, the ssm half is the
+# degenerate one-checkpoint-per-slot cache.
+
+def _inner_attn_params(params: dict, attn_cfg: A.AttentionConfig, dtype):
+    """Attention sub-params with wo replaced by identity (fusion owns the
+    shared output projection)."""
+    p = dict(params["attn"])
+    d_inner = attn_cfg.num_heads * attn_cfg.head_dim
+    p["wo"] = jnp.eye(d_inner, dtype=dtype)
+    return p
+
+
+def _inner_ssm_params(params: dict, ssm_cfg: S.SSMConfig, dtype):
+    """SSM sub-params with w_out replaced by identity."""
+    p = dict(params["ssm"])
+    d_inner = ssm_cfg.num_heads * ssm_cfg.head_dim
+    p["w_out"] = jnp.eye(d_inner, dtype=dtype)
+    return p
+
+
+def init_hybrid_paged_cache(attn_cfg: A.AttentionConfig,
+                            ssm_cfg: S.SSMConfig, num_pages: int,
+                            batch: int, *, window: int = 1,
+                            dtype=jnp.bfloat16) -> dict:
+    """Paged cache for one hybrid block: attention page pool + per-slot
+    Mamba state checkpoints (with a ``window``-deep verify buffer)."""
+    return {
+        "attn": A.init_paged_cache(attn_cfg, num_pages, batch, dtype),
+        "ssm": S.init_paged_state("mamba", ssm_cfg, batch, window),
+    }
+
+
+def hybrid_prefill_chunk_paged(params, attn_cfg, ssm_cfg, x, cache, *,
+                               page_row, offset, chunk_len, slot):
+    """Prefill one chunk of ONE slot through both sub-paths: chunked page
+    attention + masked Mamba chunk scan advancing the slot checkpoint."""
+    a_out, attn_cache = A.chunk_prefill_paged(
+        _inner_attn_params(params, attn_cfg, x.dtype), attn_cfg, x,
+        cache["attn"], page_row=page_row, offset=offset,
+        chunk_len=chunk_len, slot=slot)
+    s_out, ssm_cache = S.ssm_prefill_paged(
+        "mamba", _inner_ssm_params(params, ssm_cfg, x.dtype), ssm_cfg, x,
+        cache["ssm"], offset=offset, chunk_len=chunk_len, slot=slot)
+    y = _fuse(params, a_out, s_out, x.dtype)
+    return y, {"attn": attn_cache, "ssm": ssm_cache}
+
+
+def hybrid_decode_step_paged(params, attn_cfg, ssm_cfg, x_t, cache, *,
+                             page_table, lengths, active):
+    """Batched one-token hybrid decode over the paged sub-caches."""
+    a_out, attn_cache = A.decode_step_paged(
+        _inner_attn_params(params, attn_cfg, x_t.dtype), attn_cfg, x_t,
+        cache["attn"], page_table=page_table, lengths=lengths,
+        active=active)
+    s_out, ssm_cache = S.ssm_decode_paged(
+        "mamba", _inner_ssm_params(params, ssm_cfg, x_t.dtype), ssm_cfg,
+        x_t, cache["ssm"], active=active)
+    y = _fuse(params, a_out, s_out, x_t.dtype)
+    return y, {"attn": attn_cache, "ssm": ssm_cache}
+
+
+def hybrid_decode_window_paged(params, attn_cfg, ssm_cfg, x_w, cache, *,
+                               page_table, lengths, active, window_len):
+    """Speculative verify over a W-token window: the attention half writes
+    K/V but commits no block state; the ssm half parks candidate states in
+    its transient window buffers.  Commit follows via
+    ``hybrid_commit_window``."""
+    a_out, attn_cache = A.decode_window_paged(
+        _inner_attn_params(params, attn_cfg, x_w.dtype), attn_cfg, x_w,
+        cache["attn"], page_table=page_table, lengths=lengths,
+        active=active, window_len=window_len)
+    s_out, ssm_cache = S.ssm_decode_window_paged(
+        "mamba", _inner_ssm_params(params, ssm_cfg, x_w.dtype), ssm_cfg,
+        x_w, cache["ssm"], active=active, window_len=window_len)
+    y = _fuse(params, a_out, s_out, x_w.dtype)
+    return y, {"attn": attn_cache, "ssm": ssm_cache}
+
+
+def hybrid_commit_window(attn_cfg, ssm_cfg, cache, *, page_table, lengths,
+                         accepted, active, window: int) -> dict:
+    """Commit the accepted verify prefix into both sub-caches."""
+    attn_cache = A.commit_paged_window(
+        attn_cfg, cache["attn"], page_table=page_table, lengths=lengths,
+        accepted=accepted, active=active, window=window)
+    ssm_cache = S.ssm_commit_window(
+        "mamba", ssm_cfg, cache["ssm"], accepted=accepted, active=active,
+        window=window)
+    return {"attn": attn_cache, "ssm": ssm_cache}

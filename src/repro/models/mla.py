@@ -36,11 +36,14 @@ from repro.core import sla2 as sla2lib
 from repro.core.attention import phi
 from repro.core.router import RouterConfig
 from repro.core.sla2 import SLA2Config
+from repro.kernels import ops
 from repro.models import layers as L
 
 
 @dataclasses.dataclass(frozen=True)
 class MLAConfig:
+    """MLA projection geometry: latent rank, nope/rope query split, value
+    head dim, and the optional q-LoRA rank (0 = dense q projection)."""
     kv_lora_rank: int = 512
     qk_nope_dim: int = 128
     qk_rope_dim: int = 64
@@ -49,16 +52,22 @@ class MLAConfig:
 
     @property
     def qk_head_dim(self) -> int:
+        """Per-head query/key width: content (nope) + rotary dims."""
         return self.qk_nope_dim + self.qk_rope_dim
 
     @property
-    def latent_dim(self) -> int:  # the SLA2 working dimension
+    def latent_dim(self) -> int:
+        """The SLA2 working dimension — compressed K/V latent plus the
+        shared rope key; one latent-page row stores this many values."""
         return self.kv_lora_rank + self.qk_rope_dim
 
 
 def init_mla(key, d_model: int, num_heads: int, mcfg: MLAConfig,
              *, mechanism: str, sla2_cfg: Optional[SLA2Config],
              n_q_blocks: int, dtype=jnp.float32) -> dict:
+    """Initialise one MLA layer: down/up latent projections, q projection
+    (dense or LoRA), output projection, and — for mechanism 'sla2' — the
+    latent-space SLA2 router/alpha parameters."""
     ks = jax.random.split(key, 8)
     h = num_heads
     std = d_model ** -0.5
@@ -158,6 +167,8 @@ def mla_forward(params: dict, x: jax.Array, positions, *, mcfg: MLAConfig,
 
 def init_mla_cache(mcfg: MLAConfig, num_heads: int, batch: int, max_len: int,
                    block_k: int, dtype=jnp.bfloat16) -> dict:
+    """Static latent decode cache: raw latents, per-block pooled router
+    keys, the linear totals, and the incremental current-block stats."""
     t_n = max_len // block_k
     d_lat = mcfg.latent_dim
     return {
@@ -294,3 +305,432 @@ def mla_decode_step(params: dict, x_t: jax.Array, cache: dict, *,
     o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
     o = o.reshape(b, 1, h * mcfg.v_head_dim).astype(x_t.dtype)
     return o @ params["w_o"], cache
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: latent page pool
+# ---------------------------------------------------------------------------
+# MLA's paged cache stores the COMPRESSED latent [c_kv; k_rope] — one
+# (block_k, latent_dim) tile per page with a dummy kv-head axis of 1 so the
+# leaf shapes line up with the engine's page-axis bookkeeping
+# (_PAGE_AXIS_FROM_END) and the attention._PAGE_KEYS swap machinery carries
+# them unchanged.  There is NO v_pages: the values are the c_kv slice of
+# the latent (``lat[..., :kv_lora_rank]``), which is what makes the latent
+# pool a fraction of a dense pool's bytes (launch/roofline.py
+# mla_latent_page_bytes).  The gather-path jnp implementations below are
+# the only implementations (no fused MLA page kernels yet) and serve as
+# the oracle for any future kernel work.
+
+def init_mla_paged_cache(mcfg: MLAConfig, num_pages: int, batch: int,
+                         block_k: int, *, kv_quant: str = "none",
+                         dtype=jnp.bfloat16) -> dict:
+    """Latent page pool for one MLA layer: k_pages (P, 1, bk, d_lat)
+    [+ per-row f32 scales when quantized], per-page pooled router latents,
+    and the per-slot SLA2 linear totals h_tot/z_tot."""
+    d_lat, r = mcfg.latent_dim, mcfg.kv_lora_rank
+    if kv_quant != "none":
+        qdt = ops.kv_pool_dtype(kv_quant)
+        cache = {
+            "k_pages": jnp.zeros((num_pages, 1, block_k, d_lat), qdt),
+            "k_scale": jnp.zeros((num_pages, 1, block_k), jnp.float32),
+            "pooled_pages": jnp.zeros((num_pages, 1, d_lat), qdt),
+            "pooled_scale": jnp.zeros((num_pages, 1), jnp.float32),
+        }
+    else:
+        cache = {
+            "k_pages": jnp.zeros((num_pages, 1, block_k, d_lat), dtype),
+            "pooled_pages": jnp.zeros((num_pages, 1, d_lat), jnp.float32),
+        }
+    cache.update({
+        "h_tot": jnp.zeros((batch, d_lat, r), jnp.float32),
+        "z_tot": jnp.zeros((batch, d_lat), jnp.float32),
+    })
+    return cache
+
+
+def _lat_read(cache: dict, name: str, idx):
+    """``cache[name][idx]`` dequantized to f32 (the latent-pool twin of
+    attention._kv_read; the scale broadcasts per row)."""
+    out = cache[name][idx]
+    sk = {"k_pages": "k_scale", "pooled_pages": "pooled_scale"}[name]
+    if sk in cache:
+        return ops.dequant_rows(out, cache[sk][idx])
+    return out.astype(jnp.float32)
+
+
+def _store_lat_rows(cache: dict, kv_quant: str, phys, rows, lat_new):
+    """Write latent token rows at ``[phys, :, rows]``, quantizing exactly
+    once at write time.  ``lat_new``: (..., 1, d_lat) with leading shape ==
+    phys/rows.  Returns (cache, lat_eff) where lat_eff is the f32 value a
+    page read observes — block states derive from THESE so prefill-time
+    state matches decode-time recompute from pages."""
+    if kv_quant == "none":
+        cache["k_pages"] = cache["k_pages"].at[phys, :, rows].set(
+            lat_new.astype(cache["k_pages"].dtype))
+        return cache, lat_new.astype(jnp.float32)
+    k_c, k_s = ops.quantize_rows(lat_new, kv_quant)
+    cache["k_pages"] = cache["k_pages"].at[phys, :, rows].set(k_c)
+    cache["k_scale"] = cache["k_scale"].at[phys, :, rows].set(k_s)
+    return cache, ops.dequant_rows(k_c, k_s)
+
+
+def _store_lat_pooled(cache: dict, kv_quant: str, phys, pooled, keep):
+    """Write pooled router latents (f32, (..., 1, d_lat)) at pages
+    ``phys``; rows where ``keep`` is False retain the existing page content
+    (the masked-write idiom of the trash-page scheme)."""
+    if kv_quant == "none":
+        cache["pooled_pages"] = cache["pooled_pages"].at[phys].set(
+            jnp.where(keep[..., None, None],
+                      pooled.astype(cache["pooled_pages"].dtype),
+                      cache["pooled_pages"][phys]))
+        return cache
+    codes, scale = ops.quantize_rows(pooled, kv_quant)
+    cache["pooled_pages"] = cache["pooled_pages"].at[phys].set(
+        jnp.where(keep[..., None, None], codes,
+                  cache["pooled_pages"][phys]))
+    cache["pooled_scale"] = cache["pooled_scale"].at[phys].set(
+        jnp.where(keep[..., None], scale, cache["pooled_scale"][phys]))
+    return cache
+
+
+def mla_prefill_chunk_paged(params: dict, x: jax.Array, cache: dict, *,
+                            mcfg: MLAConfig, num_heads: int, block_k: int,
+                            kv_quant: str = "none", page_row, offset,
+                            chunk_len, slot):
+    """Prefill one chunk of ONE slot's prompt into the latent page pool.
+
+    Mirrors attention.chunk_prefill_paged: exact dense latent attention
+    over the slot's gathered pages (prefill is exact even for sla2 — the
+    sparse/linear split applies to decode), K/V rows land at
+    ``page_row[pos // bk]``, and the chunk's complete blocks fold into the
+    per-slot linear totals (reset when ``offset == 0``).  x: (1, C,
+    d_model); returns (y, cache)."""
+    _, c, _ = x.shape
+    h = num_heads
+    bk = block_k
+    d_lat, r = mcfg.latent_dim, mcfg.kv_lora_rank
+    max_p = page_row.shape[0]
+    positions = (offset + jnp.arange(c))[None]
+    q_t, k_t, _ = _latent_qk(params, mcfg, h, x, positions)
+    scale_fix = jnp.sqrt(d_lat / mcfg.qk_head_dim).astype(jnp.float32)
+    q = q_t.astype(jnp.float32) * scale_fix             # (1, H, C, d_lat)
+
+    tok_pos = offset + jnp.arange(c)
+    valid_t = jnp.arange(c) < chunk_len
+    logical = jnp.minimum(tok_pos // bk, max_p - 1)
+    phys = jnp.where(valid_t, page_row[logical], 0)
+    rows = tok_pos % bk
+    cache = dict(cache)
+    cache, k_eff = _store_lat_rows(cache, kv_quant, phys, rows,
+                                   k_t[0][:, None])     # (C, 1, d_lat)
+
+    # --- exact dense latent attention: chunk queries over history + chunk --
+    g = _lat_read(cache, "k_pages", page_row[None])     # (1, maxP, 1, bk, d)
+    k_all = g.reshape(1, max_p * bk, d_lat)
+    s = jnp.einsum("bhnd,bmd->bhnm", q, k_all) / jnp.sqrt(d_lat)
+    vis = masklib.token_causal_mask(c, max_p * bk, offset)
+    s = jnp.where(vis, s, masklib.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhnm,bmr->bhnr", p, k_all[..., :r])
+    w_uv = params["w_uv"].reshape(r, h, mcfg.v_head_dim)
+    o = jnp.einsum("bhnr,rhv->bnhv", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(1, c, h * mcfg.v_head_dim).astype(x.dtype)
+
+    # --- SLA2 block states for the chunk's blocks (from the page-read
+    # view k_eff, so decode-time recompute from pages agrees exactly) ---
+    t_c = c // bk
+    kb = k_eff[:, 0].astype(jnp.float32).reshape(t_c, bk, d_lat)
+    w = valid_t.reshape(t_c, bk).astype(jnp.float32)
+    pooled = (kb * w[..., None]).sum(1) \
+        / jnp.maximum(w.sum(1), 1.0)[:, None]           # (t_c, d_lat)
+    blk_ids = jnp.minimum(offset // bk + jnp.arange(t_c), max_p - 1)
+    has_tok = w.sum(1) > 0
+    phys_blk = jnp.where(has_tok, page_row[blk_ids], 0)
+    cache = _store_lat_pooled(cache, kv_quant, phys_blk, pooled[:, None],
+                              has_tok)
+    complete = w.sum(1) == bk
+    kf = phi(kb) * w[..., None]
+    vb = kb[..., :r] * w[..., None]
+    h_add = (jnp.einsum("tkd,tkr->tdr", kf, vb)
+             * complete[:, None, None]).sum(0)
+    z_add = (kf.sum(1) * complete[:, None]).sum(0)
+    fresh = offset == 0
+    cache["h_tot"] = cache["h_tot"].at[slot].set(
+        jnp.where(fresh, 0.0, cache["h_tot"][slot]) + h_add)
+    cache["z_tot"] = cache["z_tot"].at[slot].set(
+        jnp.where(fresh, 0.0, cache["z_tot"][slot]) + z_add)
+    return o @ params["w_o"], cache
+
+
+def mla_decode_step_paged(params: dict, x_t: jax.Array, cache: dict, *,
+                          mcfg: MLAConfig, num_heads: int, k_frac: float,
+                          block_k: int, kv_quant: str = "none", page_table,
+                          lengths, active):
+    """Batched one-token MLA-SLA2 decode over the latent page pool.
+
+    The paged twin of ``mla_decode_step``: the current block's stats are
+    recomputed from page content instead of carried incrementally (so a
+    swapped-in or preempted slot needs no extra state), routing is per q
+    head over the pooled latent pages, and the linear branch subtracts the
+    routed complete blocks from the slot totals.  x_t: (B, 1, d_model);
+    ``active`` rows gate every cache write (inactive rows hit the trash
+    page)."""
+    b = x_t.shape[0]
+    h = num_heads
+    bk = block_k
+    d_lat, r = mcfg.latent_dim, mcfg.kv_lora_rank
+    t_n = page_table.shape[1]
+    positions = lengths[:, None]
+    q_t, k_new, _ = _latent_qk(params, mcfg, h, x_t, positions)
+    scale_fix = jnp.sqrt(d_lat / mcfg.qk_head_dim).astype(jnp.float32)
+    q1 = q_t[:, :, 0].astype(jnp.float32) * scale_fix   # (B, H, d_lat)
+
+    cur_blk = lengths // bk
+    phys_w = jnp.where(
+        active, jnp.take_along_axis(page_table, cur_blk[:, None], 1)[:, 0], 0)
+    rows = lengths % bk
+    cache = dict(cache)
+    cache, _ = _store_lat_rows(cache, kv_quant, phys_w, rows,
+                               k_new[:, 0][:, None])
+    t_new = lengths + 1
+
+    # --- current-block stats recomputed from pages ---
+    kblk = _lat_read(cache, "k_pages", phys_w)[:, 0]    # (B, bk, d_lat)
+    in_blk = (cur_blk[:, None] * bk + jnp.arange(bk)[None, :]) < t_new[:, None]
+    w = in_blk.astype(jnp.float32)[..., None]           # (B, bk, 1)
+    pooled_cur = (kblk * w).sum(1) / jnp.maximum(w.sum(1), 1.0)
+    cache = _store_lat_pooled(cache, kv_quant, phys_w, pooled_cur[:, None],
+                              active)
+    completed = (t_new % bk) == 0
+    kf_cur = phi(kblk) * w
+    h_cur = jnp.einsum("bkd,bkr->bdr", kf_cur, kblk[..., :r] * w)
+    z_cur = kf_cur.sum(1)
+    upd = completed & active
+    cache["h_tot"] = cache["h_tot"] + jnp.where(upd[:, None, None], h_cur,
+                                                0.0)
+    cache["z_tot"] = cache["z_tot"] + jnp.where(upd[:, None], z_cur, 0.0)
+
+    # --- route per q head over pooled latent pages ---
+    sla2_p = params["sla2"]
+    rp = sla2_p.get("router", {})
+    qr = q1
+    pk = _lat_read(cache, "pooled_pages", page_table)[:, :, 0]  # (B,T,d_lat)
+    if rp:
+        qr = qr @ rp["proj_q"].astype(jnp.float32)
+        pk = pk @ rp["proj_k"].astype(jnp.float32)
+    scores = jnp.einsum("bhd,btd->bht", qr, pk) / jnp.sqrt(d_lat)
+    blk_ids = jnp.arange(t_n)
+    allowed = blk_ids[None, None, :] <= cur_blk[:, None, None]
+    scores = jnp.where(allowed, scores, masklib.NEG_INF)
+    scores = jnp.where(blk_ids[None, None, :] == cur_blk[:, None, None],
+                       jnp.inf, scores)
+    k_sel = max(1, round(k_frac * t_n))
+    top_vals, idx = jax.lax.top_k(scores, k_sel)        # (B, H, K_sel)
+    valid = top_vals > masklib.NEG_INF * 0.5
+    pt = jnp.broadcast_to(page_table[:, None, :], (b, h, t_n))
+    phys_sel = jnp.where(valid, jnp.take_along_axis(pt, idx, axis=2), 0)
+    complete_bound = cur_blk + jnp.where(completed, 1, 0)
+    selc = (valid & (idx < complete_bound[:, None, None])) \
+        .astype(jnp.float32)
+
+    # --- sparse branch over gathered latent pages ---
+    kg = _lat_read(cache, "k_pages", phys_sel)[..., 0, :, :]  # (B,H,K,bk,d)
+    s = jnp.einsum("bhd,bhjkd->bhjk", q1, kg) / jnp.sqrt(d_lat)
+    pos = idx[..., None] * bk + jnp.arange(bk)[None, None, None, :]
+    vis = (pos < t_new[:, None, None, None]) & valid[..., None]
+    s = jnp.where(vis, s, masklib.NEG_INF)
+    p = jax.nn.softmax(s.reshape(b, h, -1), axis=-1).reshape(s.shape)
+    vg = kg[..., :r]
+    o_s = jnp.einsum("bhjk,bhjkr->bhr", p, vg)
+
+    # --- linear branch: totals minus selected complete blocks ---
+    qf = phi(q1)
+    kf_sel = phi(kg)
+    ls = jnp.einsum("bhd,bhjkd->bhjk", qf, kf_sel) * selc[..., None]
+    sub_num = jnp.einsum("bhjk,bhjkr->bhr", ls, vg)
+    sub_den = ls.sum(axis=(-1, -2))
+    den_tot = jnp.einsum("bhd,bd->bh", qf, cache["z_tot"])
+    num = jnp.einsum("bhd,bdr->bhr", qf, cache["h_tot"]) - sub_num
+    den = den_tot - sub_den
+    den = jnp.where(den > 1e-4 * den_tot + 1e-12, den, 0.0)[..., None]
+    o_l = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+
+    a = jax.nn.sigmoid(sla2_p["alpha_logit"].astype(jnp.float32))
+    if a.shape[0] == 1 and h > 1:
+        a = jnp.broadcast_to(a, (h, a.shape[1]))
+    a_last = a[:, -1][None, :, None]
+    a_eff = jnp.where(den > 0, a_last, 1.0)
+    o_lat = a_eff * o_s + (1.0 - a_eff) * o_l           # (B, H, r)
+
+    w_uv = params["w_uv"].reshape(r, h, mcfg.v_head_dim)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(b, 1, h * mcfg.v_head_dim).astype(x_t.dtype)
+    return o @ params["w_o"], cache
+
+
+def mla_decode_window_paged(params: dict, x_w: jax.Array, cache: dict, *,
+                            mcfg: MLAConfig, num_heads: int, k_frac: float,
+                            block_k: int, kv_quant: str = "none", page_table,
+                            lengths, active, window_len):
+    """Verify pass of speculative decoding over the latent pool: W query
+    rows per slot with all block state TRANSIENT (the paged twin of
+    attention._sla2_decode_window with per-q-head routing) — pooled keys
+    for span blocks are computed per row from page content, each row's
+    linear totals add span blocks completing earlier in the window, and
+    nothing is committed: ``mla_commit_window`` follows host acceptance.
+    x_w: (B, W, d_model); returns (y (B, W, d_model), cache)."""
+    from repro.models.attention import window_span
+    b, wdw, _ = x_w.shape
+    h = num_heads
+    bk = block_k
+    d_lat, r = mcfg.latent_dim, mcfg.kv_lora_rank
+    t_n = page_table.shape[1]
+    n_span = window_span(wdw, bk)
+    tok_pos = lengths[:, None] + jnp.arange(wdw)        # (B, W)
+    q_t, k_new, _ = _latent_qk(params, mcfg, h, x_w, tok_pos)
+    scale_fix = jnp.sqrt(d_lat / mcfg.qk_head_dim).astype(jnp.float32)
+    q = q_t.astype(jnp.float32) * scale_fix             # (B, H, W, d_lat)
+
+    valid_w = (jnp.arange(wdw)[None, :] < window_len[:, None]) \
+        & active[:, None]
+    logical = jnp.minimum(tok_pos // bk, t_n - 1)
+    phys_w = jnp.where(valid_w,
+                       jnp.take_along_axis(page_table, logical, 1), 0)
+    rows = tok_pos % bk
+    cache = dict(cache)
+    cache, _ = _store_lat_rows(cache, kv_quant, phys_w, rows,
+                               k_new[..., None, :])
+    t_new = tok_pos + 1                                 # (B, W)
+
+    # --- transient stats for the blocks the window can touch ---
+    blk0 = lengths // bk
+    span_ids_raw = blk0[:, None] + jnp.arange(n_span)[None, :]  # (B, S)
+    genuine = span_ids_raw < t_n
+    span_ids = jnp.minimum(span_ids_raw, t_n - 1)
+    span_phys = jnp.take_along_axis(page_table, span_ids, 1)
+    kblk = _lat_read(cache, "k_pages", span_phys)[:, :, 0]  # (B,S,bk,d_lat)
+    pos_blk = span_ids[:, :, None] * bk + jnp.arange(bk)    # (B,S,bk)
+    msk = (pos_blk[:, None] < t_new[:, :, None, None]) \
+        .astype(jnp.float32)                                # (B,W,S,bk)
+    pooled_ws = jnp.einsum("bwsk,bskd->bwsd", msk, kblk) \
+        / jnp.maximum(msk.sum(-1), 1.0)[..., None]
+    kf_span = phi(kblk)
+    h_span = jnp.einsum("bskd,bskr->bsdr", kf_span, kblk[..., :r])
+    z_span = kf_span.sum(-2)                                # (B,S,d_lat)
+    cmplt = (genuine[:, None]
+             & ((span_ids[:, None] + 1) * bk <= t_new[:, :, None])) \
+        .astype(jnp.float32)                                # (B,W,S)
+    h_eff = cache["h_tot"][:, None] \
+        + jnp.einsum("bws,bsdr->bwdr", cmplt, h_span)
+    z_eff = cache["z_tot"][:, None] \
+        + jnp.einsum("bws,bsd->bwd", cmplt, z_span)
+
+    # --- route per row, per q head, transient pooled keys for the span ---
+    sla2_p = params["sla2"]
+    rp = sla2_p.get("router", {})
+    qr = q
+    pk = _lat_read(cache, "pooled_pages", page_table)[:, :, 0]
+    pw = pooled_ws
+    if rp:
+        qr = qr @ rp["proj_q"].astype(jnp.float32)
+        pk = pk @ rp["proj_k"].astype(jnp.float32)
+        pw = pw @ rp["proj_k"].astype(jnp.float32)
+    scores = jnp.einsum("bhwd,btd->bwht", qr, pk) / jnp.sqrt(d_lat)
+    s_span = jnp.einsum("bhwd,bwsd->bwhs", qr, pw) / jnp.sqrt(d_lat)
+    blk_ids = jnp.arange(t_n)
+    # cache pooled keys of span blocks are stale (committed only after
+    # acceptance): overwrite their scores with the per-row transient ones
+    for s_i in range(n_span):
+        m = (blk_ids[None, None, None, :]
+             == span_ids[:, s_i, None, None, None]) \
+            & genuine[:, s_i, None, None, None]
+        scores = jnp.where(m, s_span[:, :, :, s_i:s_i + 1], scores)
+    cur_blk = (t_new - 1) // bk                             # (B, W)
+    allowed = blk_ids[None, None, None, :] <= cur_blk[:, :, None, None]
+    scores = jnp.where(allowed, scores, masklib.NEG_INF)
+    scores = jnp.where(blk_ids[None, None, None, :]
+                       == cur_blk[:, :, None, None], jnp.inf, scores)
+    k_sel = max(1, round(k_frac * t_n))
+    top_vals, idx = jax.lax.top_k(scores, k_sel)            # (B,W,H,K)
+    valid = top_vals > masklib.NEG_INF * 0.5
+    pt = jnp.broadcast_to(page_table[:, None, None, :], (b, wdw, h, t_n))
+    phys_sel = jnp.where(valid, jnp.take_along_axis(pt, idx, axis=3), 0)
+    completed = (t_new % bk) == 0
+    complete_bound = cur_blk + jnp.where(completed, 1, 0)
+    selc = (valid & (idx < complete_bound[:, :, None, None])) \
+        .astype(jnp.float32)
+
+    # --- sparse branch over gathered latent pages ---
+    kg = _lat_read(cache, "k_pages", phys_sel)[..., 0, :, :]
+    qw = q.transpose(0, 2, 1, 3)                            # (B,W,H,d_lat)
+    s = jnp.einsum("bwhd,bwhjkd->bwhjk", qw, kg) / jnp.sqrt(d_lat)
+    pos = idx[..., None] * bk + jnp.arange(bk)              # (B,W,H,K,bk)
+    vis = (pos < t_new[:, :, None, None, None]) & valid[..., None]
+    s = jnp.where(vis, s, masklib.NEG_INF)
+    p = jax.nn.softmax(s.reshape(b, wdw, h, -1), axis=-1).reshape(s.shape)
+    vg = kg[..., :r]
+    o_s = jnp.einsum("bwhjk,bwhjkr->bwhr", p, vg)
+
+    # --- linear branch: per-row effective totals minus selected blocks ---
+    qf = phi(qw)
+    kf_sel = phi(kg)
+    ls = jnp.einsum("bwhd,bwhjkd->bwhjk", qf, kf_sel) * selc[..., None]
+    sub_num = jnp.einsum("bwhjk,bwhjkr->bwhr", ls, vg)
+    sub_den = ls.sum(axis=(-1, -2))
+    den_tot = jnp.einsum("bwhd,bwd->bwh", qf, z_eff)
+    num = jnp.einsum("bwhd,bwdr->bwhr", qf, h_eff) - sub_num
+    den = den_tot - sub_den
+    den = jnp.where(den > 1e-4 * den_tot + 1e-12, den, 0.0)[..., None]
+    o_l = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+
+    a = jax.nn.sigmoid(sla2_p["alpha_logit"].astype(jnp.float32))
+    if a.shape[0] == 1 and h > 1:
+        a = jnp.broadcast_to(a, (h, a.shape[1]))
+    a_last = a[:, -1][None, None, :, None]
+    a_eff = jnp.where(den > 0, a_last, 1.0)
+    o_lat = a_eff * o_s + (1.0 - a_eff) * o_l               # (B,W,H,r)
+
+    w_uv = params["w_uv"].reshape(r, h, mcfg.v_head_dim)
+    o = jnp.einsum("bwhr,rhv->bwhv", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(b, wdw, h * mcfg.v_head_dim).astype(x_w.dtype)
+    return o @ params["w_o"], cache
+
+
+def mla_commit_window(cache: dict, *, mcfg: MLAConfig, block_k: int,
+                      kv_quant: str = "none", page_table, lengths, accepted,
+                      active, window: int) -> dict:
+    """Commit the ACCEPTED prefix of a verify window into the latent block
+    state (the MLA twin of attention.commit_paged_window): rewrite pooled
+    router latents of the touched blocks masked to the new committed
+    length, and fold blocks completing inside the accepted prefix into the
+    per-slot linear totals.  Latent pages were written by the verify pass."""
+    from repro.models.attention import window_span
+    bk = block_k
+    r = mcfg.kv_lora_rank
+    t_n = page_table.shape[1]
+    n_span = window_span(window, bk)
+    new_len = lengths + accepted
+    blk0 = lengths // bk
+    span_ids_raw = blk0[:, None] + jnp.arange(n_span)[None, :]  # (B, S)
+    genuine = span_ids_raw < t_n
+    span_ids = jnp.minimum(span_ids_raw, t_n - 1)
+    span_phys = jnp.take_along_axis(page_table, span_ids, 1)
+    kblk = _lat_read(cache, "k_pages", span_phys)[:, :, 0]  # (B,S,bk,d_lat)
+    pos_blk = span_ids[:, :, None] * bk + jnp.arange(bk)
+    msk = (pos_blk < new_len[:, None, None]).astype(jnp.float32)
+    live = genuine & active[:, None] & (accepted > 0)[:, None]
+    has_tok = (msk.sum(-1) > 0) & live
+    pooled = jnp.einsum("bsk,bskd->bsd", msk, kblk) \
+        / jnp.maximum(msk.sum(-1), 1.0)[..., None]
+    upd_phys = jnp.where(has_tok, span_phys, 0)
+    cache = dict(cache)
+    cache = _store_lat_pooled(cache, kv_quant, upd_phys, pooled[:, :, None],
+                              has_tok)
+    newc = (live & ((span_ids + 1) * bk <= new_len[:, None])
+            & ((span_ids + 1) * bk > lengths[:, None])).astype(jnp.float32)
+    kf = phi(kblk)
+    cache["h_tot"] = cache["h_tot"] \
+        + jnp.einsum("bs,bskd,bskr->bdr", newc, kf, kblk[..., :r])
+    cache["z_tot"] = cache["z_tot"] \
+        + jnp.einsum("bs,bskd->bd", newc, kf)
+    return cache

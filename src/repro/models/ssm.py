@@ -34,6 +34,9 @@ from repro.models import layers as L
 
 @dataclasses.dataclass(frozen=True)
 class SSMConfig:
+    """Recurrent-mixer geometry shared by mamba / mLSTM / sLSTM layers:
+    head count, per-head channel dim, SSD state width, and the chunk
+    length of the chunkwise scans."""
     num_heads: int
     head_dim: int            # per-head channel dim (dh)
     d_state: int = 16        # ds (mamba) / qk head dim (mlstm uses head_dim)
@@ -47,6 +50,8 @@ class SSMConfig:
 # ===========================================================================
 
 def init_mamba(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    """Initialise one Mamba(SSD) mixer: x/gate/B/C/dt projections, the
+    per-head log-decay ``a_log``, skip scale, and output projection."""
     ks = jax.random.split(key, 6)
     h, dh, ds = cfg.num_heads, cfg.head_dim, cfg.d_state
     d_inner = h * dh
@@ -66,6 +71,7 @@ def init_mamba(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
 
 
 def mamba_init_state(cfg: SSMConfig, batch: int) -> jax.Array:
+    """Fresh SSD state: zeros (B, H, dh, ds) f32."""
     return jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.d_state),
                      jnp.float32)
 
@@ -102,8 +108,13 @@ def _mamba_scan_chunks(xbch, a_b, b_b, c_b, s0):
 
 
 def mamba_forward(params: dict, x: jax.Array, cfg: SSMConfig,
-                  state: Optional[jax.Array] = None):
-    """x: (B, N, d_model) -> (y, final_state). N % cfg.chunk == 0."""
+                  state: Optional[jax.Array] = None, *,
+                  valid: Optional[jax.Array] = None):
+    """x: (B, N, d_model) -> (y, final_state). N % cfg.chunk == 0.
+    ``valid`` (B, N) bool masks padding positions: dt is zeroed there, so
+    a = exp(0) = 1 (no decay) and u = 0 (no input) — the state passes
+    through a pad position bit-exactly, which is what lets the paged
+    engine prefill page-padded chunks without corrupting the carry."""
     b, n, _ = x.shape
     h, dh, ds, c = cfg.num_heads, cfg.head_dim, cfg.d_state, cfg.chunk
     c = min(c, n)
@@ -114,6 +125,8 @@ def mamba_forward(params: dict, x: jax.Array, cfg: SSMConfig,
     cb = (x @ params["w_c"]).reshape(b, n, h, ds).astype(jnp.float32)
     dt = jax.nn.softplus(
         (x @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"])
+    if valid is not None:
+        dt = dt * valid[..., None].astype(jnp.float32)
     a = jnp.exp(-jnp.exp(params["a_log"].astype(jnp.float32)) * dt)  # (B,N,H)
     xin = (xs.astype(jnp.float32) * dt[..., None])
 
@@ -155,6 +168,9 @@ def mamba_decode_step(params: dict, x_t: jax.Array, cfg: SSMConfig,
 # ===========================================================================
 
 def init_mlstm(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    """Initialise one mLSTM mixer: q/k/v + exponential i/f gate projections
+    (forget bias 3.0 so cells start remembering), output rmsnorm, silu gate
+    and output projection."""
     ks = jax.random.split(key, 7)
     h, dv = cfg.num_heads, cfg.head_dim
     dk = cfg.qk_dim or dv // 2
@@ -175,6 +191,8 @@ def init_mlstm(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
 
 
 def mlstm_init_state(cfg: SSMConfig, batch: int) -> dict:
+    """Fresh matrix-memory state: C (B,H,dk,dv), normaliser n (B,H,dk),
+    stabiliser m (B,H) at -1e30 (log-zero)."""
     h, dv = cfg.num_heads, cfg.head_dim
     dk = cfg.qk_dim or dv // 2
     return {
@@ -185,8 +203,14 @@ def mlstm_init_state(cfg: SSMConfig, batch: int) -> dict:
 
 
 def mlstm_forward(params: dict, x: jax.Array, cfg: SSMConfig,
-                  state: Optional[dict] = None):
-    """Chunkwise stabilised mLSTM. x: (B, N, d_model)."""
+                  state: Optional[dict] = None, *,
+                  valid: Optional[jax.Array] = None):
+    """Chunkwise stabilised mLSTM. x: (B, N, d_model).
+    ``valid`` (B, N) bool masks padding positions so they are transparent
+    to the recurrence: the input gate goes to log-zero, the forget gate to
+    log-one, AND k/v are zeroed — zeroing k/v is required because when the
+    stabiliser m_end is dominated by the carried state, pad rows would
+    still contribute a nonzero ws*k term to c_new/n_new."""
     b, n, _ = x.shape
     h, dv = cfg.num_heads, cfg.head_dim
     dk = cfg.qk_dim or dv // 2
@@ -201,6 +225,12 @@ def mlstm_forward(params: dict, x: jax.Array, cfg: SSMConfig,
     ft = jax.nn.log_sigmoid(
         (x @ params["w_f"]).astype(jnp.float32)
         + params["f_bias"]).reshape(b, n, h)                # log forget gate
+    if valid is not None:
+        vm = valid[..., None]
+        it = jnp.where(vm, it, -1e30)
+        ft = jnp.where(vm, ft, 0.0)
+        k = k * vm[..., None].astype(jnp.float32)
+        v = v * vm[..., None].astype(jnp.float32)
 
     if state is None:
         state = mlstm_init_state(cfg, b)
@@ -258,6 +288,7 @@ def mlstm_forward(params: dict, x: jax.Array, cfg: SSMConfig,
 
 def mlstm_decode_step(params: dict, x_t: jax.Array, cfg: SSMConfig,
                       state: dict):
+    """One-token mLSTM update. x_t: (B, 1, d_model) -> (y_t, state)."""
     b = x_t.shape[0]
     h, dv = cfg.num_heads, cfg.head_dim
     dk = cfg.qk_dim or dv // 2
@@ -290,6 +321,8 @@ def mlstm_decode_step(params: dict, x_t: jax.Array, cfg: SSMConfig,
 # ===========================================================================
 
 def init_slstm(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    """Initialise one sLSTM mixer: fused 4-gate input projection, per-head
+    block-diagonal recurrent weights, output rmsnorm + projection."""
     ks = jax.random.split(key, 3)
     h, dh = cfg.num_heads, cfg.head_dim
     d_inner = h * dh
@@ -306,6 +339,8 @@ def init_slstm(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
 
 
 def slstm_init_state(cfg: SSMConfig, batch: int) -> dict:
+    """Fresh scalar-memory state: c/n/h zeros and stabiliser m at -1e30,
+    all (B, H, dh) f32."""
     h, dh = cfg.num_heads, cfg.head_dim
     z = lambda: jnp.zeros((batch, h, dh), jnp.float32)
     return {"c": z(), "n": z(), "h": z(),
@@ -333,19 +368,32 @@ def _slstm_cell(params, cfg, gates_in, st):
 
 
 def slstm_forward(params: dict, x: jax.Array, cfg: SSMConfig,
-                  state: Optional[dict] = None):
+                  state: Optional[dict] = None, *,
+                  valid: Optional[jax.Array] = None):
+    """Sequential sLSTM scan over time. x: (B, N, d_model) -> (y, state).
+    ``valid`` (B, N) bool gates the whole cell update per step, so padding
+    positions leave the state (and emitted hidden) untouched."""
     b, n, _ = x.shape
     h, dh = cfg.num_heads, cfg.head_dim
     if state is None:
         state = slstm_init_state(cfg, b)
     gates_in = (x @ params["w_in"]).astype(jnp.float32)     # (B, N, 4*H*dh)
 
-    def step(st, g_t):
-        st = _slstm_cell(params, cfg, g_t, st)
-        return st, st["h"]
+    if valid is None:
+        def step(st, g_t):
+            st = _slstm_cell(params, cfg, g_t, st)
+            return st, st["h"]
+        xs = gates_in.transpose(1, 0, 2)
+    else:
+        def step(st, args):
+            g_t, v_t = args
+            st_new = _slstm_cell(params, cfg, g_t, st)
+            keep = v_t.reshape(-1, 1, 1)
+            st = jax.tree.map(lambda a, o: jnp.where(keep, a, o), st_new, st)
+            return st, st["h"]
+        xs = (gates_in.transpose(1, 0, 2), valid.T)
 
-    st_fin, hs = maps.scan(step, state, gates_in.transpose(1, 0, 2),
-                           never_unroll=True)
+    st_fin, hs = maps.scan(step, state, xs, never_unroll=True)
     y = hs.transpose(1, 0, 2, 3).reshape(b, n, h * dh)
     y = L.rmsnorm(params["out_norm"], y.astype(x.dtype))
     return y @ params["w_out"], st_fin
@@ -353,8 +401,150 @@ def slstm_forward(params: dict, x: jax.Array, cfg: SSMConfig,
 
 def slstm_decode_step(params: dict, x_t: jax.Array, cfg: SSMConfig,
                       state: dict):
+    """One-token sLSTM cell update. x_t: (B, 1, d_model) -> (y_t, state)."""
     g = (x_t[:, 0] @ params["w_in"]).astype(jnp.float32)
     st = _slstm_cell(params, cfg, g, state)
     y = st["h"].reshape(x_t.shape[0], 1, -1)
     y = L.rmsnorm(params["out_norm"], y.astype(x_t.dtype))
     return y @ params["w_out"], st
+
+
+# ===========================================================================
+# Paged serving: per-slot state checkpoints
+# ===========================================================================
+# A recurrent mixer's "paged cache" is degenerate: the whole sequence is an
+# O(1) state, so each serving slot keeps one checkpoint per state leaf
+# ("s_<leaf>" — the analogue of the sla2 linear totals h_tot/z_tot) plus a
+# transient per-step window buffer ("s_win_<leaf>", (B, W, ...)) used by
+# speculative verify.  The s_* leaves ride the engine's existing swap /
+# extract / insert machinery via attention._SLOT_KEYS; s_win_* is
+# deliberately NOT listed there — it only lives within one engine step.
+
+PAGED_STATE = {
+    "mamba": ("state",),
+    "mlstm": ("c", "n", "m"),
+    "slstm": ("c", "n", "h", "m"),
+}
+
+
+def _base_state(kind: str, cfg: SSMConfig, batch: int) -> dict:
+    """Fresh state for ``kind`` as a uniform dict of leaves (mamba's single
+    array is wrapped as {"state": ...})."""
+    if kind == "mamba":
+        return {"state": mamba_init_state(cfg, batch)}
+    if kind == "mlstm":
+        return mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return slstm_init_state(cfg, batch)
+    raise ValueError(f"unknown recurrent mixer kind {kind!r}")
+
+
+def _run_forward(kind: str, params: dict, x: jax.Array, cfg: SSMConfig,
+                 st: dict, valid):
+    """Dispatch the chunk forward for ``kind`` on dict-form state."""
+    if kind == "mamba":
+        y, s = mamba_forward(params, x, cfg, st["state"], valid=valid)
+        return y, {"state": s}
+    fwd = mlstm_forward if kind == "mlstm" else slstm_forward
+    return fwd(params, x, cfg, st, valid=valid)
+
+
+def _run_decode(kind: str, params: dict, x_t: jax.Array, cfg: SSMConfig,
+                st: dict):
+    """Dispatch the one-token decode step for ``kind`` on dict-form state."""
+    if kind == "mamba":
+        y, s = mamba_decode_step(params, x_t, cfg, st["state"])
+        return y, {"state": s}
+    step = mlstm_decode_step if kind == "mlstm" else slstm_decode_step
+    return step(params, x_t, cfg, st)
+
+
+def init_paged_state(kind: str, cfg: SSMConfig, batch: int,
+                     window: int = 1) -> dict:
+    """Per-slot state-checkpoint cache for the paged engine: "s_<leaf>"
+    checkpoints (batch-leading, swap-visible) and "s_win_<leaf>" transient
+    window buffers (B, window, ...) for speculative verify."""
+    base = _base_state(kind, cfg, batch)
+    cache = {f"s_{k}": v for k, v in base.items()}
+    for k, v in base.items():
+        cache[f"s_win_{k}"] = jnp.zeros((batch, window) + v.shape[1:],
+                                        v.dtype)
+    return cache
+
+
+def ssm_prefill_paged(kind: str, params: dict, cfg: SSMConfig, x: jax.Array,
+                      cache: dict, *, offset, chunk_len, slot):
+    """Chunk-prefill one slot's recurrent state. x: (1, C, d_model); rows at
+    or past ``chunk_len`` are padding and masked transparent.  offset == 0
+    resets the slot checkpoint to the fresh state first (recycled slots)."""
+    c = x.shape[1]
+    names = PAGED_STATE[kind]
+    init = _base_state(kind, cfg, 1)
+    cur = {k: cache[f"s_{k}"][slot][None] for k in names}
+    fresh = offset == 0
+    st0 = {k: jnp.where(fresh, init[k], cur[k]) for k in names}
+    valid = (jnp.arange(c) < chunk_len)[None]
+    y, fin = _run_forward(kind, params, x, cfg, st0, valid)
+    cache = dict(cache)
+    for k in names:
+        cache[f"s_{k}"] = cache[f"s_{k}"].at[slot].set(fin[k][0])
+    return y, cache
+
+
+def ssm_decode_paged(kind: str, params: dict, cfg: SSMConfig, x_t: jax.Array,
+                     cache: dict, *, active):
+    """One decode step for all slots. ``active`` (B,) bool gates the state
+    write-back so idle/preempted slots keep their checkpoints untouched."""
+    names = PAGED_STATE[kind]
+    st = {k: cache[f"s_{k}"] for k in names}
+    y, st_new = _run_decode(kind, params, x_t, cfg, st)
+    cache = dict(cache)
+    for k in names:
+        msk = active.reshape((-1,) + (1,) * (st_new[k].ndim - 1))
+        cache[f"s_{k}"] = jnp.where(msk, st_new[k], cache[f"s_{k}"])
+    return y, cache
+
+
+def ssm_decode_window_paged(kind: str, params: dict, cfg: SSMConfig,
+                            x_w: jax.Array, cache: dict, *, active,
+                            window_len):
+    """Speculative verify over a W-token window WITHOUT committing: steps
+    the recurrence over x_w (B, W, d_model), parking the post-step state at
+    each position in the transient s_win_* buffers (rows past a slot's
+    ``window_len`` repeat its last in-window state).  ssm_commit_window
+    later promotes the accepted checkpoint into s_*."""
+    b, w, _ = x_w.shape
+    names = PAGED_STATE[kind]
+    st = {k: cache[f"s_{k}"] for k in names}
+    win = {k: cache[f"s_win_{k}"] for k in names}
+    ys = []
+    for i in range(w):
+        y_t, st_new = _run_decode(kind, params, x_w[:, i:i + 1], cfg, st)
+        ok = (i < window_len) & active
+        st = {k: jnp.where(ok.reshape((-1,) + (1,) * (st[k].ndim - 1)),
+                           st_new[k], st[k]) for k in names}
+        for k in names:
+            win[k] = win[k].at[:, i].set(st[k])
+        ys.append(y_t)
+    cache = dict(cache)
+    for k in names:
+        cache[f"s_win_{k}"] = win[k]
+    return jnp.concatenate(ys, axis=1), cache
+
+
+def ssm_commit_window(kind: str, cfg: SSMConfig, cache: dict, *, accepted,
+                      active, window: int):
+    """Commit speculative-verify results: rows with accepted > 0 promote the
+    s_win_* entry at index accepted-1 into the s_* slot checkpoint; rejected
+    or inactive rows are untouched."""
+    names = PAGED_STATE[kind]
+    cache = dict(cache)
+    take = active & (accepted > 0)
+    idx = jnp.clip(accepted - 1, 0, window - 1)
+    for k in names:
+        win = cache[f"s_win_{k}"]
+        ix = idx.reshape((-1,) + (1,) * (win.ndim - 1))
+        sel = jnp.take_along_axis(win, ix, axis=1)[:, 0]
+        msk = take.reshape((-1,) + (1,) * (sel.ndim - 1))
+        cache[f"s_{k}"] = jnp.where(msk, sel, cache[f"s_{k}"])
+    return cache

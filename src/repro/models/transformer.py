@@ -440,81 +440,169 @@ def _layer_decode(lp, cfg: ModelConfig, kind, x_t, lc):
 # Paged caches / chunked prefill / per-slot decode (continuous batching)
 # ---------------------------------------------------------------------------
 
-PAGED_KINDS = ("dense", "moe")
+# Every layer kind serves through the paged engine; what differs is the
+# SHAPE of its per-layer cache, summarized by LAYER_CACHE_KINDS:
+#   paged-kv      — block_k-token K/V pages (+ SLA2 pooled keys / totals)
+#   paged-latent  — MLA's compressed-latent pages (no v_pages; values are
+#                   the c_kv slice of the latent)
+#   state         — recurrent mixers: a degenerate "pool" of one per-slot
+#                   state checkpoint, no page keys at all
+#   paged-kv + state — hybrid blocks compose both, as a nested dict
+# tools/gen_path_matrix.py renders this table into docs/paths.md, so the
+# documented layer_kind column cannot drift from the dispatch below.
+PAGED_KINDS = ("dense", "moe", "mla_dense", "mla_moe", "hybrid",
+               "mlstm", "slstm")
+LAYER_CACHE_KINDS = {
+    "dense": "paged-kv", "moe": "paged-kv",
+    "mla_dense": "paged-latent", "mla_moe": "paged-latent",
+    "hybrid": "paged-kv + state", "mlstm": "state", "slstm": "state",
+}
+# layer kind -> the single key its params/caches live under
+KIND_CACHE_KEY = {"dense": "attn", "moe": "attn", "mla_dense": "mla",
+                  "mla_moe": "mla", "hybrid": "mixer", "mlstm": "core",
+                  "slstm": "core"}
+# kinds whose cache carries per-slot state beyond K/V pages (the engine's
+# prefix cache must snapshot/restore it on hits)
+_STATE_KINDS = ("mla_dense", "mla_moe", "hybrid", "mlstm", "slstm")
 
 
 def supports_paged(cfg: ModelConfig) -> bool:
-    """Paged serving covers the attention layer kinds; recurrent-state mixers
-    (hybrid/mlstm/slstm) and MLA keep the static cache path."""
+    """Paged serving covers every layer kind: attention pages K/V, MLA
+    pages the compressed latent, recurrent mixers checkpoint per-slot
+    state, hybrids compose both."""
     return all(k in PAGED_KINDS
                for k in tuple(cfg.first_kinds) + tuple(cfg.layer_kinds))
 
 
-def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int,
-                      dtype=jnp.bfloat16) -> dict:
-    """Block-paged KV pools, one per layer, sharing one page table (kept by
-    the engine).  Page size == cfg.block_k."""
+def has_slot_state(cfg: ModelConfig) -> bool:
+    """True when any layer keeps per-slot state the serving prefix cache
+    must snapshot on insert and restore on hit — SLA2 linear totals
+    (mechanism 'sla2', incl. MLA) or recurrent-mixer checkpoints."""
+    kinds = tuple(cfg.first_kinds) + tuple(cfg.layer_kinds)
+    return cfg.mechanism == "sla2" or any(k in _STATE_KINDS for k in kinds)
+
+
+def _init_layer_paged(cfg: ModelConfig, kind: str, batch: int,
+                      num_pages: int, window: int, dtype) -> dict:
+    """One layer's paged cache, dispatched on the layer kind."""
+    if kind in ("dense", "moe"):
+        return {"attn": A.init_paged_cache(cfg.attention_config(),
+                                           num_pages, batch, dtype)}
+    if kind in ("mla_dense", "mla_moe"):
+        return {"mla": MLA.init_mla_paged_cache(
+            cfg.mla, num_pages, batch, cfg.block_k, kv_quant=cfg.kv_quant,
+            dtype=dtype)}
+    if kind == "hybrid":
+        return {"mixer": HY.init_hybrid_paged_cache(
+            cfg.attention_config(), cfg.ssm, num_pages, batch,
+            window=window, dtype=dtype)}
+    if kind in ("mlstm", "slstm"):
+        return {"core": SSM.init_paged_state(kind, cfg.ssm, batch, window)}
+    raise ValueError(kind)
+
+
+def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int, *,
+                      window: int = 1, dtype=jnp.bfloat16) -> dict:
+    """Per-layer paged caches sharing one page table (kept by the engine);
+    page size == cfg.block_k.  ``window`` sizes the recurrent mixers'
+    speculative-verify state buffers (draft window W; 1 when the engine
+    never verifies multi-token windows)."""
     if not supports_paged(cfg):
         raise ValueError(f"paged serving unsupported for {cfg.layer_kinds}")
-    acfg = cfg.attention_config()
-    one_layer = lambda: {"attn": A.init_paged_cache(acfg, num_pages, batch,
-                                                    dtype)}
     caches: dict[str, Any] = {}
     if cfg.first_kinds:
-        caches["prefix_layers"] = [one_layer() for _ in cfg.first_kinds]
-    one = {f"l{i}": one_layer() for i in range(len(cfg.layer_kinds))}
+        caches["prefix_layers"] = [
+            _init_layer_paged(cfg, kind, batch, num_pages, window, dtype)
+            for kind in cfg.first_kinds]
+    one = {f"l{i}": _init_layer_paged(cfg, kind, batch, num_pages, window,
+                                      dtype)
+           for i, kind in enumerate(cfg.layer_kinds)}
     caches["groups"] = jax.tree.map(
         lambda a: jnp.tile(a[None], (cfg.n_groups,) + (1,) * a.ndim), one)
     return caches
 
 
-def swap_out_slot(cfg: ModelConfig, caches: dict, page_row, slot) -> dict:
-    """Extract one slot's full paged state across every layer: its K/V (+
-    pooled-key) pages at ``page_row`` and its SLA2 linear totals at ``slot``.
-    The result pytree is what the serving SwapPool keeps on the host."""
+def _walk_layers(cfg: ModelConfig, caches: dict, fn) -> dict:
+    """Apply ``fn(kind, layer_cache, lead)`` over every layer cache (prefix
+    layers at lead=0, scanned groups at lead=1), preserving the layout."""
     out: dict[str, Any] = {}
     if cfg.first_kinds:
         out["prefix_layers"] = [
-            {"attn": A.extract_paged_state(lc["attn"], page_row, slot)}
-            for lc in caches["prefix_layers"]]
+            fn(kind, lc, 0)
+            for kind, lc in zip(cfg.first_kinds, caches["prefix_layers"])]
     out["groups"] = {
-        k: {"attn": A.extract_paged_state(v["attn"], page_row, slot, lead=1)}
-        for k, v in caches["groups"].items()}
+        f"l{i}": fn(kind, caches["groups"][f"l{i}"], 1)
+        for i, kind in enumerate(cfg.layer_kinds)}
     return out
+
+
+def swap_out_slot(cfg: ModelConfig, caches: dict, page_row, slot) -> dict:
+    """Extract one slot's full paged state across every layer: its pages
+    (K/V or latent) at ``page_row`` and its per-slot states (SLA2 linear
+    totals / recurrent checkpoints) at ``slot``.  The result pytree is
+    what the serving SwapPool keeps on the host."""
+    def f(kind, lc, lead):
+        key = KIND_CACHE_KEY[kind]
+        if kind == "hybrid":
+            return {key: {
+                "attn": A.extract_paged_state(lc[key]["attn"], page_row,
+                                              slot, lead),
+                "ssm": A.extract_slot_state(lc[key]["ssm"], slot, lead)}}
+        return {key: A.extract_paged_state(lc[key], page_row, slot, lead)}
+    return _walk_layers(cfg, caches, f)
 
 
 def swap_in_slot(cfg: ModelConfig, caches: dict, page_row, slot,
                  state: dict) -> dict:
     """Write a swapped-out slot state back into the pools at a fresh page
     row / slot id (the physical placement may differ from swap-out)."""
-    caches = dict(caches)
+    def f(kind, pair, lead):
+        lc, st = pair
+        key = KIND_CACHE_KEY[kind]
+        if key not in st:
+            raise ValueError(
+                f"swap state for layer kind {kind!r} must carry {key!r} "
+                f"leaves, got {sorted(st)} — state extracted from a "
+                "different layer kind?")
+        if kind == "hybrid":
+            return {key: {
+                "attn": A.insert_paged_state(lc[key]["attn"], page_row,
+                                             slot, st[key]["attn"], lead),
+                "ssm": A.insert_slot_state(lc[key]["ssm"], slot,
+                                           st[key]["ssm"], lead)}}
+        return {key: A.insert_paged_state(lc[key], page_row, slot, st[key],
+                                          lead)}
+    new = dict(caches)
+    paired = _walk_layers(cfg, _zip_layouts(cfg, caches, state), f)
+    new.update(paired)
+    return new
+
+
+def _zip_layouts(cfg: ModelConfig, a: dict, b: dict) -> dict:
+    """Pair two cache-layout pytrees layer-by-layer for _walk_layers."""
+    out: dict[str, Any] = {}
     if cfg.first_kinds:
-        caches["prefix_layers"] = [
-            {"attn": A.insert_paged_state(lc["attn"], page_row, slot,
-                                          st["attn"])}
-            for lc, st in zip(caches["prefix_layers"],
-                              state["prefix_layers"])]
-    caches["groups"] = {
-        k: {"attn": A.insert_paged_state(
-            v["attn"], page_row, slot, state["groups"][k]["attn"], lead=1)}
-        for k, v in caches["groups"].items()}
-    return caches
+        out["prefix_layers"] = list(zip(a["prefix_layers"],
+                                        b["prefix_layers"]))
+    out["groups"] = {k: (a["groups"][k], b["groups"][k])
+                     for k in a["groups"]}
+    return out
 
 
 def extract_linear_totals(cfg: ModelConfig, caches: dict, slot) -> dict:
-    """Extract every layer's per-slot SLA2 linear totals (h_tot, z_tot) for
-    one slot — O(layers * d^2) bytes, the snapshot a prefix-cache trie node
-    stores so a hit restores the linear branch without re-prefilling.
-    Layers without per-slot state contribute empty dicts (dense models)."""
-    out: dict[str, Any] = {}
-    if cfg.first_kinds:
-        out["prefix_layers"] = [
-            {"attn": A.extract_slot_state(lc["attn"], slot)}
-            for lc in caches["prefix_layers"]]
-    out["groups"] = {
-        k: {"attn": A.extract_slot_state(v["attn"], slot, lead=1)}
-        for k, v in caches["groups"].items()}
-    return out
+    """Extract every layer's per-slot state for one slot — SLA2 linear
+    totals (h_tot, z_tot) and/or recurrent-mixer checkpoints — the
+    snapshot a prefix-cache trie node stores so a hit restores the slot
+    without re-prefilling.  Layers without per-slot state contribute empty
+    dicts (dense non-sla2 models)."""
+    def f(kind, lc, lead):
+        key = KIND_CACHE_KEY[kind]
+        if kind == "hybrid":
+            return {key: {
+                "attn": A.extract_slot_state(lc[key]["attn"], slot, lead),
+                "ssm": A.extract_slot_state(lc[key]["ssm"], slot, lead)}}
+        return {key: A.extract_slot_state(lc[key], slot, lead)}
+    return _walk_layers(cfg, caches, f)
 
 
 def insert_linear_totals(cfg: ModelConfig, caches: dict, slot,
@@ -522,57 +610,71 @@ def insert_linear_totals(cfg: ModelConfig, caches: dict, slot,
     """Write an ``extract_linear_totals`` snapshot back into every layer at
     ``slot`` — the O(1) restore a prefix-cache hit performs before chunked
     prefill resumes at the first uncached page."""
-    caches = dict(caches)
-    if cfg.first_kinds:
-        caches["prefix_layers"] = [
-            {"attn": A.insert_slot_state(lc["attn"], slot, st["attn"])}
-            for lc, st in zip(caches["prefix_layers"],
-                              totals["prefix_layers"])]
-    caches["groups"] = {
-        k: {"attn": A.insert_slot_state(v["attn"], slot,
-                                        totals["groups"][k]["attn"], lead=1)}
-        for k, v in caches["groups"].items()}
-    return caches
+    def f(kind, pair, lead):
+        lc, st = pair
+        key = KIND_CACHE_KEY[kind]
+        if key not in st:
+            raise ValueError(
+                f"slot totals for layer kind {kind!r} must carry {key!r} "
+                f"leaves, got {sorted(st)} — snapshot taken from a "
+                "different layer kind?")
+        if kind == "hybrid":
+            return {key: {
+                "attn": A.insert_slot_state(lc[key]["attn"], slot,
+                                            st[key]["attn"], lead),
+                "ssm": A.insert_slot_state(lc[key]["ssm"], slot,
+                                           st[key]["ssm"], lead)}}
+        return {key: A.insert_slot_state(lc[key], slot, st[key], lead)}
+    new = dict(caches)
+    new.update(_walk_layers(cfg, _zip_layouts(cfg, caches, totals), f))
+    return new
 
 
 def copy_kv_page(cfg: ModelConfig, caches: dict, src, dst) -> dict:
-    """Copy one physical page (K/V + pooled router key) onto another across
-    every layer — the serving engine's copy-on-write primitive for pages
-    shared through the prefix cache."""
-    caches = dict(caches)
-    if cfg.first_kinds:
-        caches["prefix_layers"] = [
-            {"attn": A.copy_paged_page(lc["attn"], src, dst)}
-            for lc in caches["prefix_layers"]]
-    caches["groups"] = {
-        k: {"attn": A.copy_paged_page(v["attn"], src, dst, lead=1)}
-        for k, v in caches["groups"].items()}
-    return caches
+    """Copy one physical page (K/V or latent + pooled router key) onto
+    another across every layer — the serving engine's copy-on-write
+    primitive for pages shared through the prefix cache.  State-only
+    layer caches have no page keys and pass through unchanged."""
+    def f(kind, lc, lead):
+        key = KIND_CACHE_KEY[kind]
+        if kind == "hybrid":
+            return {key: {
+                "attn": A.copy_paged_page(lc[key]["attn"], src, dst, lead),
+                "ssm": lc[key]["ssm"]}}
+        return {key: A.copy_paged_page(lc[key], src, dst, lead)}
+    new = dict(caches)
+    new.update(_walk_layers(cfg, caches, f))
+    return new
 
 
-def _layer_paged(lp, cfg: ModelConfig, kind, x, lc, attn_fn):
-    """Shared dense/moe block body around a paged attention call."""
+def _layer_paged(lp, cfg: ModelConfig, kind, x, lc, mix_fn):
+    """Shared block body around a paged mixer call, dispatched on the layer
+    kind; recurrent-core kinds (mlstm/slstm) have no ln2/FFN half."""
     h = L.rmsnorm(lp["ln1"], x)
-    y, c = attn_fn(lp["attn"], h, lc["attn"])
+    key = KIND_CACHE_KEY[kind]
+    y, c = mix_fn(kind, lp, h, lc[key])
     x = x + y
+    if kind in ("mlstm", "slstm"):
+        return x, {key: c}
     h2 = L.rmsnorm(lp["ln2"], x)
     if kind.endswith("moe"):
         y2, _ = MOE.moe_ffn(lp["moe"], h2, cfg.moe, ep_axis=cfg.ep_axis)
         x = x + y2
     else:
         x = x + L.mlp(lp["mlp"], h2, activation=cfg.mlp_activation)
-    return x, {"attn": c}
+    return x, {key: c}
 
 
-def _paged_stack(params, cfg: ModelConfig, x, caches, attn_fn):
-    """Run the layer stack (prefix layers + scanned groups) with ``attn_fn``
-    as the attention body; returns (final hidden, new caches)."""
+def _paged_stack(params, cfg: ModelConfig, x, caches, mix_fn):
+    """Run the layer stack (prefix layers + scanned groups) with ``mix_fn``
+    (kind, layer_params, h, sub_cache) -> (y, sub_cache) as the mixer
+    body; returns (final hidden, new caches)."""
     caches = dict(caches)
     if cfg.first_kinds:
         new_pref = []
         for i, kind in enumerate(cfg.first_kinds):
             x, lc = _layer_paged(params["prefix_layers"][i], cfg, kind, x,
-                                 caches["prefix_layers"][i], attn_fn)
+                                 caches["prefix_layers"][i], mix_fn)
             new_pref.append(lc)
         caches["prefix_layers"] = new_pref
 
@@ -581,7 +683,7 @@ def _paged_stack(params, cfg: ModelConfig, x, caches, attn_fn):
         new_gc = {}
         for i, kind in enumerate(cfg.layer_kinds):
             x, lc = _layer_paged(gp[f"l{i}"], cfg, kind, x, gc[f"l{i}"],
-                                 attn_fn)
+                                 mix_fn)
             new_gc[f"l{i}"] = lc
         return x, new_gc
 
@@ -599,12 +701,26 @@ def prefill_chunk(params: dict, cfg: ModelConfig, tokens, caches, *,
     if cfg.embed_scale:
         x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
 
-    def attn_fn(lp, h, lc):
-        return A.chunk_prefill_paged(lp, acfg, h, lc, page_row=page_row,
+    def mix_fn(kind, lp, h, lc):
+        if kind in ("dense", "moe"):
+            return A.chunk_prefill_paged(
+                lp["attn"], acfg, h, lc, page_row=page_row, offset=offset,
+                chunk_len=chunk_len, slot=slot)
+        if kind in ("mla_dense", "mla_moe"):
+            return MLA.mla_prefill_chunk_paged(
+                lp["mla"], h, lc, mcfg=cfg.mla, num_heads=cfg.num_heads,
+                block_k=cfg.block_k, kv_quant=cfg.kv_quant,
+                page_row=page_row, offset=offset, chunk_len=chunk_len,
+                slot=slot)
+        if kind == "hybrid":
+            return HY.hybrid_prefill_chunk_paged(
+                lp["mixer"], acfg, cfg.ssm, h, lc, page_row=page_row,
+                offset=offset, chunk_len=chunk_len, slot=slot)
+        return SSM.ssm_prefill_paged(kind, lp["core"], cfg.ssm, h, lc,
                                      offset=offset, chunk_len=chunk_len,
                                      slot=slot)
 
-    x, caches = _paged_stack(params, cfg, x, caches, attn_fn)
+    x, caches = _paged_stack(params, cfg, x, caches, mix_fn)
     last = jax.lax.dynamic_slice(x, (0, chunk_len - 1, 0),
                                  (1, 1, x.shape[-1]))
     return logits_from_hidden(params, cfg, last)[:, 0], caches
@@ -620,11 +736,25 @@ def decode_paged(params: dict, cfg: ModelConfig, token_t, caches, *,
     if cfg.embed_scale:
         x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
 
-    def attn_fn(lp, h, lc):
-        return A.decode_step_paged(lp, acfg, h, lc, page_table=page_table,
-                                   lengths=lengths, active=active)
+    def mix_fn(kind, lp, h, lc):
+        if kind in ("dense", "moe"):
+            return A.decode_step_paged(lp["attn"], acfg, h, lc,
+                                       page_table=page_table,
+                                       lengths=lengths, active=active)
+        if kind in ("mla_dense", "mla_moe"):
+            return MLA.mla_decode_step_paged(
+                lp["mla"], h, lc, mcfg=cfg.mla, num_heads=cfg.num_heads,
+                k_frac=cfg.k_frac, block_k=cfg.block_k,
+                kv_quant=cfg.kv_quant, page_table=page_table,
+                lengths=lengths, active=active)
+        if kind == "hybrid":
+            return HY.hybrid_decode_step_paged(
+                lp["mixer"], acfg, cfg.ssm, h, lc, page_table=page_table,
+                lengths=lengths, active=active)
+        return SSM.ssm_decode_paged(kind, lp["core"], cfg.ssm, h, lc,
+                                    active=active)
 
-    x, caches = _paged_stack(params, cfg, x, caches, attn_fn)
+    x, caches = _paged_stack(params, cfg, x, caches, mix_fn)
     return logits_from_hidden(params, cfg, x)[:, 0], caches
 
 
@@ -633,48 +763,85 @@ def decode_verify(params: dict, cfg: ModelConfig, tokens_w, caches, *,
     """Speculative verify: decode a W-token window for the whole slot batch
     in ONE pass.  tokens_w: (B, W) int32 — row 0 is the last accepted
     token, rows 1.. the draft; window_len: (B,) valid rows per slot.
-    Returns (logits (B, W, V), caches).  K/V pages are written for the
-    whole window; SLA2 block-state commits are deferred to
-    ``commit_window`` once host-side acceptance is decided."""
+    Returns (logits (B, W, V), caches).  K/V (or latent) pages are written
+    for the whole window; block-state and recurrent-checkpoint commits are
+    deferred to ``commit_window`` once host-side acceptance is decided."""
     acfg = cfg.attention_config()
     x = L.embed(params["embed"], tokens_w).astype(cfg.param_dtype)
     if cfg.embed_scale:
         x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
 
-    def attn_fn(lp, h, lc):
-        return A.decode_window_paged(lp, acfg, h, lc, page_table=page_table,
-                                     lengths=lengths, active=active,
-                                     window_len=window_len)
+    def mix_fn(kind, lp, h, lc):
+        if kind in ("dense", "moe"):
+            return A.decode_window_paged(lp["attn"], acfg, h, lc,
+                                         page_table=page_table,
+                                         lengths=lengths, active=active,
+                                         window_len=window_len)
+        if kind in ("mla_dense", "mla_moe"):
+            return MLA.mla_decode_window_paged(
+                lp["mla"], h, lc, mcfg=cfg.mla, num_heads=cfg.num_heads,
+                k_frac=cfg.k_frac, block_k=cfg.block_k,
+                kv_quant=cfg.kv_quant, page_table=page_table,
+                lengths=lengths, active=active, window_len=window_len)
+        if kind == "hybrid":
+            return HY.hybrid_decode_window_paged(
+                lp["mixer"], acfg, cfg.ssm, h, lc, page_table=page_table,
+                lengths=lengths, active=active, window_len=window_len)
+        return SSM.ssm_decode_window_paged(kind, lp["core"], cfg.ssm, h,
+                                           lc, active=active,
+                                           window_len=window_len)
 
-    x, caches = _paged_stack(params, cfg, x, caches, attn_fn)
+    x, caches = _paged_stack(params, cfg, x, caches, mix_fn)
     return logits_from_hidden(params, cfg, x), caches
 
 
 def commit_window(cfg: ModelConfig, caches, page_table, lengths, accepted,
                   active, window: int):
     """Commit the accepted prefix of a verify window into every layer's
-    SLA2 block state (pooled router keys + linear totals).  ``window`` is
-    the static window size the verify ran with."""
+    block state — SLA2 pooled router keys + linear totals for attention /
+    MLA layers, accepted-state promotion for recurrent mixers.  ``window``
+    is the static window size the verify ran with."""
     acfg = cfg.attention_config()
 
-    def upd(lc):
-        return {"attn": A.commit_paged_window(
-            acfg, lc["attn"], page_table=page_table, lengths=lengths,
-            accepted=accepted, active=active, window=window)}
+    def upd(kind, lc):
+        key = KIND_CACHE_KEY[kind]
+        if kind in ("dense", "moe"):
+            return {key: A.commit_paged_window(
+                acfg, lc[key], page_table=page_table, lengths=lengths,
+                accepted=accepted, active=active, window=window)}
+        if kind in ("mla_dense", "mla_moe"):
+            return {key: MLA.mla_commit_window(
+                lc[key], mcfg=cfg.mla, block_k=cfg.block_k,
+                kv_quant=cfg.kv_quant, page_table=page_table,
+                lengths=lengths, accepted=accepted, active=active,
+                window=window)}
+        if kind == "hybrid":
+            return {key: HY.hybrid_commit_window(
+                acfg, cfg.ssm, lc[key], page_table=page_table,
+                lengths=lengths, accepted=accepted, active=active,
+                window=window)}
+        return {key: SSM.ssm_commit_window(
+            kind, cfg.ssm, lc[key], accepted=accepted, active=active,
+            window=window)}
 
     caches = dict(caches)
     if cfg.first_kinds:
-        caches["prefix_layers"] = [upd(lc) for lc in
-                                   caches["prefix_layers"]]
-    caches["groups"] = {k: jax.vmap(upd)(v)
-                        for k, v in caches["groups"].items()}
+        caches["prefix_layers"] = [
+            upd(kind, lc) for kind, lc in zip(cfg.first_kinds,
+                                              caches["prefix_layers"])]
+    caches["groups"] = {
+        f"l{i}": jax.vmap(functools.partial(upd, kind))(
+            caches["groups"][f"l{i}"])
+        for i, kind in enumerate(cfg.layer_kinds)}
     return caches
 
 
 def draft_init(cfg: ModelConfig, caches, page_table, lengths, active):
     """Per-layer linear draft states (running phi(k)·v totals over the full
     cached prefix) for the speculative drafter — one {"h", "z"} pytree per
-    attention layer, mirroring the cache layout."""
+    attention layer, mirroring the cache layout.  Attention-only stacks
+    (dense/moe kinds): the linear drafter has no analogue for MLA latents
+    or recurrent checkpoints, so api.py only wires it up for those."""
     acfg = cfg.attention_config()
 
     def f(lc):
@@ -699,11 +866,11 @@ def draft_step(params: dict, cfg: ModelConfig, token_t, states, *,
     if cfg.embed_scale:
         x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
 
-    def attn_fn(lp, h, lc):
-        return A.linear_draft_attention(lp, acfg, h, lc,
+    def mix_fn(kind, lp, h, lc):
+        return A.linear_draft_attention(lp["attn"], acfg, h, lc,
                                         positions=positions, active=active)
 
-    x, states = _paged_stack(params, cfg, x, states, attn_fn)
+    x, states = _paged_stack(params, cfg, x, states, mix_fn)
     return logits_from_hidden(params, cfg, x)[:, 0], states
 
 

@@ -30,11 +30,15 @@ for the full state machine.  On CPU this serves small models end-to-end
 (examples/serve_lm.py); on TPU the same jitted step functions shard per
 distributed/sharding.cache_specs (page-axis sharded pools).
 
-``StaticWaveEngine`` keeps the old static generation-wave behaviour (all
-slots join at sequence start, drain before refill) both as the fallback for
-architectures without a paged path (recurrent mixers, MLA) and as the
-baseline the mixed-length benchmark in benchmarks/fig5_e2e_latency.py
-measures against.
+Paged serving covers every LM layer kind: attention layers page K/V, MLA
+layers page their COMPRESSED LATENT (the c_kv+k_rope vector per token —
+``launch/roofline.mla_latent_page_bytes`` vs the dense equivalent),
+recurrent mixers (mamba/mlstm/slstm, incl. Hymba hybrid blocks) ride the
+same swap/recompute plumbing with per-slot state checkpoints instead of
+pages.  ``StaticWaveEngine`` is RETIRED from the hot path: nothing in the
+serving stack constructs it any more; it survives only as the
+generation-wave baseline the mixed-length benchmark in
+benchmarks/fig5_e2e_latency.py measures against.
 """
 from __future__ import annotations
 
@@ -87,6 +91,13 @@ class EngineConfig:
     # int8/fp8, so the same HBM budget holds ~2x the pages/slots (see
     # launch/roofline.kv_page_bytes).  None keeps the model config.
     kv_quant: Optional[str] = None
+    # unquantized page-pool element dtype (e.g. 'float32'); None keeps the
+    # model default (bfloat16).  'float32' makes paged prefill read back
+    # EXACTLY the values the static oracle attends, so engine outputs are
+    # token-identical to generate_sequential even for MoE stacks whose
+    # expert gates amplify bf16 page rounding into argmax flips (the
+    # cross-family identity tests rely on this; ignored under kv_quant)
+    page_dtype: Optional[str] = None
     # 'optimistic' admits against actual outstanding pages and preempts the
     # youngest slot on pool exhaustion (swap to host, else recompute);
     # 'conservative' keeps the legacy worst-case page reservation (never
@@ -459,7 +470,8 @@ class ServeEngine:
         if model.decode_paged is None:
             raise ValueError(
                 f"{model.kind}/{getattr(model.cfg, 'layer_kinds', ())} has no "
-                "paged serving path; use StaticWaveEngine")
+                "paged serving path (LM stacks of dense/moe/mla_*/hybrid/"
+                "mlstm/slstm layers all do)")
         if ecfg.shard not in ("auto", "off"):
             raise ValueError(f"unknown shard mode {ecfg.shard!r}")
         mesh = ecfg.mesh if ecfg.shard == "auto" else None
@@ -528,13 +540,16 @@ class ServeEngine:
             # every mesh device is one simulated host, alive at t=0
             for h in range(len(list(mesh.devices.flat))):
                 self.monitor.beat(h, now=0.0)
-        self._sla2 = getattr(model.cfg, "mechanism", None) == "sla2"
+        # True when any layer keeps per-slot state (SLA2 linear totals,
+        # MLA totals, recurrent checkpoints) the prefix cache must
+        # snapshot at chunk boundaries and restore on hits
+        self._slot_state = bool(getattr(model, "has_slot_state", False))
         self._pcache = None
         if ecfg.prefix_cache:
             from repro.serve.prefix_cache import PrefixCache
             self._pcache = PrefixCache(self.page_size,
                                        self.chunk // self.page_size,
-                                       need_totals=self._sla2)
+                                       need_totals=self._slot_state)
         self._slots: dict[int, _Slot] = {}          # slot -> state
         self._prefill_order: list[int] = []         # FCFS chunked prefill
         self._page_table = np.zeros((ecfg.max_slots, self.max_pages),
@@ -633,14 +648,25 @@ class ServeEngine:
         poll its truthiness to know whether work remains)."""
         return self.scheduler.waiting
 
+    def _pool_dtype_kw(self) -> dict:
+        """Extra init_paged_caches kwargs for cfg.page_dtype (exact-identity
+        pools); empty when unset so models without a dtype knob still work."""
+        if self.cfg.page_dtype is None:
+            return {}
+        return {"dtype": jnp.dtype(self.cfg.page_dtype)}
+
     def load(self, params):
         """Install model params and allocate the paged cache pools.  With
         a mesh, both leave the host already placed: params model-axis only
         (serving_param_shardings), pool + per-slot totals per cache_specs
         (page axis over all mesh axes, slot axis over DP)."""
         self.params = params
+        # recurrent-mixer caches carry a verify-window state buffer sized
+        # by the speculative draft window (1 when decode is single-token)
+        window = self.cfg.draft_len + 1 if self._spec else 1
         self.caches = self.model.init_paged_caches(
-            self.cfg.max_slots, self.allocator.num_pages)
+            self.cfg.max_slots, self.allocator.num_pages, window=window,
+            **self._pool_dtype_kw())
         if self.mesh is not None:
             self.params, self.caches = self._place_on_mesh(params,
                                                            self.caches)
@@ -750,7 +776,7 @@ class ServeEngine:
             from repro.serve.prefix_cache import PrefixCache
             self._pcache = PrefixCache(self.page_size,
                                        self.chunk // self.page_size,
-                                       need_totals=self._sla2)
+                                       need_totals=self._slot_state)
         survivors = [d for i, d in enumerate(devs) if i not in dead_set]
         assert len(self.mesh.axis_names) == 2, \
             "engine fault resharding expects a (data, model) host mesh"
@@ -770,8 +796,10 @@ class ServeEngine:
         # fresh pool on the shrunk mesh; page bytes are unchanged so the
         # SwapPool keeps its byte budget (and its swapped-out states)
         self.allocator = PageAllocator(num_pages)
-        self.caches = self.model.init_paged_caches(self.cfg.max_slots,
-                                                   num_pages)
+        window = self.cfg.draft_len + 1 if self._spec else 1
+        self.caches = self.model.init_paged_caches(
+            self.cfg.max_slots, num_pages, window=window,
+            **self._pool_dtype_kw())
         if self.params is not None:
             self.params, self.caches = self._place_on_mesh(self.params,
                                                            self.caches)
@@ -1025,7 +1053,7 @@ class ServeEngine:
         s.pinned_node = node
         s.pos = pos
         self._lengths[slot] = pos
-        if self._sla2:
+        if self._slot_state:
             totals = self._pcache.totals_at(node, pos // self.page_size)
             self.caches = self._insert_totals_fn(
                 self.caches, jnp.asarray(slot, jnp.int32), totals)
@@ -1131,7 +1159,7 @@ class ServeEngine:
             s.snaps[s.pos // self.page_size] = (
                 jax.device_get(self._extract_totals_fn(
                     self.caches, jnp.asarray(slot, jnp.int32)))
-                if self._sla2 else None)
+                if self._slot_state else None)
         if s.pos == len(s.tokens):          # prompt done: first token
             if self._pcache is not None:
                 self._insert_prefix(slot, s)
@@ -1457,8 +1485,13 @@ class StaticWaveEngine:
     visible to attention, so outputs depend on wave composition) to a common
     length, and drains the wave before admitting again.  A long prompt
     therefore stalls its whole wave — the regime ServeEngine's per-slot
-    offsets remove.  Still used for model families without a paged cache
-    path (recurrent mixers, MLA)."""
+    offsets remove.
+
+    .. deprecated:: every LM family (dense/moe attention, MLA latent
+       pages, recurrent mixers, hybrids) now serves through ServeEngine;
+       no hot path constructs this class.  It is kept ONLY as the
+       generation-wave baseline benchmarks/fig5_e2e_latency.py measures
+       paged serving against."""
 
     def __init__(self, model, ecfg: EngineConfig):
         self.model = model
@@ -1578,12 +1611,17 @@ class StaticWaveEngine:
 
 def generate_sequential(model, params, prompt: np.ndarray, *,
                         max_new_tokens: int, max_len: int,
-                        eos_id: Optional[int] = None) -> list[int]:
+                        eos_id: Optional[int] = None,
+                        cache_dtype=None) -> list[int]:
     """Unbatched greedy decode through the plain (non-paged) cache path:
     one model.prefill over the whole prompt, then model.decode one token at
-    a time.  The continuous engine must match this token for token."""
+    a time.  The continuous engine must match this token for token.
+    ``cache_dtype`` overrides the static cache element dtype — pass
+    'float32' alongside EngineConfig.page_dtype='float32' so oracle and
+    engine store identical values on both sides of the comparison."""
     prefill, decode = _static_fns(model)
-    caches = model.init_caches(1, max_len)
+    kw = {} if cache_dtype is None else {"dtype": jnp.dtype(cache_dtype)}
+    caches = model.init_caches(1, max_len, **kw)
     logits, caches = prefill(
         params, {"tokens": jnp.asarray(prompt[None])}, caches)
     out = [int(np.argmax(np.asarray(logits)[0]))]

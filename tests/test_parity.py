@@ -440,3 +440,116 @@ def test_sliding_window_fused_prefill_sla2_state():
             np.asarray(caches["fused"][key], np.float32),
             np.asarray(caches["gather"][key], np.float32), atol=1e-5,
             err_msg=key)
+
+
+# ===========================================================================
+# Cross-family slot swap round-trips (MLA latent pages, recurrent state
+# checkpoints, hybrid composites) + pool misuse diagnostics
+# ===========================================================================
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.models.api import build_model
+from repro.serve.engine import PageAllocator
+
+
+def _filled_paged_caches(arch, seed=0, batch=2, num_pages=10):
+    """A family's paged cache pytree with every leaf randomized — swap
+    round-trips must move the bits verbatim, so arbitrary contents are the
+    strictest fixture (no prefill needed)."""
+    cfg = get_smoke_config(arch)
+    caches = T.init_paged_caches(cfg, batch, num_pages)
+    leaves, td = jax.tree.flatten(caches)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    rand = [jax.random.normal(k, l.shape).astype(l.dtype)
+            if jnp.issubdtype(l.dtype, jnp.floating)
+            else jax.random.randint(k, l.shape, 0, 7).astype(l.dtype)
+            for k, l in zip(keys, leaves)]
+    return cfg, jax.tree.unflatten(td, rand)
+
+
+@pytest.mark.parametrize("arch", ["deepseek_v2_lite", "xlstm_350m",
+                                  "hymba_1_5b"])
+def test_family_swap_roundtrip_bit_exact(arch):
+    """swap_out -> swap_in at a DIFFERENT page row and slot -> swap_out
+    again must reproduce the state bit-for-bit for every cache family:
+    MLA latent pages + pooled keys + totals (deepseek), pure recurrent
+    checkpoints (xlstm), paged K/V + SSM state composites (hymba)."""
+    cfg, caches = _filled_paged_caches(arch)
+    row_a = jnp.asarray([1, 2, 3], jnp.int32)
+    row_b = jnp.asarray([7, 8, 9], jnp.int32)
+    st = T.swap_out_slot(cfg, caches, row_a, jnp.asarray(0, jnp.int32))
+    moved = T.swap_in_slot(cfg, caches, row_b, jnp.asarray(1, jnp.int32),
+                           st)
+    st2 = T.swap_out_slot(cfg, moved, row_b, jnp.asarray(1, jnp.int32))
+    la, lb = jax.tree.leaves(st), jax.tree.leaves(st2)
+    assert len(la) == len(lb) and la, arch
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the donor slot/pages must be untouched by the insert elsewhere
+    st0 = T.swap_out_slot(cfg, moved, row_a, jnp.asarray(0, jnp.int32))
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch", ["deepseek_v2_lite", "xlstm_350m",
+                                  "hymba_1_5b"])
+def test_family_totals_roundtrip_bit_exact(arch):
+    """Prefix-cache snapshot round-trip: extract_linear_totals ->
+    insert_linear_totals into another slot -> extract again, bit-exact,
+    for per-slot SLA2/MLA totals and recurrent checkpoints alike."""
+    cfg, caches = _filled_paged_caches(arch, seed=1)
+    st = T.extract_linear_totals(cfg, caches, jnp.asarray(0, jnp.int32))
+    moved = T.insert_linear_totals(cfg, caches, jnp.asarray(1, jnp.int32),
+                                   st)
+    st2 = T.extract_linear_totals(cfg, moved, jnp.asarray(1, jnp.int32))
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _rekey(state, new_key):
+    """Relabel every layer's cache key — simulates a snapshot taken from a
+    different layer kind."""
+    def one(layer):
+        (k,) = layer.keys()
+        return {new_key: layer[k]}
+    out = {"groups": {k: one(v) for k, v in state["groups"].items()}}
+    if "prefix_layers" in state:
+        out["prefix_layers"] = [one(s) for s in state["prefix_layers"]]
+    return out
+
+
+def test_swap_insert_into_wrong_kind_raises():
+    """Inserting swap state extracted from an attention-layer layout into
+    an MLA stack must fail loudly, not silently misplace leaves."""
+    cfg, caches = _filled_paged_caches("deepseek_v2_lite")
+    row = jnp.asarray([1, 2, 3], jnp.int32)
+    st = T.swap_out_slot(cfg, caches, row, jnp.asarray(0, jnp.int32))
+    bad = _rekey(st, "attn")
+    with pytest.raises(ValueError, match="different layer kind"):
+        T.swap_in_slot(cfg, caches, row, jnp.asarray(0, jnp.int32), bad)
+
+
+def test_totals_insert_into_wrong_kind_raises():
+    """Same guard on the prefix-cache totals path, for a recurrent
+    stack."""
+    cfg, caches = _filled_paged_caches("xlstm_350m")
+    st = T.extract_linear_totals(cfg, caches, jnp.asarray(0, jnp.int32))
+    bad = _rekey(st, "attn")
+    with pytest.raises(ValueError, match="different layer kind"):
+        T.insert_linear_totals(cfg, caches, jnp.asarray(0, jnp.int32), bad)
+
+
+def test_page_allocator_double_free_raises():
+    """A second free of the same physical page must raise, not silently
+    hand one page to two slots."""
+    alloc = PageAllocator(6)
+    p = alloc.alloc()
+    q = alloc.alloc()
+    alloc.free([p])
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.free([p])
+    alloc.incref(q)
+    alloc.free([q, q])                  # two refs -> two frees OK
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.free([q])

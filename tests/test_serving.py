@@ -89,12 +89,20 @@ def test_engine_rejects_oversized_and_unsupported(qwen3_smoke, qwen3_params):
     with pytest.raises(ValueError):
         eng.submit(Request(uid=0, prompt=np.arange(60, dtype=np.int32),
                            max_new_tokens=16))
+    # every LM layer family carries a paged path now (MLA latent pages,
+    # recurrent state checkpoints, hybrid composites) ...
     from repro.configs import get_smoke_config
     from repro.models.api import build_model
-    hybrid = build_model(get_smoke_config("hymba_1_5b"))
-    assert hybrid.decode_paged is None
+    for arch in ("deepseek_v2_lite", "xlstm_350m", "hymba_1_5b"):
+        fam = build_model(get_smoke_config(arch))
+        assert fam.decode_paged is not None, arch
+        ServeEngine(fam, EngineConfig())
+    # ... so the only stack the paged engine rejects is a non-LM one
+    from repro.models import dit as D
+    dit = build_model(D.DiTConfig())
+    assert dit.decode_paged is None
     with pytest.raises(ValueError):
-        ServeEngine(hybrid, EngineConfig())
+        ServeEngine(dit, EngineConfig())
 
 
 def test_eos_frees_slot_early(full_attn_smoke, make_prompts):
@@ -114,8 +122,10 @@ def test_eos_frees_slot_early(full_attn_smoke, make_prompts):
 
 
 def test_static_wave_engine_still_serves(qwen3_smoke, qwen3_params):
-    """Legacy wave engine remains functional (fallback for models without a
-    paged path, and the benchmark baseline)."""
+    """The retired wave engine stays importable and functional as the
+    benchmark BASELINE only (benchmarks/fig12_serving.py) — no serving hot
+    path constructs it; every LM family goes through the paged
+    ServeEngine."""
     cfg, model = qwen3_smoke
     eng = StaticWaveEngine(model, EngineConfig(max_slots=2, max_len=128))
     eng.load(qwen3_params)

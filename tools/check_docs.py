@@ -107,7 +107,10 @@ DOCSTRING_DIRS = (os.path.join("src", "repro", "serve"),
 DOCSTRING_FILES = (os.path.join("src", "repro", "models", "attention.py"),
                    os.path.join("src", "repro", "models", "transformer.py"),
                    os.path.join("src", "repro", "models", "api.py"),
-                   os.path.join("src", "repro", "models", "dit.py"))
+                   os.path.join("src", "repro", "models", "dit.py"),
+                   os.path.join("src", "repro", "models", "mla.py"),
+                   os.path.join("src", "repro", "models", "ssm.py"),
+                   os.path.join("src", "repro", "models", "hybrid.py"))
 
 
 def _docstring_targets() -> list[str]:

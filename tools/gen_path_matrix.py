@@ -8,9 +8,10 @@ The matrix is DERIVED, not hand-written, so it cannot drift from the code:
     gather oracle per cell;
   * ``models/attention.AUTO_GATHER_BACKENDS`` + ``resolve_paged_impl`` —
     the ``paged_impl='auto'`` resolution rule;
-  * ``models/transformer.PAGED_KINDS`` / ``supports_paged`` — which layer
-    kinds have a paged path at all (the rest serve through the
-    ``StaticWaveEngine`` fallback);
+  * ``models/transformer.PAGED_KINDS`` / ``LAYER_CACHE_KINDS`` /
+    ``KIND_CACHE_KEY`` — every LM layer kind's paged cache kind (K/V
+    pages, MLA latent pages, recurrent state checkpoints, hybrid
+    composites) and the cache key its leaves live under;
   * ``serve/engine.EngineConfig`` — which speculative drafters exist and
     what they require (probed by constructing the drafters' gates);
   * ``models/dit.MECHANISM_ATTENTION`` + ``serve/diffusion.ATTN_IMPLS`` —
@@ -128,23 +129,28 @@ def generate() -> str:
         "",
     ]
 
-    # --- layer kinds: paged path vs StaticWaveEngine fallback -----------
+    # --- layer kinds: per-kind paged cache geometry ---------------------
     lines += [
-        "### Layer kinds (engine selection)",
+        "### Layer kinds (paged cache geometry)",
         "",
-        "Derived from `models/transformer.supports_paged`: a stack is "
-        "paged-servable only when every layer kind is. Non-paged stacks "
-        "fall back to `StaticWaveEngine` (static cache, generation "
-        "waves).",
+        "Derived from `models/transformer.LAYER_CACHE_KINDS` / "
+        "`KIND_CACHE_KEY` / `PAGED_KINDS`: every LM layer kind serves "
+        "through the paged `ServeEngine` — attention layers page K/V, "
+        "MLA layers page the compressed latent, recurrent mixers keep "
+        "per-slot state checkpoints behind the same swap/prefix-cache "
+        "plumbing, hybrids compose both. `StaticWaveEngine` is retired "
+        "to a benchmark baseline (`benchmarks/fig5_e2e_latency.py`, "
+        "`fig6_paged_decode.py`, `fig9_dense_paged.py`).",
         "",
-        "| layer kind | paged path | engine |",
-        "|---|---|---|",
+        "| layer kind | paged cache kind | cache key | per-slot state |",
+        "|---|---|---|---|",
     ]
     for kind in LAYER_KINDS:
-        ok = kind in T.PAGED_KINDS
+        assert kind in T.PAGED_KINDS, f"{kind} lost its paged path"
+        state = "yes" if kind in T._STATE_KINDS else "sla2 totals only"
         lines.append(
-            f"| `{kind}` | {'yes' if ok else 'no'} | "
-            f"{'`ServeEngine`' if ok else '`StaticWaveEngine` fallback'} |")
+            f"| `{kind}` | {T.LAYER_CACHE_KINDS[kind]} | "
+            f"`{T.KIND_CACHE_KEY[kind]}` | {state} |")
 
     # --- speculative drafters -------------------------------------------
     # import the drafters so a rename/removal breaks --check loudly
